@@ -1,0 +1,201 @@
+"""Kernel benchmarks mirroring the paper's tables (CPU-only methodology).
+
+No TPU exists in this container, so kernel *time* cannot be measured.
+Instead each table reports, per configuration:
+
+* ``ours bytes``   -- structural HBM traffic of the Pallas kernel, derived
+  from its grid x BlockSpec arithmetic (benchmarks/analytic.py).  This is
+  the quantity the paper's design arguments fix (scan == 2n, etc.).
+* ``xla bytes``    -- "bytes accessed" of the portable XLA fallback compiled
+  for this host (the stand-in for the vendor-baseline comparison).
+* ``ours v5e``     -- roofline-modeled kernel time on TPU v5e
+  (bytes / 819 GB/s; all these kernels are bandwidth-bound).
+* ``paper A40``    -- the paper's measured kernel time (KernelForge / CUB),
+  where that table row exists, with the A40->v5e bandwidth scaling shown.
+
+Correctness of every configuration is asserted against ref.py in
+interpret mode (small sizes) as part of the bench run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import analytic as AN
+from benchmarks import hardware as HW
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.kernels import ref
+
+POLICY = ki.resolve_tuning("tpu_v5e")
+
+
+def _us(s):
+    return f"{s*1e6:10.1f}us"
+
+
+def _check(got, want, tol=1e-3):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol, atol=tol)
+
+
+def bench_scan():
+    print("\n== Scan (paper Table IV analogue) ==")
+    print(f"{'n':>10} {'dtype':>8} {'ours bytes':>12} {'xla bytes':>12} "
+          f"{'ours v5e':>12} {'paper KF A40':>13} {'paper CUB A40':>14} "
+          f"{'A40->v5e scale':>14}")
+    # correctness spot-check (interpret) at small n
+    x = jax.random.normal(jax.random.PRNGKey(0), (3000,), jnp.float32)
+    _check(forge.scan(alg.ADD, x, backend="pallas-interpret"),
+           ref.ref_scan(alg.ADD, x), 1e-3)
+    for n in [10**6, 10**7, 10**8]:
+        for dtype, paper, paper_cub in [
+                (jnp.float32, HW.PAPER_SCAN_F32, HW.PAPER_SCAN_CUB_F32),
+                (jnp.float64, HW.PAPER_SCAN_F64, None)]:
+            ours = AN.scan_bytes(n, [dtype], POLICY)
+            spec = jax.ShapeDtypeStruct((n,), dtype)
+            xla = AN.xla_baseline_cost(jnp.cumsum, spec)["bytes"]
+            t = HW.modeled_time_s(ours)
+            p = paper.get(n)
+            pc = paper_cub.get(n) if paper_cub else None
+            scale = (p * 1e-6) * (HW.A40_BW / HW.HBM_BW) if p else None
+            print(f"{n:>10} {np.dtype(dtype).name:>8} {ours:>12,} "
+                  f"{int(xla):>12,} {_us(t)} "
+                  f"{_us(p*1e-6) if p else '    --':>13} "
+                  f"{_us(pc*1e-6) if pc else '    --':>14} "
+                  f"{_us(scale) if scale else '    --':>14}")
+    print("note: ours==2n x itemsize (+tile padding): the paper's single-pass"
+          " bound; XLA cumsum shows the multi-pass/naive bytes on this host.")
+
+
+def bench_mapreduce():
+    print("\n== Mapreduce (paper Table III analogue) ==")
+    print(f"{'n':>10} {'type':>9} {'ours bytes':>12} {'xla bytes':>12} "
+          f"{'ours v5e':>12} {'paper KF A40':>13} {'paper CUB A40':>14}")
+    u = jax.random.randint(jax.random.PRNGKey(1), (4096,), 0, 255, jnp.int32
+                           ).astype(jnp.uint8)
+    _check(forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u,
+                           backend="pallas-interpret"),
+           ref.ref_mapreduce(alg.unitfloat8_decode, alg.ADD, u), 1e-2)
+    for n in [10**6, 10**7, 10**8]:
+        rows = [
+            ("f32", jnp.float32, jnp.float32, HW.PAPER_MR_F32[n],
+             HW.PAPER_MR_CUB_F32[n]),
+            ("uf8->f32", jnp.uint8, jnp.float32, HW.PAPER_MR_UF8[n],
+             HW.PAPER_MR_CUB_U8[n]),
+        ]
+        for name, din, dout, p, pc in rows:
+            ours = AN.mapreduce_bytes(n, [din], [dout], POLICY)
+            spec = jax.ShapeDtypeStruct((n,), din)
+            xla = AN.xla_baseline_cost(
+                lambda v: jnp.sum(v.astype(jnp.float32)), spec)["bytes"]
+            t = HW.modeled_time_s(ours)
+            print(f"{n:>10} {name:>9} {ours:>12,} {int(xla):>12,} "
+                  f"{_us(t)} {_us(p*1e-6):>13} {_us(pc*1e-6):>14}")
+    print("note: UnitFloat8 promotion is free at the bandwidth limit -- the "
+          "uint8 rows move 4x fewer bytes than f32 at equal n (paper §VII-B).")
+
+
+def bench_matvec():
+    print("\n== MatVec / VecMat (paper Tables V & VI analogue) ==")
+    print(f"{'n':>9} {'p':>9} {'orient':>7} {'ours bytes':>14} "
+          f"{'xla bytes':>14} {'ours v5e':>12} {'xla v5e':>12}")
+    A = jax.random.normal(jax.random.PRNGKey(2), (257, 129), jnp.float32)
+    xv = jax.random.normal(jax.random.PRNGKey(3), (257,), jnp.float32)
+    _check(forge.semiring_matvec(alg.ARITHMETIC, A, xv,
+                                 backend="pallas-interpret"),
+           ref.ref_matvec(alg.ARITHMETIC.f, alg.ADD, A, xv), 1e-3)
+    shapes = [(10**3, 10**4), (10**4, 10**3), (10, 10**6), (10**6, 10),
+              (10**4, 10**4)]
+    for n, p in shapes:
+        for orient in ("matvec", "vecmat"):
+            if orient == "matvec":
+                ours = AN.matvec_bytes(n, p, jnp.float32, policy=POLICY)
+                sa = jax.ShapeDtypeStruct((n, p), jnp.float32)
+                sx = jax.ShapeDtypeStruct((n,), jnp.float32)
+                xla = AN.xla_baseline_cost(
+                    lambda a, v: jnp.einsum("np,n->p", a, v), sa, sx)["bytes"]
+            else:
+                ours = AN.vecmat_bytes(n, p, jnp.float32, policy=POLICY)
+                sa = jax.ShapeDtypeStruct((n, p), jnp.float32)
+                sx = jax.ShapeDtypeStruct((p,), jnp.float32)
+                xla = AN.xla_baseline_cost(
+                    lambda a, v: jnp.einsum("np,p->n", a, v), sa, sx)["bytes"]
+            flops = 2.0 * n * p
+            t_ours = HW.modeled_time_s(ours, flops)
+            t_xla = HW.modeled_time_s(xla, flops)
+            print(f"{n:>9} {p:>9} {orient:>7} {int(ours):>14,} "
+                  f"{int(xla):>14,} {_us(t_ours)} {_us(t_xla)}")
+    print("note: both orientations move ~n*p + n + p elements; the paper's "
+          "tall/wide strategies appear here as block-shape choices "
+          "(ops.py _pick_blocks_*), not extra traffic.")
+
+
+def bench_copy():
+    print("\n== Copy bandwidth ceiling (paper Fig. 1 analogue) ==")
+    print(f"{'n':>10} {'nitem':>6} {'bytes':>14} {'v5e time':>12} "
+          f"{'eff. fraction':>14}")
+    x = jax.random.normal(jax.random.PRNGKey(4), (100000,), jnp.float32)
+    got = forge.copy(x, backend="pallas-interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+    n = 10**8
+    ideal = 2 * n * 4
+    for nitem in [1, 4, 8, 16]:
+        b = AN.copy_bytes(n, jnp.float32, nitem)
+        t = HW.modeled_time_s(b)
+        print(f"{n:>10} {nitem:>6} {b:>14,} {_us(t)} {ideal/b:>13.3f}")
+    print("note: tile padding overhead shrinks as blocks grow; on real "
+          "hardware larger Nitem additionally amortizes grid/DMA issue "
+          "overhead (the quantity Fig. 1 sweeps).")
+
+
+def bench_semiring():
+    print("\n== Arbitrary types & operators (paper's generality claims) ==")
+    t0 = time.time()
+    # Tropical shortest-path step: d' = min_i (d_i + W[i,j]).
+    W = jax.random.uniform(jax.random.PRNGKey(5), (128, 128), jnp.float32)
+    d = jax.random.uniform(jax.random.PRNGKey(6), (128,), jnp.float32)
+    got = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, W, d,
+                                backend="pallas-interpret")
+    want = ref.ref_matvec(alg.TROPICAL_MIN_PLUS.f, alg.MIN, W, d)
+    _check(got, want, 1e-4)
+    print("tropical (min,+) matvec 128x128: OK (shortest-path relaxation)")
+    # Log-space accumulation.
+    got = forge.semiring_vecmat(alg.LOG_SEMIRING, W, d,
+                                backend="pallas-interpret")
+    want = ref.ref_vecmat(alg.LOG_SEMIRING.f, alg.LOGSUMEXP, W, d)
+    _check(got, want, 1e-4)
+    print("log-semiring vecmat 128x128: OK (stable likelihood accumulation)")
+    # Non-commutative quaternion scan (composite struct type).
+    q = tuple(jax.random.normal(jax.random.PRNGKey(7 + i), (1000,),
+                                jnp.float32) * 0.1 + (1.0 if i == 0 else 0.0)
+              for i in range(4))
+    got = forge.scan(alg.QUATERNION_MUL, q, backend="pallas-interpret")
+    want = ref.ref_scan(alg.QUATERNION_MUL, q)
+    _check(got, want, 1e-2)
+    print("quaternion-product scan n=1000: OK (non-commutative struct type)")
+    # Affine recurrence (the model-stack workhorse).
+    a = jax.random.uniform(jax.random.PRNGKey(11), (4, 64, 256), jnp.float32,
+                           0.5, 1.0)
+    b = jax.random.normal(jax.random.PRNGKey(12), (4, 64, 256), jnp.float32)
+    _check(forge.linear_recurrence(a, b, backend="pallas-interpret"),
+           ref.ref_linear_recurrence(a, b), 1e-3)
+    print("affine linear recurrence (4,64,256): OK (RG-LRU/mLSTM layout)")
+    print(f"(semiring correctness suite: {time.time()-t0:.1f}s interpret)")
+
+
+def main():
+    bench_copy()
+    bench_scan()
+    bench_mapreduce()
+    bench_matvec()
+    bench_semiring()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""While-loop-aware cost model over compiled (post-partitioning) HLO text.
+
+XLA's ``HloCostAnalysis`` (behind ``compiled.cost_analysis()``) counts every
+computation ONCE -- a ``lax.scan`` over 58 layers contributes one body's
+FLOPs (verified by micro-probe; EXPERIMENTS.md §Dry-run).  This walker
+re-derives roofline inputs with trip counts:
+
+* parses every computation into an instruction table (name -> type/op/operands),
+* extracts while trip counts from the loop condition's ``constant(N)``,
+* walks the call graph multiplying nested trip counts,
+* accumulates matmul FLOPs (``dot``), per-instruction HBM bytes, and
+  collective bytes, each scaled by its enclosing multiplier.
+
+Byte model: each top-level instruction contributes (operand bytes + output
+bytes); fusion-internal instructions contribute FLOPs (dots execute on the
+MXU regardless) but not bytes (fused intermediates never round-trip HBM) --
+closer to real TPU HBM traffic than XLA's "bytes accessed", which counts
+fusion internals.  parameters/constants/tuples/GTEs/bitcasts are free.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_OP_CALL = re.compile(r"(?:^|\s)([a-zA-Z][\w\-]*)\(([^)]*)\)")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "bitcast-convert", "after-all", "partition-id", "replica-id",
+             "iota", "copy", "copy-start", "copy-done",
+             # Control-flow wrappers: their bodies are walked with
+             # multipliers; charging the instruction itself would bill the
+             # full carried tuple per trip.
+             "while", "conditional", "call", "optimization-barrier"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "operands", "attrs", "line")
+
+    def __init__(self, name, type_str, op, operands, attrs, line):
+        self.name, self.type_str, self.op = name, type_str, op
+        self.operands, self.attrs, self.line = operands, attrs, line
+
+
+def _parse_instr(line: str) -> Instr | None:
+    if " = " not in line:
+        return None
+    lhs, rhs = line.split(" = ", 1)
+    name = lhs.strip().lstrip("%")
+    # Cut metadata (contains slashes/parens that confuse op matching).
+    rhs_main = rhs.split(", metadata=")[0]
+    m = _OP_CALL.search(rhs_main)
+    if m is None:
+        return None
+    op = m.group(1)
+    operands = [o.strip().lstrip("%") for o in m.group(2).split(",")
+                if o.strip().startswith("%")]
+    type_str = rhs_main[:m.start()]
+    attrs = rhs_main[m.end():]
+    return Instr(name, type_str, op, operands, attrs, rhs_main)
+
+
+def parse_computations(hlo: str) -> dict:
+    """comp name -> list[Instr]."""
+    comps: dict[str, list] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        if not raw:
+            continue
+        if not raw.startswith(" "):
+            s = raw.strip()
+            if s.startswith(("ENTRY ", "%")) and s.endswith("{"):
+                hdr = s[len("ENTRY "):] if s.startswith("ENTRY ") else s
+                cur = hdr.split("(")[0].strip().lstrip("%").strip()
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(raw.strip().lstrip("ROOT ").strip())
+        if ins is not None:
+            comps[cur].append(ins)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            return line.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+    return None
+
+
+def _attr_comp(attrs: str, key: str):
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _called_comps(ins: Instr) -> list:
+    out = []
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"to_apply=%?([\w\.\-]+)", ins.attrs)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+    if m:
+        out += [c.strip().lstrip("%") for c in m.group(1).split(",")]
+    return out
+
+
+def _trip_count(comps, cond_name, depth=0) -> int:
+    best = 1
+    for ins in comps.get(cond_name, ()):
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+        if depth < 2:
+            for c in _called_comps(ins):
+                best = max(best, _trip_count(comps, c, depth + 1))
+    return best
+
+
+def _dot_flops(ins: Instr, table: dict) -> float:
+    out_dims = _first_shape_dims(ins.type_str)
+    out = 1
+    for d in out_dims:
+        out *= d
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if m and ins.operands:
+        lhs = table.get(ins.operands[0])
+        lhs_dims = _first_shape_dims(lhs.type_str) if lhs else []
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out * contract
+
+
+def _instr_bytes(ins: Instr, table: dict) -> int:
+    """HBM traffic attributed to one instruction: its output, written once
+    and read ~once downstream (2x).  Operand reads are charged to their
+    producers, so dynamic-slice/gather fusions are charged the slice they
+    materialize, not the full buffer they index.
+
+    In-place accumulation patterns (dynamic-update-slice / scatter, bare or
+    as a fusion root aliasing one operand) are charged the *update* they
+    move, not the aliased buffer: XLA updates these in place, and charging
+    the buffer x trip-count inflated loop-heavy cells by >100x (the xlstm
+    §Perf investigation)."""
+    out_b = _type_bytes(ins.type_str)
+    op_bytes = [_type_bytes(table[o].type_str) for o in ins.operands
+                if o in table]
+    if out_b > 0 and any(b == out_b for b in op_bytes):
+        others = sum(op_bytes) - out_b
+        if 0 < others < out_b:      # aliased in-place update: move the delta
+            return 2 * others
+    return 2 * out_b
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo) or (next(iter(comps)) if comps else None)
+    tables = {name: {i.name: i for i in instrs}
+              for name, instrs in comps.items()}
+
+    mult: dict[str, float] = defaultdict(float)
+    fused_ctx: set = set()
+
+    def visit(name: str, m: float, in_fusion: bool):
+        mult[name] += m
+        if in_fusion:
+            fused_ctx.add(name)
+        for ins in comps.get(name, ()):
+            if ins.op == "while":
+                body = _attr_comp(ins.attrs, "body")
+                cond = _attr_comp(ins.attrs, "condition")
+                trip = _trip_count(comps, cond) if cond else 1
+                if body:
+                    visit(body, m * trip, in_fusion)
+                if cond:
+                    visit(cond, m * trip, in_fusion)
+                continue
+            callees = _called_comps(ins)
+            child_fused = in_fusion or ins.op == "fusion"
+            for c in callees:
+                visit(c, m, child_fused)
+
+    if entry:
+        visit(entry, 1.0, False)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {op: {"count": 0.0, "bytes": 0.0} for op in COLLECTIVES}
+
+    # Entry parameters are read once (argument streaming).
+    for ins in comps.get(entry, ()):
+        if ins.op == "parameter":
+            bytes_hbm += _type_bytes(ins.type_str)
+
+    for name, m in mult.items():
+        if m <= 0:
+            continue
+        table = tables.get(name, {})
+        in_fusion = name in fused_ctx
+        for ins in comps.get(name, ()):
+            if ins.op in ("dot", "dot-general"):
+                flops += m * _dot_flops(ins, table)
+            if ins.op in _FREE_OPS:
+                continue
+            base_op = ins.op.replace("-start", "").replace("-done", "")
+            if base_op in COLLECTIVES and not ins.op.endswith("-done"):
+                size = max(_type_bytes(ins.type_str),
+                           sum(_type_bytes(table[o].type_str)
+                               for o in ins.operands if o in table) or 0)
+                coll[base_op]["count"] += m
+                coll[base_op]["bytes"] += m * size
+            if not in_fusion:
+                bytes_hbm += m * _instr_bytes(ins, table)
+
+    coll["total_bytes"] = sum(v["bytes"] for k, v in coll.items()
+                              if isinstance(v, dict))
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "collectives": coll,
+        "n_computations": len(comps),
+    }

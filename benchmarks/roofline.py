@@ -1,0 +1,168 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch x shape) cell on the single-pod mesh:
+
+    compute term    = per-device HLO FLOPs / 197 TFLOP/s          [s]
+    memory term     = per-device HLO bytes accessed / 819 GB/s    [s]
+    collective term = per-device collective bytes / 50 GB/s/link  [s]
+                      (all-reduce counted 2x: ring moves ~2 volumes)
+
+``cost_analysis()`` on the partitioned module reports per-device numbers
+(verified empirically), so no further division by chip count is needed.
+MODEL_FLOPS uses 6*N_active*tokens (train, fwd+bwd) / 2*N_active*tokens
+(prefill) / 2*N_active*batch (decode), per device.
+
+Conventions/caveats recorded in EXPERIMENTS.md: host-CPU HLO is the stand-in
+for TPU HLO (no libtpu in this container), bf16 peak is used for the compute
+term, and `bytes accessed` over-counts relative to real HBM traffic when XLA
+fuses differently on TPU.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import hardware as HW
+
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_per_device(rec) -> float:
+    from repro.configs import SHAPES
+    shape = SHAPES[rec["shape"]]
+    n_active = rec["params_active"]
+    chips = CHIPS[rec["mesh"]]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    return 2.0 * n_active * shape.global_batch / chips  # decode: 1 token
+
+
+def analyze(rec) -> dict:
+    ca = rec["cost_analysis"]
+    if "hlo_cost" in rec:
+        # Trip-count-aware walker numbers (benchmarks/hlo_cost.py): XLA's
+        # cost_analysis counts while-loop bodies once, undercounting scanned
+        # layer stacks by 12-80x.
+        flops = rec["hlo_cost"]["flops"]
+        bytes_hbm = rec["hlo_cost"]["bytes_hbm"]
+        coll = rec["hlo_cost"]["collectives"]
+    else:
+        flops = ca["flops"]
+        bytes_hbm = ca["bytes_accessed"]
+        coll = rec["collectives"]
+    compute_t = flops / HW.PEAK_FLOPS_BF16
+    memory_t = bytes_hbm / HW.HBM_BW
+    coll_bytes = sum(RING_FACTOR.get(k, 1.0) * v["bytes"]
+                     for k, v in coll.items() if isinstance(v, dict))
+    coll_t = coll_bytes / HW.ICI_BW_PER_LINK
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound_t = terms[dominant]
+    mf = model_flops_per_device(rec)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dominant,
+        # Fraction of the compute roofline actually achievable given the
+        # bottleneck: 1.0 when compute-bound.
+        "roofline_fraction": compute_t / bound_t if bound_t > 0 else 0.0,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops > 0 else 0.0,
+        "hbm_gb_per_dev": (rec["memory_analysis"]["argument_bytes"]
+                           + rec["memory_analysis"]["temp_bytes"]) / 2**30
+        if "memory_analysis" in rec else -1,
+    }
+    return out
+
+
+_SUGGEST = {
+    "compute": "compute-bound: raise useful-FLOP ratio (remat policy, fuse "
+               "attention, drop redundant recompute)",
+    "memory": "HBM-bound: fuse/eliminate materialized intermediates, widen "
+              "per-step tiles, cast more traffic to bf16",
+    "collective": "ICI-bound: reshard to cut all-gathers (head/seq split), "
+                  "overlap collectives with compute, shrink KV replication",
+}
+
+
+def suggestion(row) -> str:
+    return _SUGGEST[row["dominant"]]
+
+
+def load_cells(results_dir: str, mesh: str = "16x16") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh:
+            continue
+        if "error" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "error": rec["error"]})
+        elif "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["skipped"]})
+        else:
+            rows.append(analyze(rec))
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(rows) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "roofline-frac | useful-ratio | HBM GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                         f"skipped | -- | -- | -- |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r['error'][:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {r['hbm_gb_per_dev']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main(results_dir="results/dryrun", out_json="results/roofline.json"):
+    rows = load_cells(results_dir)
+    print("== Roofline (single-pod 16x16, per-device terms) ==")
+    print(table(rows))
+    analyzed = [r for r in rows if "compute_s" in r]
+    if analyzed:
+        worst = min(analyzed, key=lambda r: r["roofline_fraction"])
+        collbound = max(analyzed, key=lambda r: r["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.3f}) -> {suggestion(worst)}")
+        print(f"most collective-bound: {collbound['arch']}/"
+              f"{collbound['shape']} ({fmt_s(collbound['collective_s'])}) "
+              f"-> {suggestion(collbound)}")
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the KernelForge primitives on arbitrary types and operators.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Every call dispatches through the two-layer architecture: on TPU the Pallas
+kernels run; on CPU the portable XLA fallback runs; `backend="pallas-interpret"`
+executes the TPU kernel bodies in Python (used here so the quickstart
+exercises the real kernels on any machine).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+
+B = "pallas-interpret" if jax.default_backend() != "tpu" else None
+key = jax.random.PRNGKey(0)
+
+print("== 1. prefix sums (the classic) ==")
+x = jax.random.normal(key, (1000,), jnp.float32)
+print("scan(+):", np.asarray(forge.scan(alg.ADD, x, backend=B))[:4], "...")
+print("scan(max), exclusive:",
+      np.asarray(forge.scan(alg.MAX, x, inclusive=False, backend=B))[:4])
+
+print("\n== 2. arbitrary struct types: quaternion composition ==")
+q = tuple(jax.random.normal(jax.random.fold_in(key, i), (256,), jnp.float32)
+          * 0.1 + (1.0 if i == 0 else 0.0) for i in range(4))
+w, xi, yj, zk = forge.scan(alg.QUATERNION_MUL, q, backend=B)
+print("cumulative quaternion product (non-commutative!):",
+      f"w={float(w[-1]):.4f} x={float(xi[-1]):.4f}")
+
+print("\n== 3. custom 8-bit type with free promotion (UnitFloat8) ==")
+u8 = jax.random.randint(key, (100_000,), 0, 256, jnp.int32).astype(jnp.uint8)
+s = forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u8, backend=B)
+print(f"sum of 100k UnitFloat8 values: {float(s):.2f} "
+      "(decoded to f32 in-register; bandwidth = 1 byte/element)")
+
+print("\n== 4. semiring matvec: tropical shortest paths ==")
+# One Bellman-Ford relaxation: dist' = min_i (dist[i] + W[i, j]).
+W = jnp.where(jax.random.uniform(key, (64, 64)) < 0.2,
+              jax.random.uniform(key, (64, 64), maxval=10.0), jnp.inf)
+W = W.at[jnp.arange(64), jnp.arange(64)].set(0.0)
+dist = jnp.full((64,), jnp.inf).at[0].set(0.0)
+for _ in range(4):
+    dist = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, W, dist, backend=B)
+print("4-hop shortest distances from node 0 (first 8):",
+      np.round(np.asarray(dist[:8]), 2))
+
+print("\n== 5. log-semiring vecmat: stable HMM forward step ==")
+logA = jnp.log(jax.nn.softmax(jax.random.normal(key, (32, 32)), axis=1))
+logp = jnp.log(jax.nn.softmax(jax.random.normal(key, (32,))))
+logp = forge.semiring_vecmat(alg.LOG_SEMIRING, logA, logp, backend=B)
+print("updated log-probs (logsumexp accumulation), max:",
+      float(jnp.max(logp)))
+
+print("\n== 6. linear recurrence: the model-stack workhorse ==")
+a = jax.random.uniform(key, (2, 128, 256), jnp.float32, 0.9, 0.99)
+b = jax.random.normal(jax.random.fold_in(key, 9), (2, 128, 256), jnp.float32)
+h = forge.linear_recurrence(a, b, backend=B)
+print("h_t = a_t*h_{t-1} + b_t over (B=2, T=128, C=256):",
+      "final-state norm =", float(jnp.linalg.norm(h[:, -1])))
+print("\n(quickstart done -- same API, three backends, zero code changes)")

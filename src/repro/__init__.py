@@ -1,0 +1,3 @@
+"""repro: KernelForge-TPU -- portable parallel primitives + multi-pod LM framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,25 @@
+"""Per-architecture configs (one module per assigned arch).
+
+Importing this package registers every architecture; use
+``repro.configs.base.get_config(name)`` / ``list_archs()``.
+"""
+from repro.configs import (  # noqa: F401
+    deepseek_coder_33b,
+    deepseek_v3_671b,
+    gemma2_27b,
+    gemma3_4b,
+    internvl2_76b,
+    minitron_4b,
+    moonshot_v1_16b_a3b,
+    recurrentgemma_2b,
+    seamless_m4t_medium,
+    xlstm_1p3b,
+)
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    input_specs,
+    list_archs,
+)

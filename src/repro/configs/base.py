@@ -1,0 +1,227 @@
+"""Config system: model + shape + run configs for every assigned architecture.
+
+``ModelConfig`` is a frozen dataclass covering the union of features the 10
+assigned architectures need (GQA, local/global attention, softcap, MLA, MoE,
+RG-LRU, mLSTM/sLSTM, enc-dec, modality-frontend stubs).  Layer layout is
+expressed as ``prefix + unit * n_units + suffix`` so homogeneous stacks can
+be lowered as ``lax.scan`` over stacked params (compile-time scalability for
+60-80 layer models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 32000
+
+    # Layer layout: pattern = prefix + unit * n_units + suffix.
+    prefix: tuple = ()
+    unit: tuple = ("attn_global",)
+    n_units: int = 2
+    suffix: tuple = ()
+
+    # Attention.
+    rope_theta: float = 10000.0
+    rope_theta_global: float = 0.0   # 0 = same as rope_theta (gemma3: 1e6)
+    local_window: int = 4096
+    attn_softcap: float = 0.0       # 0 = disabled
+    final_softcap: float = 0.0
+    qk_norm: bool = False
+
+    # MLP.
+    activation: str = "swiglu"      # swiglu | geglu | relu2 | gelu
+
+    # MoE.
+    n_experts: int = 0
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_type: str = "softmax"    # softmax | sigmoid (dsv3 aux-free)
+
+    # MLA (deepseek-v3).
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # Recurrent (RG-LRU / xLSTM).
+    rnn_width: int = 0
+    conv_width: int = 4
+    mlstm_chunk: int = 64
+    mlstm_state_dtype: str = "float32"   # chunk-carry precision (perf knob)
+
+    # Encoder-decoder (seamless).
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+
+    # Modality frontend stubs.
+    num_prefix_embeds: int = 0      # vision tokens prepended to the sequence
+    audio_frontend: bool = False    # source side consumes precomputed frames
+
+    # Misc.
+    embed_scale: bool = False       # gemma sqrt(d_model) embedding scaling
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    post_norm: bool = False         # gemma-2/3 post-block norms
+    mtp_depth: int = 0              # deepseek-v3 multi-token prediction
+    dtype: str = "bfloat16"
+    # True when every layer is full (global) attention => quadratic in seq.
+    # Sub-quadratic archs (ssm / hybrid with local attn) override to False
+    # and are eligible for the long_500k cell.
+    quadratic: bool = True
+
+    def layer_pattern(self) -> tuple:
+        pat = tuple(self.prefix) + tuple(self.unit) * self.n_units + tuple(self.suffix)
+        assert len(pat) == self.n_layers, (
+            f"{self.name}: layout gives {len(pat)} layers != n_layers={self.n_layers}")
+        return pat
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6·N·D model FLOPs)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = {}
+        def attn_params():
+            if self.use_mla:
+                q = d * self.q_lora_rank + self.q_lora_rank * self.n_heads * (
+                    self.qk_nope_head_dim + self.qk_rope_head_dim)
+                kv = d * (self.kv_lora_rank + self.qk_rope_head_dim) + \
+                    self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                o = self.n_heads * self.v_head_dim * d
+                return q + kv + o
+            return d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+
+        def mlp_params(ff):
+            mult = 3 if self.activation in ("swiglu", "geglu") else 2
+            return mult * d * ff
+
+        n = emb
+        for kind in self.layer_pattern():
+            if kind in ("attn_global", "attn_local"):
+                n += attn_params() + mlp_params(self.d_ff)
+            elif kind in ("mla_dense",):
+                n += attn_params() + mlp_params(self.d_ff)
+            elif kind in ("mla_moe", "gqa_moe"):
+                n += attn_params()
+                n += d * self.n_experts  # router
+                n += self.n_experts * mlp_params(self.moe_d_ff) // d * d
+                n += self.n_experts * (3 if self.activation in ("swiglu", "geglu") else 2) * d * self.moe_d_ff - self.n_experts * mlp_params(self.moe_d_ff)
+                n += self.n_shared_experts * mlp_params(self.moe_d_ff)
+            elif kind == "gqa_dense":
+                n += attn_params() + mlp_params(self.d_ff)
+            elif kind == "rglru":
+                w = self.rnn_width or d
+                n += 2 * d * w + w * d + self.conv_width * w + 3 * w
+            elif kind == "mlstm":
+                w = 2 * d
+                n += d * w * 2 + w * d + 3 * (w // 1) + w * 3  # up/gates/down approx
+                n += 3 * w * (w // max(self.n_heads, 1))  # qkv inside inner dim
+            elif kind == "slstm":
+                n += 4 * d * d + 4 * d * d // max(self.n_heads, 1) + (4 * d * d) // 3
+            elif kind in ("enc_attn",):
+                n += attn_params() + mlp_params(self.d_ff)
+            elif kind == "dec_attn":
+                n += 2 * attn_params() + mlp_params(self.d_ff)
+        if self.is_encdec:
+            for _ in range(self.n_enc_layers):
+                n += attn_params() + mlp_params(self.d_ff)
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        mult = 3 if self.activation in ("swiglu", "geglu") else 2
+        expert_p = mult * self.d_model * self.moe_d_ff
+        n_moe_layers = sum(1 for k in self.layer_pattern() if k.endswith("_moe"))
+        inactive = n_moe_layers * (self.n_experts - self.moe_top_k) * expert_p
+        return int(total - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.is_encdec and cfg.audio_frontend:
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), cfg.activation_dtype)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.num_prefix_embeds:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeds, cfg.d_model), cfg.activation_dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec and cfg.audio_frontend:
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), cfg.activation_dtype)
+        if cfg.num_prefix_embeds:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeds, cfg.d_model), cfg.activation_dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache (cache specs are
+    # derived separately via jax.eval_shape on init_cache).
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+_SMOKE_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig):
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE_REGISTRY[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  triggers per-arch module imports
+    return (_SMOKE_REGISTRY if smoke else _REGISTRY)[name]
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,52 @@
+"""xlstm-1.3b [ssm]  [arXiv:2405.04517; unverified]
+
+48L, d_model=2048, 4 heads, vocab=50304, d_ff=0 (mixers carry their own
+up/down projections).  7:1 mLSTM:sLSTM interleave -- 6 units of
+(mlstm x7, slstm x1).  Sub-quadratic: long_500k RUNS (O(d_head^2) matrix
+state at decode; no KV cache).
+
+mLSTM's exponential-gating stabilizer m_t = max(log f_t + m_{t-1}, log i_t)
+runs on the KernelForge scan primitive with the non-commutative
+MAXPLUS_AFFINE operator; sLSTM's gates read h_{t-1} (non-associative) and
+are lowered as lax.scan over time -- see DESIGN.md §4.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    unit=("mlstm",) * 7 + ("slstm",),
+    n_units=6,
+    activation="gelu",
+    conv_width=4,
+    mlstm_chunk=64,
+    tie_embeddings=True,
+    quadratic=False,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=4,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=0,
+    vocab_size=512,
+    unit=("mlstm", "mlstm", "mlstm", "slstm"),
+    n_units=1,
+    activation="gelu",
+    conv_width=4,
+    mlstm_chunk=8,
+    quadratic=False,
+)
+
+register(FULL, SMOKE)

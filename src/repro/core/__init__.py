@@ -1,0 +1,7 @@
+"""KernelForge-TPU core: two-layer portable primitives.
+
+Layer 1: ``intrinsics`` -- tile combines, alignment patterns, tuning/backend
+dispatch (the KernelIntrinsics.jl analogue).
+Layer 2: ``primitives`` -- scan / mapreduce / semiring matvec / copy over
+arbitrary operators and pytree element types (the KernelForge.jl analogue).
+"""

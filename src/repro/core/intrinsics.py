@@ -1,0 +1,283 @@
+"""Layer 1 -- portable kernel intrinsics (the KernelIntrinsics.jl analogue).
+
+KernelIntrinsics.jl isolates the three capabilities vendor-competitive
+primitives need -- warp shuffles over arbitrary types, ordered memory access,
+and vectorized loads -- behind backend-dispatched abstractions.  On TPU the
+same *purposes* are served by different mechanisms (see DESIGN.md §2); this
+module provides them:
+
+* **In-tile combines** (:func:`tile_scan`, :func:`tile_reduce`): the shuffle
+  analogue.  A Pallas block holds an ``(sublane, 128)``-aligned tile in vector
+  registers; log-step shifted combines emitted here lower to in-register VPU
+  ops.  Arbitrary element types are pytrees -- JAX tracing specializes the
+  structural recursion at compile time like Julia's ``@generated``.
+* **Alignment / vectorization helpers** (:func:`min_tile`,
+  :func:`block_shape`, :func:`pattern_decompose`): the ``vload`` /
+  ``vload_pattern`` analogue.  Block shapes are chosen so every HBM->VMEM
+  transfer is wide and aligned; ragged tails become *statically generated*
+  masked patterns, never dynamic shapes.
+* **Grid-carry protocol** (documented here, implemented in kernels/scan.py):
+  the ordered-memory-access analogue.  TPU Pallas grid steps execute
+  sequentially per core, so a scratch carry gives the decoupled-lookback
+  guarantee (prior tiles' aggregates visible) by construction -- no
+  release/acquire flags, no spinning.
+* **Tuning-policy dispatch** (:class:`TuningPolicy`): the paper's
+  ``A40 <: Ampere <: AbstractArch`` hierarchy, as a chip-family registry
+  resolved at trace time.
+* **Backend dispatch** (:func:`register_impl` / :func:`resolve_impl`): the
+  package-extension mechanism.  Algorithms in ``core/primitives.py`` never
+  name a backend; implementations register themselves per backend and the
+  dispatcher picks ``pallas-tpu`` on TPU, ``xla`` elsewhere (and
+  ``pallas-interpret`` under the validation flag).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+LANES = 128  # TPU vector lane count (minor-most tile dimension)
+
+_SUBLANE_BY_ITEMSIZE = {8: 4, 4: 8, 2: 16, 1: 32}
+
+
+def min_tile(dtype) -> tuple[int, int]:
+    """Minimum (sublane, lane) tile for ``dtype`` on current-gen TPUs."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return (_SUBLANE_BY_ITEMSIZE.get(itemsize, 8), LANES)
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# --------------------------------------------------------------------------
+# vload_pattern analogue: static decomposition of a ragged extent.
+# --------------------------------------------------------------------------
+
+
+def pattern_decompose(n: int, block: int) -> tuple[int, int]:
+    """Split extent ``n`` into (full_blocks, tail).
+
+    The paper's ``vload_pattern`` emits an optimal aligned load sequence for a
+    statically known misalignment; our blocks are always aligned (JAX arrays
+    start aligned and block starts are multiples of the block shape), so the
+    pattern reduces to (main body, masked tail).  The tail mask is generated
+    at trace time from static shape arithmetic in the kernels.
+    """
+    return n // block, n % block
+
+
+def tile_mask(tile_shape: Sequence[int], axis: int, start: Any, valid_until: Any):
+    """Boolean mask marking in-bounds elements along ``axis`` of a tile.
+
+    ``start`` is the global offset of the tile along ``axis`` (may be traced),
+    ``valid_until`` the global extent.  Used for masked tail tiles.
+    """
+    idx = jax.lax.broadcasted_iota(jnp.int32, tuple(tile_shape), axis)
+    return (idx + start) < valid_until
+
+
+# --------------------------------------------------------------------------
+# Shuffle analogue: in-tile ordered scans and reductions over pytrees.
+# --------------------------------------------------------------------------
+
+
+def _shift_along(x, s: int, axis: int):
+    """Shift ``x`` by ``s`` along ``axis`` (towards higher indices)."""
+    return jnp.roll(x, s, axis=axis)
+
+
+def tile_scan(op, x: Pytree, axis: int) -> Pytree:
+    """In-order inclusive scan of a tile along ``axis`` (Hillis–Steele).
+
+    log2(extent) shifted combines; order-preserving, so correct for
+    non-commutative ``op`` (quaternions, affine maps, 2x2 matrices).
+    No identity needed: out[i] = i >= s ? op(x[i-s], x[i]) : x[i].
+    """
+    leaves = jax.tree.leaves(x)
+    extent = leaves[0].shape[axis]
+    shape = leaves[0].shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+    s = 1
+    while s < extent:
+        shifted = jax.tree.map(lambda l: _shift_along(l, s, axis), x)
+        combined = op(shifted, x)
+        keep = idx >= s
+        x = jax.tree.map(lambda c, o: jnp.where(keep, c, o), combined, x)
+        s *= 2
+    return x
+
+
+def tile_take_last(x: Pytree, axis: int) -> Pytree:
+    """Slice the last element along ``axis`` (keepdims)."""
+    def take(l):
+        sl = [slice(None)] * l.ndim
+        sl[axis] = slice(l.shape[axis] - 1, l.shape[axis])
+        return l[tuple(sl)]
+
+    return jax.tree.map(take, x)
+
+
+def _split_along(x: Pytree, axis: int, k: int) -> tuple[Pytree, Pytree]:
+    """Split pytree ``x`` into ([0:k], [k:2k]) slices along ``axis``."""
+    treedef = jax.tree.structure(x)
+    pairs = []
+    for l in jax.tree.leaves(x):
+        sl_lo = [slice(None)] * l.ndim
+        sl_hi = [slice(None)] * l.ndim
+        sl_lo[axis] = slice(0, k)
+        sl_hi[axis] = slice(k, 2 * k)
+        pairs.append((l[tuple(sl_lo)], l[tuple(sl_hi)]))
+    lo = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    hi = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return lo, hi
+
+
+def tile_reduce(op, x: Pytree, axis: int) -> Pytree:
+    """Reduce a tile along ``axis``, keepdims.
+
+    Commutative ops with power-of-two extents use a balanced halving fold
+    (fewest combines); otherwise an order-preserving scan + take-last.  The
+    commutativity dispatch is itself a tuning decision exposed by the
+    operator algebra (DESIGN.md §3).
+    """
+    extent = jax.tree.leaves(x)[0].shape[axis]
+    pow2 = extent > 0 and (extent & (extent - 1)) == 0
+    if not getattr(op, "commutative", False) or not pow2:
+        return tile_take_last(tile_scan(op, x, axis), axis)
+    k = extent
+    while k > 1:
+        k //= 2
+        lo, hi = _split_along(x, axis, k)
+        x = op(lo, hi)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Tuning-policy dispatch hierarchy (A40 <: Ampere <: AbstractArch analogue).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningPolicy:
+    """Per-chip static kernel parameters, resolved at trace time."""
+
+    name: str = "generic"
+    # Items-per-grid-step multiplier (the paper's Nitem): how many minimum
+    # tiles one grid step processes.  Scan uses a larger Nitem to amortize
+    # carry propagation, exactly like the paper's 16-items-per-thread scan.
+    nitem_copy: int = 8
+    nitem_scan: int = 16
+    nitem_reduce: int = 8
+    # matvec / vecmat block parameters (rows, cols are in units of min tile).
+    matvec_rows: int = 16
+    matvec_cols: int = 2
+    vecmat_rows: int = 8
+    vecmat_cols: int = 8
+    # Wide/tall shape cutover (aspect ratio heuristic, paper §V-C).
+    tall_threshold: float = 64.0
+    vmem_budget_bytes: int = 64 * 1024 * 1024
+
+
+_TUNING_REGISTRY: dict[str, TuningPolicy] = {}
+_TUNING_PARENTS: dict[str, str] = {}
+
+
+def register_tuning(name: str, policy: TuningPolicy, parent: str = "generic"):
+    _TUNING_REGISTRY[name] = policy
+    _TUNING_PARENTS[name] = parent
+
+
+register_tuning("generic", TuningPolicy())
+# TPU v5e: 16 GiB HBM @ 819 GB/s, 197 bf16 TFLOP/s, ~128 MiB VMEM/core.
+register_tuning(
+    "tpu_v5e",
+    TuningPolicy(name="tpu_v5e", nitem_scan=16, nitem_reduce=8, nitem_copy=8,
+                 vmem_budget_bytes=96 * 1024 * 1024),
+)
+# v5p: larger HBM/bandwidth; deeper pipelining pays off.
+register_tuning(
+    "tpu_v5p",
+    TuningPolicy(name="tpu_v5p", nitem_scan=32, nitem_reduce=16, nitem_copy=16,
+                 vmem_budget_bytes=96 * 1024 * 1024),
+    parent="tpu_v5e",
+)
+# Interpret mode: tiny tiles keep the Python loop fast while exercising the
+# same code paths (masking, carries, patterns).
+register_tuning(
+    "interpret",
+    TuningPolicy(name="interpret", nitem_copy=2, nitem_scan=2, nitem_reduce=2,
+                 matvec_rows=2, matvec_cols=1, vecmat_rows=2, vecmat_cols=1),
+)
+
+
+def resolve_tuning(name: str | None = None) -> TuningPolicy:
+    if name is None:
+        name = detect_chip()
+    while name not in _TUNING_REGISTRY:
+        name = _TUNING_PARENTS.get(name, "generic")
+    return _TUNING_REGISTRY[name]
+
+
+def detect_chip() -> str:
+    dev = jax.devices()[0]
+    if dev.platform == "tpu":
+        kind = getattr(dev, "device_kind", "").lower()
+        if "v5 lite" in kind or "v5e" in kind:
+            return "tpu_v5e"
+        if "v5p" in kind or "v5" in kind:
+            return "tpu_v5p"
+        return "tpu_v5e"
+    return "generic"
+
+
+# --------------------------------------------------------------------------
+# Backend dispatch registry (package-extension analogue).
+# --------------------------------------------------------------------------
+
+_IMPL_REGISTRY: dict[tuple[str, str], Callable] = {}
+_FORCED_BACKEND: str | None = None
+
+
+def register_impl(primitive: str, backend: str):
+    def deco(fn):
+        _IMPL_REGISTRY[(primitive, backend)] = fn
+        return fn
+
+    return deco
+
+
+def force_backend(backend: str | None):
+    """Force a backend globally (used by tests to pin pallas-interpret)."""
+    global _FORCED_BACKEND
+    _FORCED_BACKEND = backend
+
+
+def current_backend() -> str:
+    if _FORCED_BACKEND is not None:
+        return _FORCED_BACKEND
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_impl(primitive: str, backend: str | None = None) -> Callable:
+    backend = backend or current_backend()
+    key = (primitive, backend)
+    if key in _IMPL_REGISTRY:
+        return _IMPL_REGISTRY[key]
+    # Fall back to the portable XLA implementation -- the algorithmic layer is
+    # always available even on backends with no Pallas lowering.
+    fallback = (primitive, "xla")
+    if fallback in _IMPL_REGISTRY:
+        return _IMPL_REGISTRY[fallback]
+    raise NotImplementedError(f"no implementation registered for {primitive}")

@@ -1,0 +1,351 @@
+"""Associative operators and semirings over arbitrary pytree element types.
+
+This is the algebra layer of the paper's "arbitrary types and operators"
+contribution.  KernelForge.jl supports any Julia Bitstype through recursive
+``@generated`` decomposition into 32-bit shuffles; the JAX-native analogue is
+a *pytree of arrays*: an element type is any pytree whose leaves are JAX
+arrays, and an operator is any function combining two such pytrees leafwise /
+structurally.  JAX tracing unrolls the structural recursion at compile time
+exactly like Julia's generated functions -- zero runtime dispatch.
+
+Every operator used by the kernels is an :class:`AssocOp`:
+
+* ``combine(a, b)`` must be **associative** and **vectorized** (it is applied
+  to whole tiles, combining along the scanned/reduced dimension while staying
+  elementwise over the remaining tile dimensions).
+* ``identity(like)`` materializes the identity element matching the
+  shape/dtype of ``like`` (used for tile padding masks and carry init).
+* ``commutative`` selects between the balanced-fold reduction tree (fast) and
+  the order-preserving scan-fold (required for e.g. quaternion products or
+  matrix-affine composition) inside the kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_shape_dtype(x):
+    return jnp.shape(x), jnp.result_type(x)
+
+
+def full_like_spec(like, value):
+    """``jnp.full`` matching a concrete array *or* a ShapeDtypeStruct leaf."""
+    shape, dtype = _leaf_shape_dtype(like)
+    return jnp.full(shape, value, dtype=dtype)
+
+
+def _min_value(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return -jnp.inf
+    if jnp.issubdtype(dtype, jnp.bool_):
+        return False
+    return jnp.iinfo(dtype).min
+
+
+def _max_value(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.inf
+    if jnp.issubdtype(dtype, jnp.bool_):
+        return True
+    return jnp.iinfo(dtype).max
+
+
+@dataclasses.dataclass(frozen=True)
+class AssocOp:
+    """An associative binary operator over pytree elements."""
+
+    name: str
+    combine: Callable[[Pytree, Pytree], Pytree]
+    identity: Callable[[Pytree], Pytree]  # (pytree of shape/dtype likes) -> pytree
+    commutative: bool = False
+
+    def __call__(self, a: Pytree, b: Pytree) -> Pytree:
+        return self.combine(a, b)
+
+    def __repr__(self):  # keep kernel cache keys short
+        return f"AssocOp({self.name})"
+
+
+def _elementwise_identity(fill_fn):
+    def identity(like):
+        return jax.tree.map(lambda l: full_like_spec(l, fill_fn(_leaf_shape_dtype(l)[1])), like)
+
+    return identity
+
+
+# --------------------------------------------------------------------------
+# Standard scalar/elementwise operators
+# --------------------------------------------------------------------------
+
+ADD = AssocOp(
+    name="add",
+    combine=lambda a, b: jax.tree.map(jnp.add, a, b),
+    identity=_elementwise_identity(lambda dt: 0),
+    commutative=True,
+)
+
+MUL = AssocOp(
+    name="mul",
+    combine=lambda a, b: jax.tree.map(jnp.multiply, a, b),
+    identity=_elementwise_identity(lambda dt: 1),
+    commutative=True,
+)
+
+MAX = AssocOp(
+    name="max",
+    combine=lambda a, b: jax.tree.map(jnp.maximum, a, b),
+    identity=_elementwise_identity(_min_value),
+    commutative=True,
+)
+
+MIN = AssocOp(
+    name="min",
+    combine=lambda a, b: jax.tree.map(jnp.minimum, a, b),
+    identity=_elementwise_identity(_max_value),
+    commutative=True,
+)
+
+
+def _logaddexp(a, b):
+    return jax.tree.map(jnp.logaddexp, a, b)
+
+
+LOGSUMEXP = AssocOp(
+    name="logsumexp",
+    combine=_logaddexp,
+    identity=_elementwise_identity(lambda dt: -jnp.inf),
+    commutative=True,
+)
+
+# Tropical semiring reducers (the paper's shortest-path use case).
+TROPICAL_MIN = MIN   # (min, +) semiring: reduce with min, map with +
+TROPICAL_MAX = MAX   # (max, +) semiring
+
+
+# --------------------------------------------------------------------------
+# Affine composition: the operator behind diagonal linear recurrences
+#   h_t = a_t * h_{t-1} + b_t.
+# Elements are pairs (a, b) representing x -> a*x + b; composition is applied
+# left-to-right: (g1 . g2)(x) = g2(g1(x)).  NON-commutative.
+# --------------------------------------------------------------------------
+
+
+def _affine_combine(p, q):
+    (a1, b1), (a2, b2) = p, q
+    return (
+        jax.tree.map(jnp.multiply, a2, a1),
+        jax.tree.map(lambda a2_, b1_, b2_: a2_ * b1_ + b2_, a2, b1, b2),
+    )
+
+
+def _affine_identity(like):
+    a_like, b_like = like
+    return (
+        jax.tree.map(lambda l: full_like_spec(l, 1), a_like),
+        jax.tree.map(lambda l: full_like_spec(l, 0), b_like),
+    )
+
+
+AFFINE = AssocOp(
+    name="affine",
+    combine=_affine_combine,
+    identity=_affine_identity,
+    commutative=False,
+)
+
+
+# Max-plus affine: elements (a, b) represent m -> max(m + a, b).  This is the
+# AFFINE operator over the (max, +) semiring -- the recurrence behind xLSTM's
+# exponential-gating stabilizer m_t = max(log f_t + m_{t-1}, log i_t).
+# NON-commutative; exercised by the xlstm-1.3b architecture via core.scan.
+
+
+def _maxplus_affine_combine(p, q):
+    (a1, b1), (a2, b2) = p, q
+    return (
+        jax.tree.map(jnp.add, a1, a2),
+        jax.tree.map(lambda b1_, a2_, b2_: jnp.maximum(b1_ + a2_, b2_), b1, a2, b2),
+    )
+
+
+def _maxplus_affine_identity(like):
+    a_like, b_like = like
+    return (
+        jax.tree.map(lambda l: full_like_spec(l, 0), a_like),
+        jax.tree.map(lambda l: full_like_spec(l, _min_value(_leaf_shape_dtype(l)[1])), b_like),
+    )
+
+
+MAXPLUS_AFFINE = AssocOp(
+    name="maxplus_affine",
+    combine=_maxplus_affine_combine,
+    identity=_maxplus_affine_identity,
+    commutative=False,
+)
+
+
+# --------------------------------------------------------------------------
+# Softmax-merge: combining partial attention results (m, l, o) where
+#   m = running max of logits, l = sum of exp(logit - m), o = weighted values.
+# Associative and commutative; the operator behind distributed flash-decoding.
+# --------------------------------------------------------------------------
+
+
+def _softmax_merge(p, q):
+    (m1, l1, o1), (m2, l2, o2) = p, q
+    m = jnp.maximum(m1, m2)
+    # Guard exp(-inf - -inf): where both sides are empty keep weights at 0.
+    w1 = jnp.where(jnp.isneginf(m1), 0.0, jnp.exp(m1 - m)).astype(l1.dtype)
+    w2 = jnp.where(jnp.isneginf(m2), 0.0, jnp.exp(m2 - m)).astype(l2.dtype)
+    l = l1 * w1 + l2 * w2
+    o = o1 * w1[..., None] + o2 * w2[..., None] if o1.ndim == l1.ndim + 1 else o1 * w1 + o2 * w2
+    return (m, l, o)
+
+
+def _softmax_identity(like):
+    m_like, l_like, o_like = like
+    return (
+        jax.tree.map(lambda l: full_like_spec(l, -jnp.inf), m_like),
+        jax.tree.map(lambda l: full_like_spec(l, 0), l_like),
+        jax.tree.map(lambda l: full_like_spec(l, 0), o_like),
+    )
+
+
+SOFTMAX_MERGE = AssocOp(
+    name="softmax_merge",
+    combine=_softmax_merge,
+    identity=_softmax_identity,
+    commutative=True,
+)
+
+
+# --------------------------------------------------------------------------
+# Quaternion multiplication: the paper's canonical non-commutative composite
+# type (a 4-field struct).  Elements are tuples (w, x, y, z) of arrays.
+# --------------------------------------------------------------------------
+
+
+def _quat_mul(p, q):
+    w1, x1, y1, z1 = p
+    w2, x2, y2, z2 = q
+    return (
+        w1 * w2 - x1 * x2 - y1 * y2 - z1 * z2,
+        w1 * x2 + x1 * w2 + y1 * z2 - z1 * y2,
+        w1 * y2 - x1 * z2 + y1 * w2 + z1 * x2,
+        w1 * z2 + x1 * y2 - y1 * x2 + z1 * w2,
+    )
+
+
+def _quat_identity(like):
+    w, x, y, z = like
+    return (
+        full_like_spec(w, 1),
+        full_like_spec(x, 0),
+        full_like_spec(y, 0),
+        full_like_spec(z, 0),
+    )
+
+
+QUATERNION_MUL = AssocOp(
+    name="quaternion_mul",
+    combine=_quat_mul,
+    identity=_quat_identity,
+    commutative=False,
+)
+
+
+# --------------------------------------------------------------------------
+# 2x2 matrix product under flattened (m00, m01, m10, m11) representation --
+# exercises a non-commutative struct type distinct from quaternions.
+# --------------------------------------------------------------------------
+
+
+def _mat2_mul(p, q):
+    a00, a01, a10, a11 = p
+    b00, b01, b10, b11 = q
+    # Row-vector convention (state @ M): compose left-to-right as p then q.
+    return (
+        a00 * b00 + a01 * b10,
+        a00 * b01 + a01 * b11,
+        a10 * b00 + a11 * b10,
+        a10 * b01 + a11 * b11,
+    )
+
+
+def _mat2_identity(like):
+    m00, m01, m10, m11 = like
+    return (
+        full_like_spec(m00, 1),
+        full_like_spec(m01, 0),
+        full_like_spec(m10, 0),
+        full_like_spec(m11, 1),
+    )
+
+
+MAT2_MUL = AssocOp(
+    name="mat2_mul",
+    combine=_mat2_mul,
+    identity=_mat2_identity,
+    commutative=False,
+)
+
+
+# --------------------------------------------------------------------------
+# Semirings: (map f, reduce op) pairs for generalized matvec / mapreduce.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """Generalized (f, op): y = op_i f(x_i, a_i).
+
+    ``f`` is applied elementwise to (vector element, matrix element) pairs and
+    ``op`` reduces.  ``f`` may change the element type (e.g. UnitFloat8 ->
+    Float32 promotion in the paper's mapreduce benchmark).
+    """
+
+    name: str
+    f: Callable[[Any, Any], Pytree]
+    op: AssocOp
+
+
+ARITHMETIC = Semiring("arithmetic", f=lambda x, a: x * a, op=ADD)
+TROPICAL_MIN_PLUS = Semiring("tropical_min_plus", f=lambda x, a: x + a, op=MIN)
+TROPICAL_MAX_PLUS = Semiring("tropical_max_plus", f=lambda x, a: x + a, op=MAX)
+LOG_SEMIRING = Semiring("log", f=lambda x, a: x + a, op=LOGSUMEXP)
+
+
+# --------------------------------------------------------------------------
+# UnitFloat8: the paper's custom 8-bit type -- values in [-1, 1] encoded as
+# 256 evenly spaced uint8 levels, promoted to f32 before accumulation.
+# --------------------------------------------------------------------------
+
+
+def unitfloat8_encode(x: jax.Array) -> jax.Array:
+    x = jnp.clip(x, -1.0, 1.0)
+    return jnp.round((x + 1.0) * (255.0 / 2.0)).astype(jnp.uint8)
+
+
+def unitfloat8_decode(u: jax.Array) -> jax.Array:
+    return u.astype(jnp.float32) * (2.0 / 255.0) - 1.0
+
+
+STD_OPS = {
+    op.name: op
+    for op in [ADD, MUL, MAX, MIN, LOGSUMEXP, AFFINE, MAXPLUS_AFFINE,
+               SOFTMAX_MERGE, QUATERNION_MUL, MAT2_MUL]
+}
+
+STD_SEMIRINGS = {
+    s.name: s for s in [ARITHMETIC, TROPICAL_MIN_PLUS, TROPICAL_MAX_PLUS, LOG_SEMIRING]
+}

@@ -1,0 +1,89 @@
+"""Layer 2 -- the public primitives API (the KernelForge.jl analogue).
+
+``scan``, ``mapreduce``, ``semiring_matvec``/``semiring_vecmat`` and ``copy``
+for arbitrary associative operators and arbitrary (pytree) element types.
+All algorithms are expressed exclusively through the Layer-1 intrinsics and
+the backend registry: no function here names a backend, and adding a backend
+means registering implementations, not touching this file.
+
+Usage:
+
+    from repro.core import primitives as forge
+    from repro.core import operators as alg
+
+    y = forge.scan(alg.ADD, x)                       # prefix sum
+    q = forge.scan(alg.QUATERNION_MUL, (w, i, j, k)) # non-commutative pytree
+    s = forge.mapreduce(lambda v: v.astype(jnp.float32), alg.ADD, u8)
+    d = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, A, x)  # shortest paths
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.kernels import ops as _ops  # noqa: F401  (registers backends)
+
+Pytree = Any
+
+
+def copy(x: jax.Array, *, nitem: int | None = None,
+         backend: str | None = None) -> jax.Array:
+    """Bandwidth-ceiling tiled copy (paper Fig. 1)."""
+    return ki.resolve_impl("copy", backend)(x, nitem=nitem)
+
+
+def scan(op: alg.AssocOp, xs: Pytree, *, axis: int = 0,
+         inclusive: bool = True, reverse: bool = False,
+         backend: str | None = None) -> Pytree:
+    """Single-pass prefix scan with any associative ``op`` (paper §V-B).
+
+    ``op`` need not be commutative (quaternions, affine maps, 2x2 matrices);
+    element types are arbitrary pytrees of arrays with matching shapes.
+    """
+    return ki.resolve_impl("scan", backend)(
+        op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
+
+
+def mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *, axis=None,
+              backend: str | None = None) -> Pytree:
+    """``op``-reduction of ``f(x)`` (paper §V-A). ``op`` must be commutative."""
+    return ki.resolve_impl("mapreduce", backend)(f, op, xs, axis=axis)
+
+
+def semiring_matvec(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
+                    backend: str | None = None) -> Pytree:
+    """y[j] = op_i f(x[i], A[i, j]) for any semiring (paper §V-C)."""
+    return ki.resolve_impl("matvec", backend)(semiring.f, semiring.op, A, x)
+
+
+def semiring_vecmat(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
+                    backend: str | None = None) -> Pytree:
+    """z[i] = op_j f(A[i, j], x[j]) for any semiring (paper §V-C)."""
+    return ki.resolve_impl("vecmat", backend)(semiring.f, semiring.op, A, x)
+
+
+def matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
+           backend: str | None = None) -> Pytree:
+    return ki.resolve_impl("matvec", backend)(f, op, A, x)
+
+
+def vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
+           backend: str | None = None) -> Pytree:
+    return ki.resolve_impl("vecmat", backend)(f, op, A, x)
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
+                      *, reverse: bool = False,
+                      backend: str | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C) inputs.
+
+    The model-facing specialization of ``scan`` with the AFFINE operator --
+    the compute core of RG-LRU (recurrentgemma) and mLSTM inter-chunk state
+    propagation (xlstm).
+    """
+    return ki.resolve_impl("linear_recurrence", backend)(
+        a, b, h0=h0, reverse=reverse)

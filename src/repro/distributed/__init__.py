@@ -1,0 +1,1 @@
+"""Distribution layer: sharding policy, collectives, pipeline."""

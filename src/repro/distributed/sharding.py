@@ -1,0 +1,274 @@
+"""Sharding policy: logical-axis rules + per-parameter PartitionSpecs.
+
+Fixed production mesh axes: ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod; ``dp = ("pod","data")`` carries
+batch + FSDP, ``model`` carries TP / SP / EP.
+
+Per-arch policy (DESIGN.md §5):
+
+* **TP** (Megatron) when ``n_heads % |model| == 0``: attention heads +
+  d_ff + vocab on ``model``; residual stream replicated along seq.
+* **SP** otherwise (gemma3 H=8, minitron H=24, dscoder H=56, rg H=10,
+  xlstm H=4): the residual stream is sharded along *seq* on ``model``;
+  attention/MLP weights that cannot shard on heads become pure ZeRO-3
+  (sharded over dp x model jointly, gathered at use); d_ff stays TP.
+* **EP**: experts on ``model`` in all cases.
+* **FSDP/ZeRO**: every parameter additionally shards its non-TP major axis
+  over dp; optimizer state inherits parameter specs.
+
+Activation rules are consumed by ``models.layers.shard`` via logical names;
+parameter specs are derived structurally from pytree paths + shapes.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _div(n: int, k: int) -> bool:
+    return n > 0 and n % k == 0
+
+
+def make_rules(cfg, mesh: Mesh | None) -> dict | None:
+    """Logical-axis -> mesh-axis rules for activations (None = unsharded)."""
+    if mesh is None:
+        return None
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    dp = dp_axes(mesh)
+    tp = _div(cfg.n_heads, m)
+    rules = {
+        "_dp": dp,
+        "_tp": tp,
+        "batch": dp,
+        "heads": "model" if tp else None,
+        "kv_heads": "model" if (tp and _div(cfg.n_kv_heads, m)) else None,
+        "seq_sp": None if tp else "model",
+        "ffn": "model",
+        "ffn_inner": None,
+        "experts": "model",
+        "vocab": "model" if (tp and _div(cfg.vocab_size, m)) else None,
+        # Recurrent-width activations stay unsharded on model: the rnn archs
+        # (rg H=10, xlstm H=4) are SP archs, so seq carries the model axis.
+        "rnn": None,
+        # Decode: when KV heads cannot shard on model, shard the cache's
+        # *sequence* axis instead and merge partial softmaxes across the
+        # axis (flash-decoding, distributed/collectives.py).  MLA caches are
+        # compressed (no head axis) and always sequence-shard at decode.
+        "_mesh": mesh,
+        "decode_kv_shard": not (tp and _div(cfg.n_kv_heads, m)),
+        "decode_mla_shard": True,
+        # shard_map EP (zero-collective dispatch) needs experts divisible by
+        # the model axis and a model-replicated residual stream (TP archs).
+        "moe_shard_map": tp and _div(cfg.n_experts, m),
+    }
+    if os.environ.get("REPRO_BASELINE"):
+        # Paper-faithful baseline lowering (EXPERIMENTS.md §Perf "before"):
+        # replicated decode caches, GSPMD capacity-MoE dispatch.
+        rules["decode_kv_shard"] = False
+        rules["decode_mla_shard"] = False
+        rules["moe_shard_map"] = False
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (structural, path + shape based)
+# ---------------------------------------------------------------------------
+
+
+def _zero3(shape, axis, dp, m, sizes):
+    """Spec sharding ``axis`` of ``shape`` over dp (+model when divisible)."""
+    total_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    full = total_dp * sizes.get("model", 1)
+    spec = [None] * len(shape)
+    if _div(shape[axis], full):
+        spec[axis] = tuple(dp) + ("model",)
+    elif _div(shape[axis], total_dp):
+        spec[axis] = tuple(dp)
+    return P(*spec)
+
+
+def _dp_spec(shape, axis, dp, sizes):
+    total_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    spec = [None] * len(shape)
+    if _div(shape[axis], total_dp):
+        spec[axis] = tuple(dp)
+    return P(*spec)
+
+
+def param_spec(path: str, shape: tuple, cfg, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path."""
+    _parts = path.split("/")
+    if "units" in _parts:
+        # Stacked scan-over-layers params: leading n_units axis is never
+        # sharded; spec the per-layer shape and prepend None.
+        _parts.remove("units")
+        inner = param_spec("/".join(_parts), shape[1:], cfg, mesh)
+        return P(*((None,) + tuple(inner)))
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    dp = dp_axes(mesh)
+    tp = _div(cfg.n_heads, m)
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def dpax(axis):
+        return _dp_spec(shape, axis, dp, sizes)
+
+    def z3(axis):
+        return _zero3(shape, axis, dp, m, sizes)
+
+    if name == "embedding":                       # (V, D)
+        v_ok = _div(shape[0], m)
+        return P("model" if v_ok else None,
+                 dp if _div(shape[1], int(np.prod([sizes[a] for a in dp]))) else None)
+    if name == "unembed":                         # (D, V)
+        return P(dp, "model" if _div(shape[1], m) else None)
+    if "mixer" in path and name in ("wq", "wk", "wv") and nd == 3:
+        # Block-diagonal mixer weights (H, p, p): shard block dims.
+        total_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+        return P(None,
+                 dp if _div(shape[1], total_dp) else None,
+                 "model" if _div(shape[2], m) else None)
+    if name in ("wq", "wk", "wv") and nd == 3:    # (D, H, hd)
+        h_ok = _div(shape[1], m)
+        return P(dp, "model", None) if h_ok else z3(0)
+    if name == "wo" and nd == 3:                  # (H, hd, D)
+        h_ok = _div(shape[0], m)
+        return P("model", None, dp) if h_ok else z3(2)
+    if name in ("w_uq", "w_uk", "w_uv") and nd == 3:  # (r, H, k) -- MLA
+        return P(None, "model" if _div(shape[1], m) else None, None)
+    if name in ("w_dq", "w_dkv") and nd == 2:     # (D, r)
+        return dpax(0)
+    if "moe" in path and name in ("w_in", "w_gate", "w_out") and nd == 3:
+        # (E, D, F) / (E, F, D): expert parallelism on model.
+        e_ok = _div(shape[0], m)
+        if name == "w_out":
+            return P("model" if e_ok else None, None, dp)
+        return P("model" if e_ok else None, dp, None)
+    if name == "w_in" and nd == 3:                # slstm (D, 4, D)
+        return P(dp, None, "model" if _div(shape[2], m) else None)
+    if name in ("w_in", "w_gate", "w_up", "wx", "wy") and nd == 2:  # (D, F)
+        return P(dp, "model" if _div(shape[1], m) else None)
+    if name in ("w_out", "w_down", "wo") and nd == 2:               # (F, D)
+        return P("model" if _div(shape[0], m) else None, dp)
+    if name == "router":
+        return dpax(0)
+    if name == "kernel" and nd == 2:              # conv (W, C)
+        return P(None, "model" if _div(shape[1], m) else None)
+    if name == "proj" and nd == 2:                # mtp proj (2D, D)
+        return dpax(0)
+    if name in ("vr", "vc"):                      # adafactor factored moments
+        return dpax(0) if nd >= 1 else P()
+    if name == "r" or nd <= 1:                    # blockdiag / scales / biases
+        return P()
+    if nd >= 2:                                   # fallback: FSDP on axis 0
+        return dpax(0)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Pytree, cfg, mesh: Mesh) -> Pytree:
+    """Tree of PartitionSpecs matching a params (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.shape, cfg, mesh),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape: dict, cfg, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        spec = [None] * len(v.shape)
+        sizes = mesh_axis_sizes(mesh)
+        total_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+        if _div(v.shape[0], total_dp):
+            spec[0] = dp
+        out[k] = P(*spec)
+    return out
+
+
+def cache_spec(path: str, shape: tuple, cfg, mesh: Mesh) -> P:
+    """Decode-cache sharding: batch over dp; kv-heads on model when legal."""
+    parts = path.split("/")
+    if "units" in parts:
+        # Stacked scan-over-layers caches: skip the leading n_units axis.
+        parts.remove("units")
+        inner = cache_spec("/".join(parts), shape[1:], cfg, mesh)
+        return P(*((None,) + tuple(inner)))
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    dp = dp_axes(mesh)
+    total_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    tp = _div(cfg.n_heads, m)
+    name = path.split("/")[-1]
+    b_ok = _div(shape[0], total_dp)
+    b = dp if b_ok else None
+    nd = len(shape)
+    baseline = bool(os.environ.get("REPRO_BASELINE"))
+    if name in ("k", "v") and nd == 4:            # (B, L, K, hd)
+        kv_ok = tp and _div(shape[2], m)
+        if kv_ok:
+            return P(b, None, "model", None)
+        if baseline:                              # replicated over model
+            return P(b, None, None, None)
+        # Flash-decoding layout: sequence axis sharded over model.
+        return P(b, "model" if _div(shape[1], m) else None, None, None)
+    if name in ("ckv", "krope") and nd == 3:      # (B, L, r) -- MLA
+        # Compressed caches are small; seq-sharding them measured as a
+        # regression at decode (EXPERIMENTS.md §Perf) -- keep replicated.
+        return P(b, None, None)
+    if name == "C" and nd == 4:                   # (B, H, dk, dv) -- mlstm
+        return P(b, "model" if _div(shape[1], m) else None, None, None)
+    if name in ("n",) and nd == 3:
+        return P(b, "model" if _div(shape[1], m) else None, None)
+    if name in ("h", "c", "m") and nd == 2:       # (B, w)
+        return P(b, "model" if _div(shape[1], m) else None)
+    if name == "conv" and nd == 3:                # (B, W-1, C)
+        return P(b, None, "model" if _div(shape[2], m) else None)
+    if nd >= 1 and b_ok:
+        return P(*([b] + [None] * (nd - 1)))
+    return P()
+
+
+def cache_specs(cache_shape: Pytree, cfg, mesh: Mesh) -> Pytree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(_path_str(path), leaf.shape, cfg, mesh),
+        cache_shape)
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the KernelForge primitives.
+
+Each kernel module provides ``<name>_pallas`` (pl.pallas_call + BlockSpec
+VMEM tiling); ``ops.py`` holds the jit-ready wrappers + backend registration;
+``ref.py`` the pure-jnp oracles used by the test suite.
+"""

@@ -1,0 +1,42 @@
+"""Vectorized copy kernel (paper Fig. 1): the practical bandwidth ceiling.
+
+Each grid step moves ``Nitem`` aligned (sublane, 128) tiles HBM->VMEM->HBM.
+The ``nitem`` parameter is the paper's items-per-thread: larger blocks
+amortize grid overhead until VMEM pressure wins -- the benchmark sweeps it
+exactly like Fig. 1 sweeps 1/4/8 items.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import intrinsics as ki
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def copy_pallas(x: jax.Array, *, nitem: int | None = None,
+                policy: ki.TuningPolicy | None = None,
+                interpret: bool = False) -> jax.Array:
+    policy = policy or ki.resolve_tuning("interpret" if interpret else None)
+    nitem = nitem or policy.nitem_copy
+    n = x.shape[0]
+    sub = ki.min_tile(x.dtype)[0]
+    block = nitem * sub * ki.LANES
+    grid = ki.cdiv(n, block)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda g: (g,))],
+        out_specs=pl.BlockSpec((block,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

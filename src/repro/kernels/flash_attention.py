@@ -1,0 +1,134 @@
+"""Fused causal attention kernel (Pallas TPU): the §Perf memory-term fix.
+
+The portable XLA lowering of blockwise attention (models/attention.py) is
+*algorithmically* flash but still materializes each [S, kv_block] score tile
+in HBM -- O(S*T) traffic that dominates the memory roofline term of the dense
+archs (EXPERIMENTS.md §Perf).  This kernel keeps the running (m, l, acc)
+entirely in VMEM scratch across the sequential kv-block grid dimension, so
+HBM traffic is exactly q + k + v read (+ k,v re-read per q block) + out
+written -- the same 2n-style structural bound the paper's scan enjoys.
+
+Layout: q/k/v flattened to (N, S, d) with N = batch x heads (the wrapper
+broadcasts grouped KV); grid = (N, q_blocks, kv_blocks), kv innermost
+("arbitrary" = sequential, the carry dimension -- decoupled-lookback's TPU
+form again).  Causal/windowed masking via global indices; optional softcap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import intrinsics as ki
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(scale, causal, window, softcap, q_len, kv_len, qb, kb,
+                  q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (qb, d)
+    k = k_ref[0]                       # (kb, d)
+    # Ragged-tail hygiene: OOB kv rows read garbage; zero them so masked
+    # probabilities (p == 0) cannot meet NaN in the p @ v product.
+    kv_valid = (kj * kb + jax.lax.broadcasted_iota(
+        jnp.int32, (kb, 1), 0)) < kv_len
+    k = jnp.where(kv_valid, k, 0)
+    v = jnp.where(kv_valid, v_ref[0], 0)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (qb, kb)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    kpos = kj * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    mask = (kpos < kv_len) & (qpos < q_len)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                # (qb, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, softcap=0.0,
+                           q_block=256, kv_block=256, interpret=False):
+    """q: (N, S, d); k, v: (N, T, d) -> (N, S, d).  d padded to 128 lanes."""
+    N, S, d = q.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    d_pad = ki.round_up(d, ki.LANES)
+    if d_pad != d:
+        pad = [(0, 0), (0, 0), (0, d_pad - d)]
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+    qb = min(q_block, ki.round_up(S, 8))
+    kb = min(kv_block, ki.round_up(T, 8))
+    grid = (N, ki.cdiv(S, qb), ki.cdiv(T, kb))
+
+    kernel = functools.partial(
+        _flash_kernel, scale, causal, window, softcap, S, T, qb, kb)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, d_pad), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, kb, d_pad), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, kb, d_pad), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, d_pad), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, S, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, d_pad), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[..., :d] if d_pad != d else out
+
+
+def flash_attention_bytes(N, S, T, d, dtype, q_block=256, kv_block=256):
+    """Structural HBM traffic: q + out once, k/v once per q block."""
+    sz = jnp.dtype(dtype).itemsize
+    d_pad = ki.round_up(d, ki.LANES)
+    nq = ki.cdiv(S, min(q_block, ki.round_up(S, 8)))
+    q_bytes = N * S * d_pad * sz
+    kv_bytes = 2 * N * nq * ki.round_up(T, 8) * d_pad * sz
+    out_bytes = N * S * d_pad * sz
+    return q_bytes + kv_bytes + out_bytes
+
+
+def flash_attention_flops(N, S, T, d, causal=True):
+    f = 4.0 * N * S * T * d
+    return f / 2 if causal else f

@@ -1,0 +1,282 @@
+"""Generalized semiring matrix-vector / vector-matrix kernels (paper §V-C).
+
+``matvec``:  y[j] = op_{i=1..n} f(x[i], A[i, j])   (reduce over rows)
+``vecmat``:  z[i] = op_{j=1..p} f(A[i, j], x[j])   (reduce over columns)
+
+for *any* elementwise map ``f`` and associative (not necessarily commutative)
+reduce ``op`` -- subsuming BLAS GEMV (f=*, op=+), tropical semirings and
+log-space accumulation, for arbitrary element types.
+
+TPU adaptation: the paper's two thread organizations (tall: fixed-grid block
+striding per column; wide: warps covering column groups with row strides,
+Fig. 2) become BlockSpec layouts.  Rows ride sublanes and columns ride lanes
+in both orientations -- the *reduction axis* changes, not the storage layout:
+
+* matvec reduces along sublanes (in-order log-step fold per tile, carried
+  across row-tiles by accumulating into the resident output block);
+* vecmat reduces along lanes the same way.
+
+The output block is used as the accumulator: it stays VMEM-resident while the
+inner (reduction) grid dimension advances and is flushed to HBM exactly once
+when the outer index changes -- the single-launch / one-write-per-element
+property of the paper's flag protocol, obtained from the sequential grid.
+
+Tall/wide block-shape selection happens in ops.py from the TuningPolicy
+(the ``A40 <: Ampere`` dispatch analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import intrinsics as ki
+
+Pytree = Any
+
+
+def _out_struct(f, x_like, a_like):
+    out = jax.eval_shape(lambda xx, aa: f(xx, aa), x_like, a_like)
+    return jax.tree.flatten(out)
+
+
+def _matvec_kernel(f, op, out_treedef, n, rn, n_out, *refs):
+    x_ref, a_ref = refs[0], refs[1]
+    o_refs = refs[2:]
+    i = pl.program_id(1)
+    cp = a_ref.shape[1]
+
+    acc_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((1, cp), r.dtype) for r in o_refs])
+    ident_acc = op.identity(acc_like)
+
+    @pl.when(i == 0)
+    def _init():
+        for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
+            orf[...] = ia
+
+    x = x_ref[...]            # (rn, 1)
+    a = a_ref[...]            # (rn, cp)
+    v = f(x, a)               # pytree of (rn, cp)
+
+    tile_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((rn, cp), r.dtype) for r in o_refs])
+    ident_tile = op.identity(tile_like)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (rn, cp), 0)
+    valid = (i * rn + ridx) < n
+    v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
+
+    part = ki.tile_reduce(op, v, axis=0)        # (1, cp), in-order
+    acc = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+    acc = op(acc, part)
+    for orf, l in zip(o_refs, jax.tree.leaves(acc)):
+        orf[...] = l
+
+
+def matvec_pallas(f, op, A: jax.Array, x: jax.Array, *,
+                  block_rows: int, block_cols: int,
+                  interpret: bool = False) -> Pytree:
+    """y[j] = op_i f(x[i], A[i, j]).  A: (n, p), x: (n,) -> y: (p,) pytree."""
+    n, p = A.shape
+    rn = block_rows
+    cp = block_cols
+    out_leaves, out_treedef = _out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), x.dtype),
+        jax.ShapeDtypeStruct((1, 1), A.dtype))
+
+    grid = (ki.cdiv(p, cp), ki.cdiv(n, rn))
+    kernel = functools.partial(
+        _matvec_kernel, f, op, out_treedef, n, rn, len(out_leaves))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rn, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((rn, cp), lambda j, i: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((1, cp), lambda j, i: (0, j))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((1, p), l.dtype) for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(n, 1), A)
+    return jax.tree.unflatten(out_treedef, [o.reshape(p) for o in out])
+
+
+def _matvec_packed_kernel(f, op, out_treedef, n, p, g, rn, *refs):
+    """Tall-narrow matvec with lane packing (p <= 64).
+
+    The naive layout pads p columns to 128 lanes (12x waste at p=10,
+    EXPERIMENTS.md §Kernel).  Here ``g = 128 // p`` row-groups ride the
+    lanes: A is viewed (free, row-major) as (n/g, g*p); each lane column
+    (r, j) accumulates rows i ≡ r (mod g) of original column j, and the
+    final combine folds the g group partials -- order-preserved via the
+    in-order tile fold, so non-commutative ops stay correct.
+    """
+    x_ref, a_ref = refs[0], refs[1]
+    o_refs = refs[2:]
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+    w = g * p
+
+    acc_like = jax.tree.unflatten(
+        out_treedef, [jax.ShapeDtypeStruct((1, w), r.dtype) for r in o_refs])
+    ident_acc = op.identity(acc_like)
+
+    # o_refs double as accumulators (resident across the sequential grid);
+    # the final group-fold happens on the last grid step.
+    @pl.when(i == 0)
+    def _init():
+        for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
+            orf[...] = ia
+
+    x = x_ref[...]            # (rn, g)  packed rows
+    a = a_ref[...]            # (rn, w)
+    xw = jnp.repeat(x, p, axis=1)          # broadcast x across its p columns
+    v = f(xw, a)              # pytree of (rn, w)
+
+    tile_like = jax.tree.unflatten(
+        out_treedef, [jax.ShapeDtypeStruct((rn, w), r.dtype) for r in o_refs])
+    ident_tile = op.identity(tile_like)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (rn, w), 0)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (rn, w), 1)
+    # Global original row of element (r_local, lane) = (i*rn + r_local)*g + lane//p
+    grow = (i * rn + ridx) * g + cidx // p
+    v = jax.tree.map(lambda l, id_: jnp.where(grow < n, l, id_),
+                     v, ident_tile)
+
+    part = ki.tile_reduce(op, v, axis=0)   # (1, w)
+    acc = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+    acc = op(acc, part)
+    for orf, l in zip(o_refs, jax.tree.leaves(acc)):
+        orf[...] = l
+
+    @pl.when(i == ni - 1)
+    def _fold_groups():
+        accf = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+        folded = jax.tree.map(lambda l: l.reshape(g, p), accf)
+        folded = ki.tile_reduce(op, folded, axis=0)          # (1, p), in-order
+        for orf, l in zip(o_refs, jax.tree.leaves(folded)):
+            orf[...] = jnp.pad(l, ((0, 0), (0, w - p)),
+                               constant_values=0).astype(orf.dtype) \
+                if w != p else l
+
+
+def matvec_packed_pallas(f, op, A: jax.Array, x: jax.Array, *,
+                         block_rows: int, interpret: bool = False):
+    """Lane-packed tall-narrow matvec: y[j] = op_i f(x[i], A[i, j]), p <= 64."""
+    n, p = A.shape
+    g = max(ki.LANES // p, 1)
+    w = g * p
+    tail = None
+    if n % g:
+        # Slice (free, row-major view) instead of padding (full copy): the
+        # <= g-1 tail rows fold in afterwards -- op is commutative here.
+        nb = (n // g) * g
+        tail = (A[nb:], x[nb:])
+        A, x, n = A[:nb], x[:nb], nb
+    ng = n // g
+    rn = min(block_rows, ki.round_up(ng, 8))
+    out_leaves, out_treedef = _out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), x.dtype),
+        jax.ShapeDtypeStruct((1, 1), A.dtype))
+
+    grid = (ki.cdiv(ng, rn),)
+    kernel = functools.partial(
+        _matvec_packed_kernel, f, op, out_treedef, n, p, g, rn)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rn, g), lambda i: (i, 0)),
+            pl.BlockSpec((rn, w), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, w), lambda i: (0, 0))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((1, w), l.dtype) for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x.reshape(ng, g), A.reshape(ng, w))
+    result = jax.tree.unflatten(out_treedef, [o[0, :p] for o in out])
+    if tail is not None:
+        a_t, x_t = tail
+        vals = f(x_t[:, None], a_t)
+        from repro.core import intrinsics as _ki
+        t_red = _ki.tile_reduce(op, vals, axis=0)
+        t_red = jax.tree.map(lambda l: l[0], t_red)
+        result = op(result, t_red)
+    return result
+
+
+def _vecmat_kernel(f, op, out_treedef, p, cj, n_out, *refs):
+    x_ref, a_ref = refs[0], refs[1]
+    o_refs = refs[2:]
+    j = pl.program_id(1)
+    ri = a_ref.shape[0]
+
+    acc_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((ri, 1), r.dtype) for r in o_refs])
+    ident_acc = op.identity(acc_like)
+
+    @pl.when(j == 0)
+    def _init():
+        for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
+            orf[...] = ia
+
+    x = x_ref[...]            # (1, cj)
+    a = a_ref[...]            # (ri, cj)
+    v = f(a, x)               # pytree of (ri, cj)
+
+    tile_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((ri, cj), r.dtype) for r in o_refs])
+    ident_tile = op.identity(tile_like)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (ri, cj), 1)
+    valid = (j * cj + cidx) < p
+    v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
+
+    part = ki.tile_reduce(op, v, axis=1)        # (ri, 1), in-order
+    acc = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+    acc = op(acc, part)
+    for orf, l in zip(o_refs, jax.tree.leaves(acc)):
+        orf[...] = l
+
+
+def vecmat_pallas(f, op, A: jax.Array, x: jax.Array, *,
+                  block_rows: int, block_cols: int,
+                  interpret: bool = False) -> Pytree:
+    """z[i] = op_j f(A[i, j], x[j]).  A: (n, p), x: (p,) -> z: (n,) pytree."""
+    n, p = A.shape
+    ri = block_rows
+    cj = block_cols
+    out_leaves, out_treedef = _out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), A.dtype),
+        jax.ShapeDtypeStruct((1, 1), x.dtype))
+
+    grid = (ki.cdiv(n, ri), ki.cdiv(p, cj))
+    kernel = functools.partial(
+        _vecmat_kernel, f, op, out_treedef, p, cj, len(out_leaves))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cj), lambda i, j: (0, j)),
+            pl.BlockSpec((ri, cj), lambda i, j: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((ri, 1), lambda i, j: (i, 0))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), l.dtype) for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(1, p), A)
+    return jax.tree.unflatten(out_treedef, [o.reshape(n) for o in out])

@@ -1,0 +1,281 @@
+"""jit-ready wrappers + backend registration for every kernel.
+
+This module is the "package extension" of the two-layer design: it registers
+each primitive's implementations with the Layer-1 dispatch registry
+(``core.intrinsics``) under three backends:
+
+* ``pallas-tpu``       -- the Pallas kernels, compiled by Mosaic (TARGET);
+* ``pallas-interpret`` -- the same kernel bodies executed in Python on CPU
+                          (correctness validation of the TPU path);
+* ``xla``              -- portable pure-XLA fallbacks (used by the CPU
+                          dry-run; also the baseline the benchmarks compare
+                          bytes-moved against).
+
+The algorithmic layer (``core.primitives``) never names a backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.kernels import copy as copy_k
+from repro.kernels import mapreduce as mapreduce_k
+from repro.kernels import matvec as matvec_k
+from repro.kernels import ref
+from repro.kernels import scan as scan_k
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# copy
+# ---------------------------------------------------------------------------
+
+ki.register_impl("copy", "pallas-tpu")(
+    functools.partial(copy_k.copy_pallas, interpret=False))
+ki.register_impl("copy", "pallas-interpret")(
+    functools.partial(copy_k.copy_pallas, interpret=True))
+
+
+@ki.register_impl("copy", "xla")
+def _copy_xla(x, *, nitem=None, policy=None):
+    return jnp.copy(x)
+
+
+# ---------------------------------------------------------------------------
+# scan
+# ---------------------------------------------------------------------------
+
+
+def _scan_pallas(op, xs, *, axis=0, inclusive=True, reverse=False,
+                 interpret=False, policy=None):
+    leaves = jax.tree.leaves(xs)
+    ndim = leaves[0].ndim
+    if ndim == 1:
+        if reverse:
+            xs = jax.tree.map(lambda l: jnp.flip(l, 0), xs)
+        out = scan_k.scan_1d_pallas(op, xs, inclusive=inclusive,
+                                    policy=policy, interpret=interpret)
+        if reverse:
+            out = jax.tree.map(lambda l: jnp.flip(l, 0), out)
+        return out
+    if ndim == 3 and axis == 1:
+        return scan_k.scan_channel_pallas(
+            op, xs, inclusive=inclusive, reverse=reverse, policy=policy,
+            interpret=interpret)
+    # Other layouts: normalize to (B, T, C) via moveaxis (metadata-only when
+    # already contiguous along the scan axis).
+    if ndim == 2:
+        xs3 = jax.tree.map(lambda l: jnp.moveaxis(l, axis, 1)[:, :, None], xs)
+        out = scan_k.scan_channel_pallas(
+            op, xs3, inclusive=inclusive, reverse=reverse, policy=policy,
+            interpret=interpret)
+        return jax.tree.map(lambda l: jnp.moveaxis(l[:, :, 0], 1, axis), out)
+    # >=3D general axis: flatten around the scan axis.
+    def to3(l):
+        l = jnp.moveaxis(l, axis, 1)
+        lead = l.shape[0]
+        t = l.shape[1]
+        rest = int(np_prod(l.shape[2:])) if l.ndim > 2 else 1
+        return l.reshape(lead, t, rest), l.shape
+
+    shapes = [to3(l)[1] for l in leaves]
+    xs3 = jax.tree.map(lambda l: to3(l)[0], xs)
+    out = scan_k.scan_channel_pallas(
+        op, xs3, inclusive=inclusive, reverse=reverse, policy=policy,
+        interpret=interpret)
+    outs = [l.reshape(s) for l, s in zip(jax.tree.leaves(out), shapes)]
+    outs = [jnp.moveaxis(l, 1, axis) for l in outs]
+    return jax.tree.unflatten(jax.tree.structure(xs), outs)
+
+
+def np_prod(t):
+    r = 1
+    for v in t:
+        r *= int(v)
+    return r
+
+
+ki.register_impl("scan", "pallas-tpu")(
+    functools.partial(_scan_pallas, interpret=False))
+ki.register_impl("scan", "pallas-interpret")(
+    functools.partial(_scan_pallas, interpret=True))
+
+
+@ki.register_impl("scan", "xla")
+def _scan_xla(op, xs, *, axis=0, inclusive=True, reverse=False, policy=None):
+    return ref.ref_scan(op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# mapreduce
+# ---------------------------------------------------------------------------
+
+
+def _mapreduce_pallas(f, op, xs, *, axis=None, interpret=False, policy=None):
+    leaves = jax.tree.leaves(xs)
+    ndim = leaves[0].ndim
+    if axis is None:
+        flat = jax.tree.map(lambda l: l.reshape(-1), xs)
+        return mapreduce_k.mapreduce_1d_pallas(
+            f, op, flat, policy=policy, interpret=interpret)
+    if ndim == 2 and isinstance(xs, jax.Array):
+        policy_ = policy or ki.resolve_tuning("interpret" if interpret else None)
+        sub = ki.min_tile(xs.dtype)[0]
+        n, p = xs.shape
+        if axis == 0:
+            # Reduce over rows -> one value per column: the matvec path
+            # (paper §V-A dispatches 2-D mapreduce to the matvec kernels).
+            dummy = jnp.zeros((n, 1), xs.dtype)
+            return matvec_k.matvec_pallas(
+                lambda _x, a: f(a), op, xs, dummy[:, 0],
+                block_rows=policy_.matvec_rows * sub,
+                block_cols=policy_.matvec_cols * ki.LANES,
+                interpret=interpret)
+        dummy = jnp.zeros((p,), xs.dtype)
+        return matvec_k.vecmat_pallas(
+            lambda a, _x: f(a), op, xs, dummy,
+            block_rows=policy_.vecmat_rows * sub,
+            block_cols=policy_.vecmat_cols * ki.LANES,
+            interpret=interpret)
+    raise NotImplementedError("mapreduce: pallas path supports axis=None or 2D")
+
+
+ki.register_impl("mapreduce", "pallas-tpu")(
+    functools.partial(_mapreduce_pallas, interpret=False))
+ki.register_impl("mapreduce", "pallas-interpret")(
+    functools.partial(_mapreduce_pallas, interpret=True))
+
+
+@ki.register_impl("mapreduce", "xla")
+def _mapreduce_xla(f, op, xs, *, axis=None, policy=None):
+    # Fast paths for the standard algebra (XLA reductions); generic fallback
+    # via associative_scan otherwise.
+    direct = {"add": jnp.sum, "mul": jnp.prod, "max": jnp.max, "min": jnp.min}
+    vals = f(xs)
+    if op.name in direct and isinstance(vals, jax.Array):
+        return direct[op.name](vals, axis=axis)
+    if op.name == "logsumexp" and isinstance(vals, jax.Array):
+        return jax.scipy.special.logsumexp(vals, axis=axis)
+    return ref.ref_mapreduce(f, op, xs, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# semiring matvec / vecmat
+# ---------------------------------------------------------------------------
+
+
+def _pick_blocks_matvec(policy, A, n, p):
+    sub = ki.min_tile(A.dtype)[0]
+    rn = policy.matvec_rows * sub
+    cp = policy.matvec_cols * ki.LANES
+    if p <= ki.LANES:                      # tall-narrow: stride more rows
+        cp = ki.LANES
+        rn = rn * 4
+    elif n <= 8 * sub:                     # wide-short: widen columns
+        cp = cp * 4
+    rn = min(rn, ki.round_up(n, sub))
+    cp = min(cp, ki.round_up(p, ki.LANES))
+    return rn, cp
+
+
+def _pick_blocks_vecmat(policy, A, n, p):
+    sub = ki.min_tile(A.dtype)[0]
+    ri = policy.vecmat_rows * sub
+    cj = policy.vecmat_cols * ki.LANES
+    if n <= 8:                              # short: widen columns
+        cj = cj * 4
+    elif p <= ki.LANES:                     # narrow: more rows
+        ri = ri * 4
+    ri = min(ri, ki.round_up(n, sub))
+    cj = min(cj, ki.round_up(p, ki.LANES))
+    return ri, cj
+
+
+def _matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
+    policy = policy or ki.resolve_tuning("interpret" if interpret else None)
+    n, p = A.shape
+    if p <= 64 and n >= 4 * ki.LANES and getattr(op, "commutative", False):
+        # Tall-narrow: lane-packed kernel (EXPERIMENTS.md §Kernel gap fix) --
+        # g = 128//p row groups share the lanes instead of padding p to 128.
+        # Commutative-only: groups interleave rows (i -> group i mod g).
+        return matvec_k.matvec_packed_pallas(
+            f, op, A, x, block_rows=policy.matvec_rows * ki.min_tile(A.dtype)[0],
+            interpret=interpret)
+    rn, cp = _pick_blocks_matvec(policy, A, n, p)
+    return matvec_k.matvec_pallas(f, op, A, x, block_rows=rn, block_cols=cp,
+                                  interpret=interpret)
+
+
+def _vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
+    policy = policy or ki.resolve_tuning("interpret" if interpret else None)
+    n, p = A.shape
+    ri, cj = _pick_blocks_vecmat(policy, A, n, p)
+    return matvec_k.vecmat_pallas(f, op, A, x, block_rows=ri, block_cols=cj,
+                                  interpret=interpret)
+
+
+ki.register_impl("matvec", "pallas-tpu")(
+    functools.partial(_matvec_pallas, interpret=False))
+ki.register_impl("matvec", "pallas-interpret")(
+    functools.partial(_matvec_pallas, interpret=True))
+ki.register_impl("vecmat", "pallas-tpu")(
+    functools.partial(_vecmat_pallas, interpret=False))
+ki.register_impl("vecmat", "pallas-interpret")(
+    functools.partial(_vecmat_pallas, interpret=True))
+
+
+@ki.register_impl("matvec", "xla")
+def _matvec_xla(f, op, A, x, *, policy=None):
+    if op.name == "add" and _is_arithmetic(f, x, A):
+        # Standard semiring -> MXU-friendly contraction.
+        return jnp.einsum("n,np->p", x, A)
+    return ref.ref_matvec(f, op, A, x)
+
+
+@ki.register_impl("vecmat", "xla")
+def _vecmat_xla(f, op, A, x, *, policy=None):
+    if op.name == "add" and _is_arithmetic(f, x, A):
+        return jnp.einsum("np,p->n", A, x)
+    return ref.ref_vecmat(f, op, A, x)
+
+
+def _is_arithmetic(f, x, A):
+    """Detect f == multiply by probing on tiny concrete values."""
+    try:
+        a = f(jnp.asarray(3.0, x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32),
+              jnp.asarray(5.0, A.dtype if jnp.issubdtype(A.dtype, jnp.floating) else jnp.float32))
+        return isinstance(a, jax.Array) and a.shape == () and float(a) == 15.0
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# linear recurrence  h_t = a_t * h_{t-1} + b_t  on (B, T, C)
+# ---------------------------------------------------------------------------
+
+
+def _linrec_pallas(a, b, h0=None, *, reverse=False, interpret=False,
+                   policy=None):
+    A, B = scan_k.scan_channel_pallas(
+        alg.AFFINE, (a, b), inclusive=True, reverse=reverse, policy=policy,
+        interpret=interpret)
+    if h0 is None:
+        return B
+    return A * h0[:, None, :] + B
+
+
+ki.register_impl("linear_recurrence", "pallas-tpu")(
+    functools.partial(_linrec_pallas, interpret=False))
+ki.register_impl("linear_recurrence", "pallas-interpret")(
+    functools.partial(_linrec_pallas, interpret=True))
+
+
+@ki.register_impl("linear_recurrence", "xla")
+def _linrec_xla(a, b, h0=None, *, reverse=False, policy=None):
+    return ref.ref_linear_recurrence(a, b, h0=h0, axis=1, reverse=reverse)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel (the ``ref.py`` contract).
+
+These are deliberately written against independent JAX built-ins
+(``lax.associative_scan``, ``jnp`` reductions) rather than sharing tile code
+with the kernels, so that kernel-vs-ref agreement is a real check.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import operators as ops_alg
+
+Pytree = Any
+
+
+def ref_copy(x: jax.Array) -> jax.Array:
+    return jnp.copy(x)
+
+
+def ref_scan(op, xs: Pytree, axis: int = 0, inclusive: bool = True,
+             reverse: bool = False) -> Pytree:
+    """Inclusive/exclusive scan along ``axis`` with an arbitrary AssocOp."""
+    out = jax.lax.associative_scan(op.combine, xs, axis=axis, reverse=reverse)
+    if inclusive:
+        return out
+    # Exclusive: shift by one along axis, filling with the identity.
+    ident = op.identity(_take_slice(xs, axis, 0, 1))
+
+    def shift_leaf(o, i):
+        if reverse:
+            return jnp.concatenate([_slice_axis(o, axis, 1, None), i], axis=axis)
+        return jnp.concatenate([i, _slice_axis(o, axis, 0, -1)], axis=axis)
+
+    return jax.tree.map(shift_leaf, out, ident)
+
+
+def _slice_axis(l, axis, start, stop):
+    sl = [slice(None)] * l.ndim
+    sl[axis] = slice(start, stop)
+    return l[tuple(sl)]
+
+
+def _take_slice(xs, axis, start, stop):
+    return jax.tree.map(lambda l: _slice_axis(l, axis, start, stop), xs)
+
+
+def ref_mapreduce(f, op, xs: Pytree, axis=None) -> Pytree:
+    """op-reduce of f(x) over ``axis`` (None = all elements)."""
+    vals = f(xs)
+    if axis is None:
+        vals = jax.tree.map(lambda l: l.reshape(-1), vals)
+        axis = 0
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=axis)
+    return jax.tree.map(lambda l: jnp.take(l, l.shape[axis] - 1, axis=axis), scanned)
+
+
+def ref_matvec(f, op, A: jax.Array, x: jax.Array) -> Pytree:
+    """y[j] = op_i f(x[i], A[i, j]); A is (n, p), x is (n,)."""
+    vals = f(x[:, None], A)
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=0)
+    return jax.tree.map(lambda l: l[-1], scanned)
+
+
+def ref_vecmat(f, op, A: jax.Array, x: jax.Array) -> Pytree:
+    """z[i] = op_j f(A[i, j], x[j]); A is (n, p), x is (p,)."""
+    vals = f(A, x[None, :])
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=1)
+    return jax.tree.map(lambda l: l[:, -1], scanned)
+
+
+def ref_linear_recurrence(a: jax.Array, b: jax.Array, h0=None,
+                          axis: int = 1, reverse: bool = False) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along ``axis`` (h_{-1} = h0 or 0)."""
+    (A, B) = ref_scan(ops_alg.AFFINE, (a, b), axis=axis, reverse=reverse)
+    if h0 is None:
+        return B
+    h0 = jnp.expand_dims(h0, axis)
+    return A * h0 + B

@@ -1,0 +1,24 @@
+"""Production mesh construction (FUNCTION, not module constant -- importing
+this module never touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis carries
+data parallelism across the inter-pod (DCN-class) links and is the axis the
+optional pipeline-parallel mode stages over.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over however many (fake) devices exist -- tests only."""
+    n = n_devices or len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,1 @@
+"""Model blocks and wrappers for the 10 assigned architectures."""

@@ -1,0 +1,423 @@
+"""Attention: GQA (global / sliding-window), softcap, qk-norm, MLA, cross.
+
+Full-sequence paths use **blockwise attention** (lax.scan over KV blocks with
+running (m, l, acc) -- the flash pattern): at the assigned shapes (4k train /
+32k prefill) materializing S x S scores is impossible, so the online-softmax
+merge is load-bearing.  The merge algebra is exactly the core library's
+``SOFTMAX_MERGE`` operator (operators.py); the distributed decode combine in
+``repro.distributed.collectives`` reuses it across model-axis shards.
+
+Decode paths attend against fixed-shape caches: full-length for global
+layers, **ring buffers of window size** for local layers (which is what makes
+``long_500k`` decode O(window) instead of O(seq) for the hybrid archs).
+MLA decode runs in the *absorbed* compressed space (q is projected into the
+kv_lora latent; attention and value aggregation never expand per-head K/V) --
+the memory-bandwidth point of MLA.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+# Dry-run cost-accounting mode: fully unroll the KV-block loop so XLA's
+# cost_analysis (which counts while-loop bodies once) sees every block.
+# Production lowering keeps the rolled loop.  Set via repro.models.lm.
+KV_UNROLL = False
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention core
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, *, qpos, causal=True, window=0,
+                        softcap=0.0, kv_block=512, kv_len=None):
+    """q: (B,S,K,G,hd); k,v: (B,T,K,hd).  Returns (B,S,K,G,hd).
+
+    ``qpos``: (S,) absolute positions of queries.  ``window``>0 limits keys to
+    (qpos - kpos) < window.  ``kv_len``: actual valid key count (<= T).
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    kv_block = min(kv_block, T)
+    nb = (T + kv_block - 1) // kv_block
+    scale = 1.0 / np.sqrt(hd)
+    kv_len = T if kv_len is None else kv_len
+
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    def step(carry, kb):
+        m, l, acc = carry
+        start = kb * kv_block
+        ks = jax.lax.dynamic_slice_in_dim(k, start, kv_block, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, kv_block, axis=1)
+        s = jnp.einsum("bskgd,btkd->bskgt", qf, ks,
+                       preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = start + jnp.arange(kv_block)
+        mask = kpos[None, :] < kv_len
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window:
+            mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", p.astype(v.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, v.shape[-1]), jnp.float32)  # v head dim (MLA)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb),
+                                  unroll=nb if KV_UNROLL else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, key_valid, softcap=0.0):
+    """Single-step attention over a fixed cache.
+
+    q: (B,1,K,G,hd); caches: (B,L,K,hd); key_valid: (L,) or (B,L) bool.
+    """
+    B, _, K, G, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bskgd,btkd->bskgt", q.astype(jnp.float32) * scale,
+                   k_cache, preferred_element_type=jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if key_valid.ndim == 1:
+        mask = key_valid[None, None, None, None, :]
+    else:
+        mask = key_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (global or sliding-window)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg, dtype=jnp.float32):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, H, hd), 0, dtype),
+        "wk": L.dense_init(ks[1], (d, K, hd), 0, dtype),
+        "wv": L.dense_init(ks[2], (d, K, hd), 0, dtype),
+        "wo": L.dense_init(ks[3], (H, hd, d), (0, 1), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions, dtype, is_local=True):
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    theta = (cfg.rope_theta_global
+             if (not is_local and cfg.rope_theta_global) else cfg.rope_theta)
+    q = L.rope(q, positions, theta)
+    k = L.rope(k, positions, theta)
+    q = L.shard(q, "batch", "seq_sp", "heads", None)
+    k = L.shard(k, "batch", None, "kv_heads", None)
+    v = L.shard(v, "batch", None, "kv_heads", None)
+    return q.reshape(q.shape[0], q.shape[1], K, H // K, hd), k, v
+
+
+def gqa_forward(params, cfg, x, positions, *, is_local, causal=True,
+                return_cache_len=0):
+    """Full-sequence forward.  positions: (S,).  Returns (y, cache|None)."""
+    dtype = x.dtype
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions, dtype, is_local)
+    window = cfg.local_window if is_local else 0
+    out = blockwise_attention(
+        q, k, v, qpos=positions, causal=causal, window=window,
+        softcap=cfg.attn_softcap)
+    out = out.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    cache = None
+    if return_cache_len:
+        cache = _build_cache(k, v, return_cache_len, S, is_local, cfg)
+    return y, cache
+
+
+def _build_cache(k, v, cache_len, seq_len, is_local, cfg):
+    """Build a decode cache from prefill K/V (ring layout for local)."""
+    B, S, K, hd = k.shape
+    assert is_local or cache_len >= S, (
+        f"global-attention cache_len={cache_len} < prefill length {S}")
+    if is_local:
+        W = min(cache_len, cfg.local_window)
+        # Ring: slot = t % W for the last W positions.
+        last = k[:, max(S - W, 0):]
+        lastv = v[:, max(S - W, 0):]
+        t0 = max(S - W, 0)
+        slots = (t0 + jnp.arange(last.shape[1])) % W
+        kc = jnp.zeros((B, W, K, hd), k.dtype).at[:, slots].set(last)
+        vc = jnp.zeros((B, W, K, hd), v.dtype).at[:, slots].set(lastv)
+        return {"k": kc, "v": vc}
+    kc = jnp.zeros((B, cache_len, K, hd), k.dtype)
+    vc = jnp.zeros((B, cache_len, K, hd), v.dtype)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+    return {"k": kc, "v": vc}
+
+
+def init_gqa_cache(cfg, batch, cache_len, is_local, dtype=jnp.bfloat16):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    Lc = min(cache_len, cfg.local_window) if is_local else cache_len
+    return {
+        "k": jnp.zeros((batch, Lc, K, hd), dtype),
+        "v": jnp.zeros((batch, Lc, K, hd), dtype),
+    }
+
+
+def gqa_decode(params, cfg, x, cache, pos, *, is_local):
+    """One-token decode.  x: (B,1,D); pos: scalar current position."""
+    dtype = x.dtype
+    B = x.shape[0]
+    K, H, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions, dtype, is_local)
+    Lc = cache["k"].shape[1]
+    slot = pos % Lc
+    slot_idx = jnp.arange(Lc)
+    if is_local:
+        # Slot s holds absolute position pos - ((pos - s) mod Lc); valid if >= 0.
+        slot_pos = pos - jnp.mod(pos - slot_idx, Lc)
+        key_valid = slot_pos >= 0
+    else:
+        key_valid = slot_idx <= pos
+    rules = L.current_rules()
+    _mesh = rules.get("_mesh") if rules else None
+    _msize = (dict(zip(_mesh.axis_names, _mesh.devices.shape)).get("model", 1)
+              if _mesh is not None else 1)
+    if rules and rules.get("decode_kv_shard") and _mesh is not None \
+            and Lc % _msize == 0:
+        # Flash-decoding: cache sequence sharded over "model", partial
+        # softmaxes merged with the SOFTMAX_MERGE algebra, and the cache
+        # update done owner-shard-locally (a jnp-level update at a traced
+        # slot makes GSPMD all-gather the whole cache) -- collectives.py.
+        from repro.distributed import collectives as CC
+        import numpy as _np
+        mesh = rules["_mesh"]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_total = int(_np.prod([v for k, v in sizes.items()
+                                 if k in ("pod", "data")]))
+        out, kc, vc = CC.flash_decode_gqa(
+            mesh, q, cache["k"], cache["v"], k, v, slot, key_valid,
+            softcap=cfg.attn_softcap, batch_sharded=B % dp_total == 0)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        out = decode_attention(q, kc, vc, key_valid=key_valid,
+                               softcap=cfg.attn_softcap)
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross(key, cfg, dtype=jnp.float32):
+    return init_gqa(key, cfg, dtype)
+
+
+def cross_forward(params, cfg, x, enc_out, enc_valid_len=None):
+    """x: (B,S,D) queries; enc_out: (B,T,D) keys/values (bidirectional)."""
+    dtype = x.dtype
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    q = L.shard(q, "batch", "seq_sp", "heads", None)
+    qpos = jnp.arange(S)
+    out = blockwise_attention(
+        q.reshape(B, S, K, H // K, hd), k, v, qpos=qpos, causal=False,
+        kv_len=enc_valid_len)
+    out = out.reshape(B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def cross_build_cache(params, cfg, enc_out):
+    dtype = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+
+def cross_decode(params, cfg, x, cache):
+    dtype = x.dtype
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    T = cache["k"].shape[1]
+    out = decode_attention(
+        q.reshape(B, 1, K, H // K, hd), cache["k"], cache["v"],
+        key_valid=jnp.ones((T,), bool))
+    out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank q, compressed KV, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": L.dense_init(ks[0], (d, qr), 0, dtype),
+        "q_norm": L.init_rmsnorm(qr, dtype),
+        "w_uq": L.dense_init(ks[1], (qr, H, nd + rd), 0, dtype),
+        "w_dkv": L.dense_init(ks[2], (d, kvr + rd), 0, dtype),
+        "kv_norm": L.init_rmsnorm(kvr, dtype),
+        "w_uk": L.dense_init(ks[3], (kvr, H, nd), 0, dtype),
+        "w_uv": L.dense_init(ks[4], (kvr, H, vd), 0, dtype),
+        "wo": L.dense_init(ks[5], (H, vd, d), (0, 1), dtype),
+    }
+
+
+def _mla_q(params, cfg, x, positions, dtype):
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dtype))
+    cq = L.rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dtype))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg, x, positions, dtype):
+    kvr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dtype))
+    ckv, k_rope = ckv_full[..., :kvr], ckv_full[..., kvr:]
+    ckv = L.rmsnorm(params["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(params, cfg, x, positions, *, return_cache_len=0):
+    """Full-sequence MLA with expanded K/V (compute-optimal for prefill)."""
+    dtype = x.dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, cfg, x, positions, dtype)
+    ckv, k_rope = _mla_ckv(params, cfg, x, positions, dtype)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"].astype(dtype))
+    val = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"].astype(dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rd))],
+        axis=-1)
+    q = L.shard(q, "batch", "seq_sp", "heads", None)
+    k = L.shard(k, "batch", None, "heads", None)
+    # Pad v's head_dim to match q/k for the shared blockwise core, or use
+    # grouped layout directly: here K == H (MLA exposes all heads).
+    out = blockwise_attention(
+        q.reshape(B, S, H, 1, nd + rd), k, val, qpos=positions, causal=True)
+    out = out.reshape(B, S, H, vd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    cache = None
+    if return_cache_len:
+        kvr = cfg.kv_lora_rank
+        ckv_c = jnp.zeros((B, return_cache_len, kvr), ckv.dtype)
+        kr_c = jnp.zeros((B, return_cache_len, rd), k_rope.dtype)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, ckv, 0, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(kr_c, k_rope, 0, axis=1)
+        cache = {"ckv": ckv_c, "krope": kr_c}
+    return y, cache
+
+
+def init_mla_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, cfg, x, cache, pos):
+    """Absorbed decode: attention entirely in the compressed latent space."""
+    dtype = x.dtype
+    B = x.shape[0]
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions, dtype)   # (B,1,H,*)
+    ckv_new, krope_new = _mla_ckv(params, cfg, x, positions, dtype)
+    # Absorb w_uk into q: q_abs[b,1,h,r] = sum_n q_nope[b,1,h,n] w_uk[r,h,n]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"].astype(dtype))
+    scale = 1.0 / np.sqrt(nd + rd)
+    valid = jnp.arange(cache["ckv"].shape[1]) <= pos
+    rules = L.current_rules()
+    _mesh = rules.get("_mesh") if rules else None
+    _msize = (dict(zip(_mesh.axis_names, _mesh.devices.shape)).get("model", 1)
+              if _mesh is not None else 1)
+    if rules and rules.get("decode_mla_shard") and _mesh is not None \
+            and cache["ckv"].shape[1] % _msize == 0:
+        # Flash-decoding in the compressed latent space: cache sequence
+        # sharded over "model"; q gathered (tiny at decode); cache update
+        # done owner-shard-locally inside the shard_map.
+        from repro.distributed import collectives as CC
+        import numpy as _np
+        mesh = rules["_mesh"]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_total = int(_np.prod([v for k, v in sizes.items()
+                                 if k in ("pod", "data")]))
+        ctx, ckv_c, kr_c = CC.flash_decode_mla(
+            mesh, q_abs, q_rope, cache["ckv"], cache["krope"],
+            ckv_new, krope_new, pos, valid, scale=scale,
+            batch_sharded=B % dp_total == 0)         # (B,1,H,kvr) fp32
+    else:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1)
+        s = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                        ckv_c.astype(jnp.float32)) +
+             jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                        kr_c.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p.astype(jnp.float32),
+                         ckv_c.astype(jnp.float32))  # (B,1,H,kvr)
+    out = jnp.einsum("bshr,rhk->bshk", ctx.astype(dtype),
+                     params["w_uv"].astype(dtype))   # (B,1,H,vd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, {"ckv": ckv_c, "krope": kr_c}

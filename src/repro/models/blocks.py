@@ -1,0 +1,177 @@
+"""Layer blocks: residual wiring for every layer kind, all three modes.
+
+Kinds: ``attn_global`` / ``attn_local`` (GQA + MLP), ``gqa_dense`` (alias),
+``gqa_moe`` (GQA + MoE), ``mla_dense`` / ``mla_moe`` (MLA attention),
+``rglru`` (Griffin recurrent), ``mlstm`` / ``slstm`` (xLSTM), ``enc_attn``
+(bidirectional), ``dec_attn`` (self + cross).  Pre-norm residuals with
+optional gemma-style post-norms.
+
+``block_forward(params, kind, cfg, x, positions, mode=...)`` returns
+``(x, cache, aux)`` where ``mode`` is "train" | "prefill" | "decode".
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+
+ZERO_AUX = {"lb_loss": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32)}
+
+_ATTN_KINDS = ("attn_global", "attn_local", "gqa_dense", "gqa_moe", "enc_attn")
+
+
+def _has_mlp(kind):
+    return kind not in ("mlstm", "slstm")
+
+
+def _is_moe(kind):
+    return kind.endswith("_moe")
+
+
+def init_block(key, kind, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"norm1": L.init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.post_norm:
+        p["post_norm1"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if kind in _ATTN_KINDS:
+        p["attn"] = A.init_gqa(ks[0], cfg, dtype)
+    elif kind == "dec_attn":
+        p["attn"] = A.init_gqa(ks[0], cfg, dtype)
+        p["cross"] = A.init_cross(ks[1], cfg, dtype)
+        p["norm_cross"] = L.init_rmsnorm(cfg.d_model, dtype)
+    elif kind.startswith("mla"):
+        p["attn"] = A.init_mla(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = R.init_rglru_block(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = R.init_mlstm_block(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = R.init_slstm_block(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(kind):
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        if cfg.post_norm:
+            p["post_norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        if _is_moe(kind):
+            p["moe"] = M.init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                  cfg.activation, dtype)
+    return p
+
+
+def _mixer_apply(params, kind, cfg, x, positions, *, mode, cache, pos,
+                 enc_out, cache_len):
+    """Dispatch the sequence mixer.  Returns (y, new_cache)."""
+    is_local = kind == "attn_local"
+    if kind in _ATTN_KINDS:
+        causal = kind != "enc_attn"
+        if mode == "decode":
+            return A.gqa_decode(params["attn"], cfg, x, cache, pos,
+                                is_local=is_local)
+        return A.gqa_forward(
+            params["attn"], cfg, x, positions, is_local=is_local,
+            causal=causal,
+            return_cache_len=cache_len if mode == "prefill" else 0)
+    if kind.startswith("mla"):
+        if mode == "decode":
+            return A.mla_decode(params["attn"], cfg, x, cache, pos)
+        return A.mla_forward(
+            params["attn"], cfg, x, positions,
+            return_cache_len=cache_len if mode == "prefill" else 0)
+    if kind == "rglru":
+        if mode == "decode":
+            return R.rglru_decode(params["mixer"], cfg, x, cache)
+        return R.rglru_forward(params["mixer"], cfg, x,
+                               return_cache=mode == "prefill")
+    if kind == "mlstm":
+        if mode == "decode":
+            return R.mlstm_decode(params["mixer"], cfg, x, cache)
+        return R.mlstm_forward(params["mixer"], cfg, x,
+                               return_cache=mode == "prefill")
+    if kind == "slstm":
+        if mode == "decode":
+            return R.slstm_decode(params["mixer"], cfg, x, cache)
+        return R.slstm_forward(params["mixer"], cfg, x,
+                               return_cache=mode == "prefill")
+    raise ValueError(kind)
+
+
+def block_forward(params, kind, cfg, x, positions, *, mode="train",
+                  cache=None, pos=None, enc_out=None, cache_len=0):
+    """Returns (x, new_cache, aux)."""
+    aux = dict(ZERO_AUX)
+    x = L.shard(x, "batch", "seq_sp", None)
+
+    if kind == "dec_attn":
+        h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        self_cache = cache["self"] if mode == "decode" else None
+        h, new_self = _mixer_apply(
+            params, "attn_global", cfg, h, positions, mode=mode,
+            cache=self_cache, pos=pos, enc_out=None, cache_len=cache_len)
+        x = x + h
+        hc = L.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        if mode == "decode":
+            hc = A.cross_decode(params["cross"], cfg, hc, cache["cross"])
+            new_cross = cache["cross"]
+        else:
+            hc = A.cross_forward(params["cross"], cfg, hc, enc_out)
+            new_cross = (A.cross_build_cache(params["cross"], cfg, enc_out)
+                         if mode == "prefill" else None)
+        x = x + hc
+        new_cache = ({"self": new_self, "cross": new_cross}
+                     if mode != "train" else None)
+    else:
+        h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        h, new_cache = _mixer_apply(
+            params, kind, cfg, h, positions, mode=mode, cache=cache, pos=pos,
+            enc_out=enc_out, cache_len=cache_len)
+        if cfg.post_norm:
+            h = L.rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+        x = x + h
+
+    if _has_mlp(kind):
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if _is_moe(kind):
+            h, aux = M.moe_forward(params["moe"], cfg, h)
+        else:
+            h = L.mlp(params["mlp"], h, cfg.activation)
+        if cfg.post_norm:
+            h = L.rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+
+    return x, new_cache, aux
+
+
+def init_block_cache(kind, cfg, batch, cache_len, dtype=jnp.bfloat16):
+    """Zero decode cache for one block (used by serve engines + dry-run)."""
+    if kind in _ATTN_KINDS:
+        return A.init_gqa_cache(cfg, batch, cache_len,
+                                kind == "attn_local", dtype)
+    if kind == "dec_attn":
+        return {
+            "self": A.init_gqa_cache(cfg, batch, cache_len, False, dtype),
+            "cross": {
+                "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+        }
+    if kind.startswith("mla"):
+        return A.init_mla_cache(cfg, batch, cache_len, dtype)
+    if kind == "rglru":
+        return R.init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return R.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return R.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)

@@ -1,0 +1,300 @@
+"""Model wrappers: CausalLM / EncDec with scan-over-units lowering.
+
+Layer stacks are grouped as ``prefix + unit * n_units + suffix`` (configs);
+the homogeneous ``units`` segment is lowered as ``lax.scan`` over stacked
+params (one HLO body for 58 deepseek-v3 MoE layers / 80 internvl layers)
+with per-unit ``jax.checkpoint`` rematerialization -- both are what make the
+full-scale configs compile tractably and fit memory.
+
+Three entry points per model:
+* ``forward_train(params, cfg, batch)``      -> (loss, metrics)
+* ``prefill(params, cfg, tokens, ...)``      -> (last_logits, caches)
+* ``decode_step(params, cfg, caches, tok, pos)`` -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as BK
+from repro.models import layers as L
+
+Pytree = Any
+
+# When True, the units segment is fully unrolled instead of lax.scan'd.
+# XLA's cost_analysis counts a while-loop body ONCE (not x trip count), so
+# the dry-run sets this to get trip-count-correct FLOPs/bytes for the
+# roofline; production lowering keeps the scan (small HLO, fast compiles).
+SCAN_UNROLL = False
+
+
+# ---------------------------------------------------------------------------
+# Stack spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _dec_spec(cfg):
+    return (tuple(cfg.prefix), tuple(cfg.unit), cfg.n_units, tuple(cfg.suffix))
+
+
+def _enc_spec(cfg):
+    return ((), ("enc_attn",), cfg.n_enc_layers, ())
+
+
+def _init_stack(key, spec, cfg, dtype):
+    prefix, unit, n_units, suffix = spec
+    kp, ku, ks = jax.random.split(key, 3)
+    p = {}
+    p["prefix"] = tuple(
+        BK.init_block(k, kind, cfg, dtype)
+        for k, kind in zip(jax.random.split(kp, max(len(prefix), 1)), prefix))
+    if n_units:
+        def init_unit(k):
+            kk = jax.random.split(k, len(unit))
+            return tuple(BK.init_block(kk[i], kind, cfg, dtype)
+                         for i, kind in enumerate(unit))
+        p["units"] = jax.vmap(init_unit)(jax.random.split(ku, n_units))
+    else:
+        p["units"] = ()
+    p["suffix"] = tuple(
+        BK.init_block(k, kind, cfg, dtype)
+        for k, kind in zip(jax.random.split(ks, max(len(suffix), 1)), suffix))
+    return p
+
+
+def _run_stack(params, spec, cfg, h, positions, *, mode, caches=None,
+               pos=None, enc_out=None, cache_len=0, remat="full"):
+    """Returns (h, new_caches, aux)."""
+    prefix, unit, n_units, suffix = spec
+    aux = dict(BK.ZERO_AUX)
+    new_caches = {"prefix": [], "units": None, "suffix": []}
+
+    def acc(a, b):
+        return {k: a[k] + b[k] for k in a}
+
+    for i, kind in enumerate(prefix):
+        c = caches["prefix"][i] if mode == "decode" else None
+        h, nc, ax = BK.block_forward(
+            params["prefix"][i], kind, cfg, h, positions, mode=mode, cache=c,
+            pos=pos, enc_out=enc_out, cache_len=cache_len)
+        aux = acc(aux, ax)
+        new_caches["prefix"].append(nc)
+
+    if n_units:
+        def unit_body(carry, xs):
+            hh, aux_c = carry
+            if mode == "decode":
+                up, uc = xs
+            else:
+                up, uc = xs, None
+            ncs = []
+            for j, kind in enumerate(unit):
+                cj = uc[j] if mode == "decode" else None
+                hh, nc, ax = BK.block_forward(
+                    up[j], kind, cfg, hh, positions, mode=mode, cache=cj,
+                    pos=pos, enc_out=enc_out, cache_len=cache_len)
+                aux_c = acc(aux_c, ax)
+                ncs.append(nc)
+            ys = tuple(ncs) if mode != "train" else None
+            return (hh, aux_c), ys
+
+        body = unit_body
+        if mode == "train" and remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if remat == "full" else
+                      jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body = jax.checkpoint(unit_body, policy=policy,
+                                  prevent_cse=False)
+        xs = (params["units"], caches["units"]) if mode == "decode" \
+            else params["units"]
+        (h, aux), unit_caches = jax.lax.scan(
+            body, (h, aux), xs, unroll=n_units if SCAN_UNROLL else 1)
+        new_caches["units"] = unit_caches
+
+    for i, kind in enumerate(suffix):
+        c = caches["suffix"][i] if mode == "decode" else None
+        h, nc, ax = BK.block_forward(
+            params["suffix"][i], kind, cfg, h, positions, mode=mode, cache=c,
+            pos=pos, enc_out=enc_out, cache_len=cache_len)
+        aux = acc(aux, ax)
+        new_caches["suffix"].append(nc)
+
+    new_caches["prefix"] = tuple(new_caches["prefix"])
+    new_caches["suffix"] = tuple(new_caches["suffix"])
+    return h, (new_caches if mode != "train" else None), aux
+
+
+def _stack_cache(spec, cfg, batch, cache_len, dtype=jnp.bfloat16):
+    prefix, unit, n_units, suffix = spec
+    c = {
+        "prefix": tuple(BK.init_block_cache(k, cfg, batch, cache_len, dtype)
+                        for k in prefix),
+        "suffix": tuple(BK.init_block_cache(k, cfg, batch, cache_len, dtype)
+                        for k in suffix),
+        "units": None,
+    }
+    if n_units:
+        one = tuple(BK.init_block_cache(k, cfg, batch, cache_len, dtype)
+                    for k in unit)
+        c["units"] = jax.tree.map(
+            lambda l: jnp.zeros((n_units,) + l.shape, l.dtype), one)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg, dtype=jnp.float32) -> Pytree:
+    k_emb, k_dec, k_enc, k_norm, k_mtp = jax.random.split(key, 5)
+    params = {
+        "embed": L.init_embed(k_emb, cfg.vocab_size, cfg.d_model,
+                              cfg.tie_embeddings, dtype),
+        "decoder": _init_stack(k_dec, _dec_spec(cfg), cfg, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.is_encdec:
+        params["encoder"] = _init_stack(k_enc, _enc_spec(cfg), cfg, dtype)
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.mtp_depth:
+        kind = "mla_dense" if cfg.use_mla else "attn_global"
+        params["mtp"] = {
+            "proj": L.dense_init(k_mtp, (2 * cfg.d_model, cfg.d_model), 0, dtype),
+            "block": BK.init_block(k_mtp, kind, cfg, dtype),
+            "norm_h": L.init_rmsnorm(cfg.d_model, dtype),
+            "norm_e": L.init_rmsnorm(cfg.d_model, dtype),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def count_params(params: Pytree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Shared input embedding path
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, tokens, vision_embeds=None):
+    """Returns (h, positions, n_prefix)."""
+    dtype = cfg.activation_dtype
+    h = L.embed(params["embed"], tokens, cfg.embed_scale, dtype)
+    n_prefix = 0
+    if cfg.num_prefix_embeds and vision_embeds is not None:
+        h = jnp.concatenate([vision_embeds.astype(dtype), h], axis=1)
+        n_prefix = vision_embeds.shape[1]
+    positions = jnp.arange(h.shape[1])
+    return h, positions, n_prefix
+
+
+def _encode(params, cfg, src_embeds):
+    h = src_embeds.astype(cfg.activation_dtype)
+    positions = jnp.arange(h.shape[1])
+    h, _, _ = _run_stack(params["encoder"], _enc_spec(cfg), cfg, h, positions,
+                         mode="train")
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, cfg, batch, *, remat="full", z_loss=1e-4,
+                  lb_coef=0.01, mtp_coef=0.3):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, batch["src_embeds"])
+    h, positions, n_prefix = _embed_inputs(
+        params, cfg, tokens, batch.get("vision_embeds"))
+    h = L.shard(h, "batch", "seq_sp", None)
+
+    h, _, aux = _run_stack(params["decoder"], _dec_spec(cfg), cfg, h,
+                           positions, mode="train", enc_out=enc_out,
+                           remat=remat)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    loss = L.softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    total = loss
+    metrics = {"ce_loss": loss, **aux}
+    if cfg.n_experts:
+        total = total + lb_coef * aux["lb_loss"] + 1e-4 * aux["router_z"]
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(params, cfg, h, tokens, labels, positions)
+        total = total + mtp_coef * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _mtp_loss(params, cfg, h, tokens, labels, positions):
+    """DeepSeek-V3 multi-token prediction: depth-1 extra causal block."""
+    dtype = cfg.activation_dtype
+    mp = params["mtp"]
+    # Combine h_t with the embedding of t_{t+1} to predict t_{t+2}.
+    h_in = L.rmsnorm(mp["norm_h"], h[:, :-1], cfg.norm_eps)
+    e_next = L.embed(params["embed"], tokens[:, 1:], cfg.embed_scale, dtype)
+    e_next = L.rmsnorm(mp["norm_e"], e_next, cfg.norm_eps)
+    hm = jnp.concatenate([h_in, e_next], axis=-1)
+    hm = jnp.einsum("bsd,de->bse", hm, mp["proj"].astype(dtype))
+    kind = "mla_dense" if cfg.use_mla else "attn_global"
+    hm, _, _ = BK.block_forward(mp["block"], kind, cfg, hm, positions[:-1],
+                                mode="train")
+    hm = L.rmsnorm(mp["final_norm"], hm, cfg.norm_eps)
+    logits = L.unembed(params["embed"], hm, cfg.final_softcap)
+    return L.softmax_cross_entropy(logits, labels[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
+            vision_embeds=None):
+    """Full-sequence forward building decode caches.
+
+    Returns (last_logits (B, vocab), caches).
+    """
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, src_embeds)
+    h, positions, n_prefix = _embed_inputs(params, cfg, tokens, vision_embeds)
+    h, caches, _ = _run_stack(params["decoder"], _dec_spec(cfg), cfg, h,
+                              positions, mode="prefill", enc_out=enc_out,
+                              cache_len=cache_len)
+    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    return logits[:, 0], caches
+
+
+def init_caches(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    return _stack_cache(_dec_spec(cfg), cfg, batch, cache_len, dtype)
+
+
+def decode_step(params, cfg, caches, tokens, pos):
+    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32.
+
+    For enc-dec models, cross K/V caches must have been built by prefill.
+    Returns (logits (B, vocab), new_caches).
+    """
+    dtype = cfg.activation_dtype
+    h = L.embed(params["embed"], tokens, cfg.embed_scale, dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+    h, new_caches, _ = _run_stack(params["decoder"], _dec_spec(cfg), cfg, h,
+                                  positions, mode="decode", caches=caches,
+                                  pos=pos)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    return logits[:, 0], new_caches

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts with deterministic capacity-based dispatch + EP.
+
+Sort-based dispatch (GShard/Switch lineage): token->expert assignments are
+argsorted by expert id, each token takes a position within its expert's
+capacity-``C`` buffer, and the grouped GEMM runs as one batched einsum over
+the ``[E, C, D]`` dispatch buffer.  Shapes are static (compile-friendly at
+every scale); overflow tokens are dropped (capacity_factor controls the
+rate).  Experts are sharded on the ``model`` mesh axis (expert parallelism);
+the scatter from token-sharded to expert-sharded layouts is the all-to-all
+the roofline's collective term sees.
+
+Router variants: ``softmax`` top-k (GShard/Mixtral) and ``sigmoid``
+(DeepSeek-V3 aux-loss-free with per-expert bias, bias updates are the
+trainer's job).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": L.dense_init(ks[0], (d, E), 0, jnp.float32),
+        "router_bias": jnp.zeros((E,), jnp.float32),
+        "w_in": L.dense_init(ks[1], (E, d, ff), 1, dtype),
+        "w_out": L.dense_init(ks[2], (E, ff, d), 1, dtype),
+    }
+    if gated:
+        p["w_gate"] = L.dense_init(ks[3], (E, d, ff), 1, dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(
+            ks[4], d, ff * cfg.n_shared_experts, cfg.activation, dtype)
+    return p
+
+
+def _capacity(cfg, T):
+    C = int(np.ceil(T * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((C + 7) // 8) * 8)
+
+
+def moe_forward(params, cfg, x):
+    """x: (B, S, D) -> (y, aux) with aux = {'lb_loss', 'router_z'}"""
+    rules = L.current_rules()
+    if rules and rules.get("moe_shard_map") and rules.get("_mesh") is not None:
+        # Zero-collective-dispatch EP path (distributed/moe_sharded.py):
+        # the GSPMD lowering of the global sort/scatter gathers token
+        # buffers across the mesh (EXPERIMENTS.md §Perf).
+        from repro.distributed.moe_sharded import moe_forward_sharded
+        return moe_forward_sharded(params, cfg, x, rules["_mesh"])
+    dtype = x.dtype
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]  # aux-free balancing bias
+        gate_sel, idx = jax.lax.top_k(sel, k)
+        gates = jnp.take_along_axis(scores, idx, axis=1)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, axis=1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=1, keepdims=True), 1e-9)
+
+    # Load-balance aux (Switch): E * sum_e frac_tokens_e * mean_prob_e.
+    onehot_frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(onehot_frac * mean_prob)
+    router_z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+
+    # ---- deterministic capacity dispatch (sort-based) ----
+    C = _capacity(cfg, T)
+    flat_e = idx.reshape(-1)                                # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    se_safe = jnp.where(keep, se, E)                        # OOB -> dropped
+
+    xbuf = jnp.zeros((E, C, D), dtype)
+    xbuf = xbuf.at[se_safe, pos].set(
+        xf[st] * keep[:, None].astype(dtype), mode="drop")
+    xbuf = L.shard(xbuf, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", xbuf, params["w_in"].astype(dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", xbuf, params["w_gate"].astype(dtype))
+        h = jax.nn.silu(g) * h if cfg.activation == "swiglu" else jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = L.shard(h, "experts", None, "ffn_inner")
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(dtype))
+    y = L.shard(y, "experts", None, None)
+
+    # ---- combine ----
+    gathered = y[se_safe.clip(0, E - 1), pos.clip(0, C - 1)]
+    contrib = gathered * (sg * keep).astype(dtype)[:, None]
+    out = jnp.zeros((T, D), dtype).at[st].add(contrib)
+    out = L.shard(out.reshape(B, S, D), "batch", "seq_sp", None)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp(params["shared"], x, cfg.activation)
+    return out, {"lb_loss": lb_loss, "router_z": router_z}

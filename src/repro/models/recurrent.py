@@ -1,0 +1,473 @@
+"""Recurrent mixers: RG-LRU (recurrentgemma) and mLSTM / sLSTM (xlstm).
+
+These are where the paper's scan primitive is load-bearing:
+
+* RG-LRU's diagonal recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t x_t)
+  runs on ``core.primitives.linear_recurrence`` -- the AFFINE-operator scan
+  in the (B, T, C) channel layout (Pallas kernel on TPU, associative_scan on
+  XLA backends).
+* mLSTM's exponential-gating stabilizer m_t = max(log f_t + m_{t-1}, log i_t)
+  runs on ``core.scan`` with the non-commutative MAXPLUS_AFFINE operator --
+  an "arbitrary operator" the vendor libraries the paper benchmarks against
+  cannot express.  With m known, the (C, n) matrix recurrence is processed
+  chunkwise (intra-chunk = masked decay attention; inter-chunk = sequential
+  lax.scan over chunk states, the memory-sane choice for d_head^2 states).
+* sLSTM's gates read h_{t-1}: a genuinely non-associative recurrence, noted
+  in DESIGN.md §4 -- lowered as lax.scan over time (one XLA while loop).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width cfg.conv_width), with decode state
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width, channels, dtype=jnp.float32):
+    return {
+        "kernel": (jax.random.normal(key, (width, channels), jnp.float32)
+                   * 0.02).astype(dtype),
+        "bias": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(params, x):
+    """x: (B, T, C); causal depthwise conv."""
+    w = params["kernel"].astype(x.dtype)      # (W, C)
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + params["bias"].astype(x.dtype)
+
+
+def conv1d_step(params, x_t, state):
+    """x_t: (B, 1, C); state: (B, W-1, C) holding the previous inputs."""
+    w = params["kernel"].astype(x_t.dtype)
+    W = w.shape[0]
+    window = jnp.concatenate([state, x_t], axis=1)      # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :] + params["bias"].astype(x_t.dtype)
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal linear (recurrentgemma gates; xlstm recurrent weights)
+# ---------------------------------------------------------------------------
+
+
+def init_blockdiag(key, heads, width, dtype=jnp.float32):
+    per = width // heads
+    return (jax.random.normal(key, (heads, per, per), jnp.float32)
+            / np.sqrt(per)).astype(dtype)
+
+
+def blockdiag_apply(w, x):
+    """x: (..., width) -> (..., width) with block-diagonal w: (H, p, p)."""
+    H, p, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (H, p))
+    out = jnp.einsum("...hp,hpq->...hq", xs, w.astype(x.dtype))
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = exp(-8 softplus(L) r) starts in [0.9, 0.999].
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.0, 1.0)
+    a_init = 0.9 + 0.09 * lam
+    lam_param = jnp.log(jnp.expm1(-jnp.log(a_init) / _RGLRU_C))
+    return {
+        "wx": L.dense_init(ks[0], (d, w), 0, dtype),
+        "wy": L.dense_init(ks[1], (d, w), 0, dtype),
+        "wo": L.dense_init(ks[2], (w, d), 0, dtype),
+        "conv": init_conv1d(ks[3], cfg.conv_width, w, dtype),
+        "gate_a": init_blockdiag(ks[4], cfg.n_heads, w, dtype),
+        "gate_x": init_blockdiag(ks[6], cfg.n_heads, w, dtype),
+        "bias_a": jnp.zeros((w,), jnp.float32),
+        "bias_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam_param,
+    }
+
+
+def _rglru_gates(params, u):
+    """u: (B, T, w) post-conv input -> (a, gated_input_mult)."""
+    r = jax.nn.sigmoid(
+        blockdiag_apply(params["gate_a"], u).astype(jnp.float32)
+        + params["bias_a"])
+    i = jax.nn.sigmoid(
+        blockdiag_apply(params["gate_x"], u).astype(jnp.float32)
+        + params["bias_x"])
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, i, mult
+
+
+def rglru_forward(params, cfg, x, *, return_cache=False):
+    """x: (B, T, D) -> (y, cache|None).  The scan primitive carries h."""
+    dtype = x.dtype
+    u_pre = jnp.einsum("btd,dw->btw", x, params["wx"].astype(dtype))
+    gate_branch = jnp.einsum("btd,dw->btw", x, params["wy"].astype(dtype))
+    u = causal_conv1d(params["conv"], u_pre)
+    u = L.shard(u, "batch", "seq_sp", "rnn")
+    a, i, mult = _rglru_gates(params, u)
+    b = (mult * i * u.astype(jnp.float32))
+    h = forge.linear_recurrence(a, b)                    # (B, T, w) fp32
+    h = h.astype(dtype)
+    y = jnp.einsum("btw,wd->btd", h * jax.nn.gelu(gate_branch),
+                   params["wo"].astype(dtype))
+    cache = None
+    if return_cache:
+        cache = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": _conv_tail(cfg, u_pre)}
+    return y, cache
+
+
+def _conv_tail(cfg, u_pre):
+    W = cfg.conv_width
+    B, T, w = u_pre.shape
+    tail = u_pre[:, max(T - (W - 1), 0):]
+    if tail.shape[1] < W - 1:
+        tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+    return tail
+
+
+def init_rglru_cache(cfg, batch, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, cfg, x, cache):
+    """x: (B, 1, D) one-step decode; O(1) state update."""
+    dtype = x.dtype
+    u_pre = jnp.einsum("btd,dw->btw", x, params["wx"].astype(dtype))
+    gate_branch = jnp.einsum("btd,dw->btw", x, params["wy"].astype(dtype))
+    u, conv_state = conv1d_step(params["conv"], u_pre, cache["conv"])
+    a, i, mult = _rglru_gates(params, u)
+    b = mult * i * u.astype(jnp.float32)
+    h = a[:, 0] * cache["h"] + b[:, 0]                   # (B, w)
+    y = jnp.einsum("btw,wd->btd", (h[:, None].astype(dtype)
+                                   * jax.nn.gelu(gate_branch)),
+                   params["wo"].astype(dtype))
+    return y, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xlstm): chunkwise matrix-memory recurrence with exact stabilizer
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = 2 * d
+    H = cfg.n_heads
+    dh = inner // H
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": L.dense_init(ks[0], (d, inner), 0, dtype),
+        "w_gate": L.dense_init(ks[1], (d, inner), 0, dtype),
+        "conv": init_conv1d(ks[2], cfg.conv_width, inner, dtype),
+        "wq": init_blockdiag(ks[3], H, inner, dtype),
+        "wk": init_blockdiag(ks[4], H, inner, dtype),
+        "wv": init_blockdiag(ks[5], H, inner, dtype),
+        "w_igate": L.dense_init(ks[6], (d, H), 0, jnp.float32),
+        "w_fgate": L.dense_init(ks[7], (d, H), 0, jnp.float32),
+        "b_igate": jnp.zeros((H,), jnp.float32),
+        "b_fgate": jnp.full((H,), 3.0, jnp.float32),   # open forget gates
+        "w_down": L.dense_init(ks[8], (inner, d), 0, dtype),
+        "skip_scale": jnp.zeros((inner,), dtype),
+    }
+
+
+def _mlstm_stabilizer(lf, li, m0=None):
+    """m_t = max(lf_t + m_{t-1}, li_t) via the MAXPLUS_AFFINE scan.
+
+    lf, li: (B, T, H).  Returns m: (B, T, H) with m_0 seeded by m0 (or 0).
+    """
+    A, Bm = forge.scan(alg.MAXPLUS_AFFINE, (lf, li), axis=1)
+    m_init = jnp.zeros_like(lf[:, :1]) if m0 is None else m0[:, None]
+    return jnp.maximum(A + m_init, Bm)
+
+
+def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
+                      state_dtype=jnp.float32):
+    """Chunkwise mLSTM.  q,k,v: (B,NC,L,H,dh); lf,li,m: (B,NC,L,H).
+
+    Carries stabilized (C', n') across chunks; intra-chunk is masked decay
+    attention.  Returns h: (B,NC,L,H,dh) and final (C', n').
+    ``state_dtype``: precision of the O(dh^2) chunk carry -- the dominant
+    HBM traffic of the layer (EXPERIMENTS.md §Perf xlstm iteration).
+    """
+    Bb, NC, Lc, H, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    q = q * scale
+
+    # Stabilized per-step gates given the global m (computed by core.scan):
+    # f'_t = exp(lf_t + m_{t-1} - m_t), i'_t = exp(li_t - m_t).
+    m_prev = jnp.pad(
+        m.reshape(Bb, NC * Lc, H)[:, :-1], ((0, 0), (1, 0), (0, 0))
+    ).reshape(Bb, NC, Lc, H)
+    lf_p = lf + m_prev - m
+    li_p = li - m
+    # Intra-chunk cumulative log decay G_t = sum_{s<=t} lf'_s (per chunk).
+    G = jnp.cumsum(lf_p, axis=2)
+
+    def step(carry, xs):
+        Cs, ns = carry
+        qc, kc, vc, lic, Gc, m_c = xs
+        # Fused mask+exp+product: one (B,L,L,H) tensor instead of three, and
+        # the weight matrix feeds the v/k matmuls in bf16 (§Perf xlstm iter 2:
+        # intra-chunk tensors dominate the memory term once carries shrink).
+        logw = Gc[:, :, None, :] - Gc[:, None, :, :] + lic[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        qk = jnp.einsum("blhd,bshd->blsh", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+        attn = jnp.where(tri[None, :, :, None], jnp.exp(logw) * qk,
+                         0.0).astype(jnp.bfloat16)
+        h_intra = jnp.einsum("blsh,bshd->blhd", attn,
+                             vc.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+        decay_t = jnp.exp(Gc)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qc.astype(jnp.float32),
+                             Cs.astype(jnp.float32)) * decay_t[..., None]
+        n_intra = jnp.einsum("blsh,bshd->blhd", attn,
+                             kc.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+        qn_intra = jnp.einsum("blhd,blhd->blh", qc.astype(jnp.float32),
+                              n_intra)
+        qn_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32), ns) \
+            * decay_t
+        num = h_intra + h_inter
+        qn = qn_intra + qn_inter
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_c))
+        h = num / denom[..., None]
+        # Chunk-end state update: C' <- exp(G_L) C' + sum_s exp(G_L - G_s + li'_s) k_s v_s^T
+        gl = Gc[:, -1:, :]                          # (B,1,H)
+        wst = jnp.exp(gl - Gc + lic)                # (B,L,H)
+        C_new = Cs.astype(jnp.float32) * jnp.exp(gl[:, 0])[:, :, None, None] \
+            + jnp.einsum("blh,blhd,blhe->bhde", wst, kc.astype(jnp.float32),
+                         vc.astype(jnp.float32))
+        n_new = ns.astype(jnp.float32) * jnp.exp(gl[:, 0])[:, :, None] \
+            + jnp.einsum("blh,blhd->bhd", wst, kc.astype(jnp.float32))
+        return (C_new.astype(state_dtype), n_new.astype(state_dtype)), h
+
+    if state0 is None:
+        C0 = jnp.zeros((Bb, H, dh, dh), state_dtype)
+        n0 = jnp.zeros((Bb, H, dh), state_dtype)
+    else:
+        C0, n0 = jax.tree.map(lambda t: t.astype(state_dtype), state0)
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(li_p, 1, 0), jnp.moveaxis(G, 1, 0),
+          jnp.moveaxis(m, 1, 0))
+    from repro.models import attention as _attn  # dry-run unroll flag
+    (Cf, nf), hs = jax.lax.scan(step, (C0, n0), xs,
+                                unroll=NC if _attn.KV_UNROLL else 1)
+    return jnp.moveaxis(hs, 0, 1), (Cf, nf)
+
+
+def mlstm_forward(params, cfg, x, *, return_cache=False):
+    """x: (B, T, D) -> (y, cache|None)."""
+    dtype = x.dtype
+    B, T_in, D = x.shape
+    H = cfg.n_heads
+    inner = 2 * D
+    dh = inner // H
+    Lc = min(cfg.mlstm_chunk, T_in)
+    # Arbitrary-length sequences: pad to a chunk multiple with *neutral*
+    # gates (i = 0 => no state update; f' = 1 under the stabilizer), so the
+    # cache returned for T_in tokens is exact and pad outputs are sliced off.
+    T = ((T_in + Lc - 1) // Lc) * Lc
+    pad = T - T_in
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    NC = T // Lc
+
+    u = jnp.einsum("btd,dw->btw", x, params["w_up"].astype(dtype))
+    z = jnp.einsum("btd,dw->btw", x, params["w_gate"].astype(dtype))
+    c = causal_conv1d(params["conv"], u)
+    c = jax.nn.silu(c)
+    q = blockdiag_apply(params["wq"], c)
+    k = blockdiag_apply(params["wk"], c)
+    v = blockdiag_apply(params["wv"], u)
+
+    xf = x.astype(jnp.float32)
+    li = jnp.einsum("btd,dh->bth", xf, params["w_igate"]) + params["b_igate"]
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("btd,dh->bth", xf, params["w_fgate"]) + params["b_fgate"])
+    if pad:
+        tmask = (jnp.arange(T) < T_in)[None, :, None]
+        li = jnp.where(tmask, li, -1e30)   # i' = 0: pads never write state
+        lf = jnp.where(tmask, lf, 0.0)     # f' = 1: pads never decay state
+    m = _mlstm_stabilizer(lf, li)                     # core.scan (MAXPLUS)
+
+    def split(t, trailing):
+        return t.reshape((B, NC, Lc) + trailing)
+
+    h, state = _mlstm_chunk_scan(
+        split(q, (H, dh)), split(k, (H, dh)), split(v, (H, dh)),
+        split(lf, (H,)), split(li, (H,)), split(m, (H,)),
+        state_dtype=jnp.dtype(cfg.mlstm_state_dtype))
+    h = h.reshape(B, T, inner).astype(dtype)
+    h = h + params["skip_scale"].astype(dtype) * c
+    y = jnp.einsum("btw,wd->btd", h * jax.nn.silu(z),
+                   params["w_down"].astype(dtype))
+    if pad:
+        y = y[:, :T_in]
+    cache = None
+    if return_cache:
+        Cf, nf = state
+        cache = {"C": Cf, "n": nf, "m": m[:, T_in - 1],
+                 "conv": _conv_tail(cfg, u[:, :T_in])}
+    return y, cache
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32):
+    inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    dh = inner // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_decode(params, cfg, x, cache):
+    """One-step mLSTM: O(dh^2) state update, no sequence dimension."""
+    dtype = x.dtype
+    B, _, D = x.shape
+    H = cfg.n_heads
+    inner = 2 * D
+    dh = inner // H
+    u = jnp.einsum("btd,dw->btw", x, params["w_up"].astype(dtype))
+    z = jnp.einsum("btd,dw->btw", x, params["w_gate"].astype(dtype))
+    c, conv_state = conv1d_step(params["conv"], u, cache["conv"])
+    c = jax.nn.silu(c)
+    q = blockdiag_apply(params["wq"], c).reshape(B, H, dh) / np.sqrt(dh)
+    k = blockdiag_apply(params["wk"], c).reshape(B, H, dh)
+    v = blockdiag_apply(params["wv"], u).reshape(B, H, dh)
+    xf = x[:, 0].astype(jnp.float32)
+    li = jnp.einsum("bd,dh->bh", xf, params["w_igate"]) + params["b_igate"]
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bd,dh->bh", xf, params["w_fgate"]) + params["b_fgate"])
+    m_new = jnp.maximum(lf + cache["m"], li)
+    fp = jnp.exp(lf + cache["m"] - m_new)
+    ip = jnp.exp(li - m_new)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = fp[..., None, None] * cache["C"] + ip[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = fp[..., None] * cache["n"] + ip[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    qn = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, 1, inner).astype(dtype)
+    h = h + params["skip_scale"].astype(dtype) * c
+    y = jnp.einsum("btw,wd->btd", h * jax.nn.silu(z),
+                   params["w_down"].astype(dtype))
+    return y, {"C": C_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xlstm): scalar-memory cell with recurrent gate inputs
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ff = int(d * 4 / 3 / 64) * 64 or 64
+    per = d // H
+    rk = jax.random.split(ks[1], 4)
+    return {
+        "w_in": L.dense_init(ks[0], (d, 4, d), 0, dtype),      # z, i, f, o
+        # One block-diagonal recurrent matrix per gate (h_{t-1} -> gate).
+        "r": jnp.stack([init_blockdiag(rk[g], H, d, dtype) for g in range(4)]),
+        "bias": jnp.zeros((4, d), jnp.float32),
+        "w_out": L.dense_init(ks[2], (d, d), 0, dtype),
+        "ffn": L.init_mlp(ks[3], d, ff, "gelu", dtype),
+    }
+
+
+def _slstm_cell(params, cfg, xg, carry):
+    """One timestep.  xg: (B, 4, D) pre-activations from input; carry dict."""
+    c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+    hd = h.astype(params["r"].dtype)
+    rec = jnp.stack(
+        [blockdiag_apply(params["r"][g], hd) for g in range(4)], axis=1)
+    rec = rec.astype(jnp.float32)                               # (B, 4, D)
+    g = xg.astype(jnp.float32) + rec + params["bias"]
+    zt = jnp.tanh(g[:, 0])
+    li = g[:, 1]
+    lf = jax.nn.log_sigmoid(g[:, 2])
+    ot = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(params, cfg, x, *, return_cache=False):
+    dtype = x.dtype
+    B, T, D = x.shape
+    xg = jnp.einsum("btd,dgk->btgk", x, params["w_in"].astype(dtype))
+
+    def step(carry, xt):
+        new = _slstm_cell(params, cfg, xt, carry)
+        return new, new["h"]
+
+    carry0 = init_slstm_cache(cfg, B)
+    carry0.pop("conv", None)
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(dtype)                   # (B, T, D)
+    y = jnp.einsum("btd,de->bte", h, params["w_out"].astype(dtype))
+    y = y + L.mlp(params["ffn"], y, "gelu")
+    cache = dict(carry) if return_cache else None
+    return y, cache
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_decode(params, cfg, x, cache):
+    dtype = x.dtype
+    xg = jnp.einsum("btd,dgk->btgk", x, params["w_in"].astype(dtype))[:, 0]
+    new = _slstm_cell(params, cfg, xg, cache)
+    h = new["h"][:, None].astype(dtype)
+    y = jnp.einsum("btd,de->bte", h, params["w_out"].astype(dtype))
+    y = y + L.mlp(params["ffn"], y, "gelu")
+    return y, new

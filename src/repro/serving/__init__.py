@@ -1,0 +1,1 @@
+"""Serving: KV/state caches, batched engine."""

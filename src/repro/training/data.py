@@ -1,0 +1,81 @@
+"""Synthetic data pipeline: deterministic, step-indexed, shardable.
+
+Every batch is a pure function of ``(seed, step)`` -- no iterator state to
+checkpoint, so restart/elastic-resume is exact: the trainer records only the
+step counter.  On a multi-host cluster each host materializes only its
+addressable shard via ``jax.make_array_from_callback``; in this container the
+full array is materialized locally and sharded across the (fake) devices.
+
+The token stream is a deterministic Zipf-ish mixture with a learnable
+structure (repeated n-grams) so that a few hundred steps of training show a
+real loss decrease in the examples -- a plain uniform stream has no signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as SH
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    vocab_size: int = 512
+    seed: int = 17
+
+
+def _host_batch(cfg, model_cfg, step: int) -> dict:
+    rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    # Markov-ish stream: each token depends on the previous via a fixed
+    # random permutation most of the time -> learnable structure.
+    perm = np.random.default_rng(cfg.seed).permutation(V)
+    toks = np.empty((B, S + 1), np.int32)
+    toks[:, 0] = rng.integers(0, V, B)
+    noise = rng.random((B, S)) < 0.15
+    rand = rng.integers(0, V, (B, S))
+    for t in range(S):
+        nxt = perm[toks[:, t]]
+        toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if model_cfg is not None and model_cfg.is_encdec:
+        batch["src_embeds"] = rng.standard_normal(
+            (B, S, model_cfg.d_model), np.float32).astype(np.float32) * 0.1
+    if model_cfg is not None and model_cfg.num_prefix_embeds:
+        batch["vision_embeds"] = rng.standard_normal(
+            (B, model_cfg.num_prefix_embeds, model_cfg.d_model),
+            np.float32).astype(np.float32) * 0.1
+    return batch
+
+
+class SyntheticDataset:
+    """Stateless step-indexed loader."""
+
+    def __init__(self, cfg: DataConfig, model_cfg=None, mesh=None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.mesh = mesh
+
+    def host_batch(self, step: int) -> dict:
+        return _host_batch(self.cfg, self.model_cfg, step)
+
+    def batch(self, step: int) -> dict:
+        """Device batch, sharded over dp when a mesh is provided."""
+        host = self.host_batch(step)
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        specs = SH.batch_specs(
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in host.items()},
+            self.model_cfg, self.mesh)
+        out = {}
+        for k, v in host.items():
+            sharding = jax.NamedSharding(self.mesh, specs[k])
+            out[k] = jax.make_array_from_callback(
+                v.shape, sharding, lambda idx, v=v: v[idx])
+        return out

@@ -1,0 +1,152 @@
+"""Optimizers in pure JAX: AdamW and Adafactor, with clipping + schedules.
+
+Optimizer state lives in the same pytree layout as params, so parameter
+PartitionSpecs transfer leafwise (ZeRO: sharded optimizer state for free).
+Adafactor (factored second moment, no momentum by default) exists because
+671B-class models cannot afford 3x fp32 state per weight -- see
+EXPERIMENTS.md §Dry-run memory notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params, step):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    mu_leaves = treedef.flatten_up_to(state["mu"])
+    nu_leaves = treedef.flatten_up_to(state["nu"])
+    new_mu, new_nu, new_p = [], [], []
+    for g, mu, nu, p in zip(g_leaves, mu_leaves, nu_leaves, p_leaves):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        update = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+    return treedef.unflatten(new_p), {"mu": treedef.unflatten(new_mu),
+                                      "nu": treedef.unflatten(new_nu)}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory ~= params in fp32 row/col sums)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init, params)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params, step):
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    v_leaves = treedef.flatten_up_to(state["v"])
+    new_v, new_p = [], []
+    for g, v, p in zip(g_leaves, v_leaves, p_leaves):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps) + eps)
+            cfac = jax.lax.rsqrt(vc + eps)
+            update = g * rfac[..., None] * cfac[..., None, :]
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nvv = decay * v["v"] + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(nvv + eps)
+            nv = {"v": nvv}
+        # Update clipping (RMS <= 1) per Adafactor.
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_v.append(nv)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+    return treedef.unflatten(new_p), {"v": treedef.unflatten(new_v)}
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, functools.partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, functools.partial(adafactor_update, cfg)
+    raise ValueError(cfg.name)

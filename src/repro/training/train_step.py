@@ -1,0 +1,192 @@
+"""jit-ready train / prefill / decode step builders with full sharding.
+
+``make_train_step(cfg, mesh, ...)`` returns (step_fn, state_shape, shardings)
+where ``step_fn(state, batch) -> (state, metrics)`` is ready for
+``jax.jit(..., in_shardings=..., out_shardings=..., donate_argnums=0)``.
+The same builders feed the trainer, the serving engine, and the multi-pod
+dry-run (which lowers them against ShapeDtypeStructs).
+
+Distributed-optimization features:
+* bf16 parameter cast inside the loss => gradient all-reduce/reduce-scatter
+  runs in bf16 (half the collective bytes; ``grad_dtype`` flag);
+* microbatch gradient accumulation via lax.scan (``accum_steps``);
+* per-unit rematerialization (``remat``);
+* donated state buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import layers as L
+from repro.models import lm
+from repro.training import optimizer as OPT
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OPT.OptimizerConfig = OPT.OptimizerConfig()
+    remat: str = "full"               # full | dots | none
+    accum_steps: int = 1
+    grad_dtype: str = "bfloat16"      # collective compression (bf16 reduce)
+    z_loss: float = 1e-4
+    lb_coef: float = 0.01
+    seed: int = 0
+
+
+def init_state(key, cfg, train_cfg: TrainConfig):
+    params = lm.init_params(key, cfg)
+    opt_init, _ = OPT.make_optimizer(train_cfg.optimizer)
+    return {
+        "params": params,
+        "opt": opt_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(state_shape, cfg, mesh):
+    pspecs = SH.param_specs(state_shape["params"], cfg, mesh)
+
+    def opt_spec(path, leaf):
+        # Optimizer state mirrors the param layout; factored adafactor
+        # moments drop the last axis -- match by reusing param_spec on the
+        # (possibly reduced) shape via the same path tail.
+        return SH.param_spec(SH._path_str(path), leaf.shape, cfg, mesh)
+
+    ospecs = jax.tree_util.tree_map_with_path(opt_spec, state_shape["opt"])
+    return {"params": pspecs, "opt": ospecs, "step": P()}
+
+
+def make_train_step(cfg, mesh, train_cfg: TrainConfig):
+    rules = SH.make_rules(cfg, mesh)
+    opt_init, opt_update = OPT.make_optimizer(train_cfg.optimizer)
+    gdtype = jnp.dtype(train_cfg.grad_dtype)
+
+    def loss_fn(params, batch):
+        # Collective compression: grads of bf16 params reduce in bf16.
+        p_low = jax.tree.map(
+            lambda x: x.astype(gdtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        loss, metrics = lm.forward_train(
+            p_low, cfg, batch, remat=train_cfg.remat,
+            z_loss=train_cfg.z_loss, lb_coef=train_cfg.lb_coef)
+        return loss, metrics
+
+    def train_step(state, batch):
+        with L.sharding_rules(rules):
+            params = state["params"]
+            if train_cfg.accum_steps > 1:
+                na = train_cfg.accum_steps
+
+                def micro(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + loss), metrics
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((na, x.shape[0] // na) + x.shape[1:]),
+                    batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), metrics = jax.lax.scan(micro, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / na, grads)
+                loss = loss / na
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+
+            grads, gnorm = OPT.clip_by_global_norm(
+                grads, train_cfg.optimizer.grad_clip)
+            new_params, new_opt = opt_update(
+                grads, state["opt"], params, state["step"])
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+            metrics = dict(metrics)
+            metrics["grad_norm"] = gnorm
+            metrics["lr"] = OPT.lr_schedule(train_cfg.optimizer, state["step"])
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, mesh, train_cfg, state_shape, batch_shape):
+    """jit with explicit in/out shardings + donation (production entry)."""
+    step = make_train_step(cfg, mesh, train_cfg)
+    sspec = state_specs(state_shape, cfg, mesh)
+    bspec = SH.batch_specs(batch_shape, cfg, mesh)
+    mspec = None  # metrics: let the compiler choose (scalars)
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, sspec), SH.named(mesh, bspec)),
+        out_shardings=(SH.named(mesh, sspec), None),
+        donate_argnums=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg, mesh, cache_len):
+    rules = SH.make_rules(cfg, mesh)
+
+    def prefill_step(params, batch):
+        with L.sharding_rules(rules):
+            kwargs = {}
+            if cfg.is_encdec:
+                kwargs["src_embeds"] = batch["src_embeds"]
+            if cfg.num_prefix_embeds:
+                kwargs["vision_embeds"] = batch["vision_embeds"]
+            p_low = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+            return lm.prefill(p_low, cfg, batch["tokens"],
+                              cache_len=cache_len, **kwargs)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh):
+    rules = SH.make_rules(cfg, mesh)
+    if rules:
+        # Measured regression (EXPERIMENTS.md §Perf cell 2): the
+        # zero-collective MoE dispatch gathers every local expert's weights,
+        # which loses at decode batch sizes (T_local ~ 8 tokens) -- GSPMD's
+        # lowering moves less there.  Dispatch trick is train/prefill-only.
+        rules = {**rules, "moe_shard_map": False, "decode_mla_shard": False}
+
+    def decode_step(params, caches, tokens, pos):
+        with L.sharding_rules(rules):
+            p_low = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+            logits, new_caches = lm.decode_step(p_low, cfg, caches, tokens, pos)
+        return logits, new_caches
+
+    return decode_step
+
+
+def serve_state_shapes(cfg, batch, cache_len):
+    """Abstract (params, caches) shapes for the decode dry-run."""
+    params_shape = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        functools.partial(lm.init_caches, cfg, batch, cache_len))
+    return params_shape, cache_shape

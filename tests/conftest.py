@@ -1,0 +1,27 @@
+import os
+import sys
+
+# Tests run against the source tree (PYTHONPATH=src also works; this makes
+# bare `pytest tests/` work too).  NOTE: no XLA_FLAGS here on purpose --
+# smoke tests and benches must see the real (single) device; multi-device
+# tests spawn subprocesses that set their own flags.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-5, err=""):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), f"{err}: leaf count {len(la)} != {len(lb)}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=rtol, atol=atol,
+            err_msg=f"{err}: leaf {i}")
+
+
+@pytest.fixture
+def rng():
+    import jax
+    return jax.random.PRNGKey(42)

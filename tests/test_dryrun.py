@@ -1,0 +1,55 @@
+"""Mini multi-pod dry-run in a subprocess (512 fake devices) + results audit.
+
+The full sweep lives in results/dryrun (produced by repro.launch.dryrun);
+this test (a) exercises the dry-run code path end-to-end on the cheapest
+cell, (b) audits whatever full-sweep results exist for completeness.
+"""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "seamless-m4t-medium", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path /
+                         "seamless-m4t-medium__decode_32k__single.json"))
+    assert "error" not in rec
+    assert rec["cost_analysis"]["flops"] > 0
+    assert rec["collectives"]["total_bytes"] >= 0
+    assert rec["memory_analysis"]["temp_bytes"] > 0
+
+
+def test_sweep_results_complete():
+    """Every (arch x shape x mesh) cell has a result: ok or documented skip."""
+    cells = glob.glob(os.path.join(RESULTS, "*.json"))
+    if len(cells) < 80:
+        pytest.skip(f"full sweep not finished ({len(cells)}/80 cells)")
+    errs, skips, oks = [], 0, 0
+    for c in cells:
+        r = json.load(open(c))
+        if "error" in r:
+            errs.append((os.path.basename(c), r["error"]))
+        elif "skipped" in r:
+            skips += 1
+        else:
+            oks += 1
+            assert r["cost_analysis"]["flops"] > 0, c
+    assert not errs, errs
+    # 8 quadratic archs x long_500k x 2 meshes = 16 documented skips.
+    assert skips == 16, f"expected 16 long_500k skips, got {skips}"
+    assert oks == len(cells) - skips

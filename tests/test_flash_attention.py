@@ -1,0 +1,82 @@
+"""Fused attention kernel vs naive oracle, across shapes/masks/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def naive(q, k, v, causal=True, window=0, softcap=0.0):
+    d = q.shape[-1]
+    s = jnp.einsum("nsd,ntd->nst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    S, T = q.shape[1], k.shape[1]
+    qpos, kpos = jnp.arange(S)[:, None], jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nst,ntd->nsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 32), (1, 100, 64), (3, 33, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_naive(shape, causal, rng):
+    N, S, d = shape
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (N, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (N, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (N, S, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, q_block=32,
+                                 kv_block=32, interpret=True)
+    want = naive(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_window_and_softcap(rng):
+    N, S, d = 2, 96, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (N, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (N, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (N, S, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, window=16,
+                                 softcap=30.0, q_block=32, kv_block=32,
+                                 interpret=True)
+    want = naive(q, k, v, causal=True, window=16, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_cross_lengths(rng):
+    """S != T (prefill against a longer cache)."""
+    N, S, T, d = 1, 24, 72, 32
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (N, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (N, T, d), jnp.float32)
+    v = jax.random.normal(ks[2], (N, T, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, q_block=16,
+                                 kv_block=32, interpret=True)
+    want = naive(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_bf16(rng):
+    N, S, d = 2, 64, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (N, S, d), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (N, S, d), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (N, S, d), jnp.float32).astype(jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, q_block=32, kv_block=32,
+                                 interpret=True)
+    want = naive(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2)

@@ -1,0 +1,233 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py).
+
+Every Pallas kernel runs in interpret mode (the kernel body executes on CPU
+exactly as Mosaic would schedule it on TPU) across shapes straddling tile
+boundaries (the paper's 31/33-element edge cases), dtypes, and operators --
+including non-commutative ones.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.kernels import ref
+
+B = "pallas-interpret"
+
+SIZES = [1, 7, 31, 33, 127, 128, 129, 255, 257, 1000, 4096, 5000]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_scan_add_sizes(n, dtype, rng):
+    if dtype == jnp.int32:
+        x = jax.random.randint(rng, (n,), -100, 100, dtype)
+    else:
+        x = jax.random.normal(rng, (n,), dtype)
+    got = forge.scan(alg.ADD, x, backend=B)
+    want = ref.ref_scan(alg.ADD, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-3, err=f"scan n={n}")
+
+
+@pytest.mark.parametrize("op_name", ["max", "min", "mul"])
+def test_scan_ops(op_name, rng):
+    op = alg.STD_OPS[op_name]
+    x = jax.random.uniform(rng, (777,), jnp.float32, 0.9, 1.1)
+    assert_trees_close(forge.scan(op, x, backend=B), ref.ref_scan(op, x),
+                       rtol=1e-4, atol=1e-4, err=op_name)
+
+
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("reverse", [True, False])
+def test_scan_modes(inclusive, reverse, rng):
+    x = jax.random.normal(rng, (513,), jnp.float32)
+    got = forge.scan(alg.ADD, x, inclusive=inclusive, reverse=reverse, backend=B)
+    want = ref.ref_scan(alg.ADD, x, inclusive=inclusive, reverse=reverse)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_scan_noncommutative_quaternion(rng):
+    ks = jax.random.split(rng, 4)
+    q = tuple(jax.random.normal(k, (300,), jnp.float32) * 0.2 for k in ks)
+    q = (q[0] + 1.0, q[1], q[2], q[3])
+    got = forge.scan(alg.QUATERNION_MUL, q, backend=B)
+    want = ref.ref_scan(alg.QUATERNION_MUL, q)
+    # 300-element non-commutative products accumulate association-order
+    # float drift between the tile tree and associative_scan's tree.
+    assert_trees_close(got, want, rtol=1e-2, atol=1e-2)
+
+
+def test_scan_mat2(rng):
+    ks = jax.random.split(rng, 4)
+    m = tuple(jax.random.normal(k, (200,), jnp.float32) * 0.3 for k in ks)
+    m = (m[0] + 1.0, m[1], m[2], m[3] + 1.0)
+    got = forge.scan(alg.MAT2_MUL, m, backend=B)
+    want = ref.ref_scan(alg.MAT2_MUL, m)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_scan_maxplus_affine(rng):
+    k1, k2 = jax.random.split(rng)
+    a = -jax.random.uniform(k1, (400,), jnp.float32, 0.0, 1.0)
+    b = jax.random.normal(k2, (400,), jnp.float32)
+    got = forge.scan(alg.MAXPLUS_AFFINE, (a, b), backend=B)
+    want = ref.ref_scan(alg.MAXPLUS_AFFINE, (a, b))
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 5, 3), (2, 37, 130), (3, 64, 128),
+                                   (2, 100, 1)])
+def test_channel_scan_linrec(shape, rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.uniform(k1, shape, jnp.float32, 0.5, 1.0)
+    b = jax.random.normal(k2, shape, jnp.float32)
+    got = forge.linear_recurrence(a, b, backend=B)
+    want = ref.ref_linear_recurrence(a, b)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=str(shape))
+
+
+def test_channel_scan_h0_and_reverse(rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    a = jax.random.uniform(k1, (2, 33, 140), jnp.float32, 0.6, 1.0)
+    b = jax.random.normal(k2, (2, 33, 140), jnp.float32)
+    h0 = jax.random.normal(k3, (2, 140), jnp.float32)
+    assert_trees_close(
+        forge.linear_recurrence(a, b, h0, backend=B),
+        ref.ref_linear_recurrence(a, b, h0), rtol=1e-4, atol=1e-4)
+    assert_trees_close(
+        forge.linear_recurrence(a, b, reverse=True, backend=B),
+        ref.ref_linear_recurrence(a, b, reverse=True), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1, 33, 257, 10000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.uint8])
+def test_mapreduce_sizes(n, dtype, rng):
+    if dtype == jnp.uint8:
+        x = jax.random.randint(rng, (n,), 0, 255, jnp.int32).astype(jnp.uint8)
+        f = alg.unitfloat8_decode
+    else:
+        x = jax.random.normal(rng, (n,), dtype)
+        f = lambda v: v
+    got = forge.mapreduce(f, alg.ADD, x, backend=B)
+    want = ref.ref_mapreduce(f, alg.ADD, x)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-2, err=f"mr n={n}")
+
+
+def test_mapreduce_logsumexp(rng):
+    x = jax.random.normal(rng, (3000,), jnp.float32) * 3
+    got = forge.mapreduce(lambda v: v, alg.LOGSUMEXP, x, backend=B)
+    want = ref.ref_mapreduce(lambda v: v, alg.LOGSUMEXP, x)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mapreduce_2d_axes(rng):
+    x = jax.random.normal(rng, (100, 200), jnp.float32)
+    got0 = forge.mapreduce(lambda v: v, alg.MAX, x, axis=0, backend=B)
+    np.testing.assert_allclose(np.asarray(got0), np.max(np.asarray(x), 0),
+                               rtol=1e-6)
+    got1 = forge.mapreduce(lambda v: v, alg.MAX, x, axis=1, backend=B)
+    np.testing.assert_allclose(np.asarray(got1), np.max(np.asarray(x), 1),
+                               rtol=1e-6)
+
+
+MAT_SHAPES = [(1, 100), (100, 1), (33, 65), (128, 128), (1000, 30), (30, 1000)]
+
+
+@pytest.mark.parametrize("shape", MAT_SHAPES)
+def test_matvec_shapes(shape, rng):
+    n, p = shape
+    k1, k2 = jax.random.split(rng)
+    A = jax.random.normal(k1, (n, p), jnp.float32)
+    x = jax.random.normal(k2, (n,), jnp.float32)
+    got = forge.semiring_matvec(alg.ARITHMETIC, A, x, backend=B)
+    want = ref.ref_matvec(alg.ARITHMETIC.f, alg.ADD, A, x)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3, err=str(shape))
+
+
+@pytest.mark.parametrize("shape", MAT_SHAPES)
+def test_vecmat_shapes(shape, rng):
+    n, p = shape
+    k1, k2 = jax.random.split(rng)
+    A = jax.random.normal(k1, (n, p), jnp.float32)
+    x = jax.random.normal(k2, (p,), jnp.float32)
+    got = forge.semiring_vecmat(alg.ARITHMETIC, A, x, backend=B)
+    want = ref.ref_vecmat(alg.ARITHMETIC.f, alg.ADD, A, x)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3, err=str(shape))
+
+
+@pytest.mark.parametrize("semiring", ["tropical_min_plus", "tropical_max_plus",
+                                      "log"])
+def test_semiring_matvec(semiring, rng):
+    sr = alg.STD_SEMIRINGS[semiring]
+    k1, k2 = jax.random.split(rng)
+    A = jax.random.normal(k1, (77, 50), jnp.float32)
+    x = jax.random.normal(k2, (77,), jnp.float32)
+    got = forge.semiring_matvec(sr, A, x, backend=B)
+    want = ref.ref_matvec(sr.f, sr.op, A, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=semiring)
+    x2 = jax.random.normal(k2, (50,), jnp.float32)
+    got = forge.semiring_vecmat(sr, A, x2, backend=B)
+    want = ref.ref_vecmat(sr.f, sr.op, A, x2)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=semiring)
+
+
+@pytest.mark.parametrize("shape", [(1000, 10), (4096, 1), (999, 7),
+                                   (600, 33), (515, 2)])
+def test_matvec_lane_packed_tall_narrow(shape, rng):
+    """p <= 64 dispatches the lane-packed kernel (ragged n via tail fold)."""
+    n, p = shape
+    k1, k2 = jax.random.split(rng)
+    A = jax.random.normal(k1, (n, p), jnp.float32)
+    x = jax.random.normal(k2, (n,), jnp.float32)
+    got = forge.semiring_matvec(alg.ARITHMETIC, A, x, backend=B)
+    want = ref.ref_matvec(alg.ARITHMETIC.f, alg.ADD, A, x)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3, err=str(shape))
+    got = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, A, x, backend=B)
+    want = ref.ref_matvec(alg.TROPICAL_MIN_PLUS.f, alg.MIN, A, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=str(shape))
+
+
+def test_matvec_noncommutative_order(rng):
+    """In-order reduction: matvec with MAT2 composition along rows."""
+    n, p = 40, 3
+    ks = jax.random.split(rng, 2)
+    A = jax.random.normal(ks[0], (n, p), jnp.float32) * 0.2
+    x = jax.random.normal(ks[1], (n,), jnp.float32) * 0.2
+    # f maps scalars to a 2x2 matrix tuple; op composes in row order.
+    f = lambda xv, av: (1.0 + 0 * av, xv * av, 0 * av, 1.0 + 0 * av)
+    got = forge.matvec(f, alg.MAT2_MUL, A, x, backend=B)
+    want = ref.ref_matvec(f, alg.MAT2_MUL, A, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [100, 4096, 100000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.uint8])
+def test_copy(n, dtype, rng):
+    if dtype == jnp.uint8:
+        x = jax.random.randint(rng, (n,), 0, 255, jnp.int32).astype(dtype)
+    else:
+        x = jax.random.normal(rng, (n,), jnp.float32).astype(dtype)
+    got = forge.copy(x, backend=B)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("nitem", [1, 4, 8])
+def test_copy_nitem_sweep(nitem, rng):
+    x = jax.random.normal(rng, (5000,), jnp.float32)
+    got = forge.copy(x, nitem=nitem, backend=B)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_xla_backend_parity(rng):
+    """The portable XLA fallback agrees with the oracle too."""
+    x = jax.random.normal(rng, (1234,), jnp.float32)
+    assert_trees_close(forge.scan(alg.ADD, x, backend="xla"),
+                       ref.ref_scan(alg.ADD, x), rtol=1e-4, atol=1e-4)
+    A = jax.random.normal(rng, (64, 32), jnp.float32)
+    xv = jax.random.normal(rng, (64,), jnp.float32)
+    assert_trees_close(forge.semiring_matvec(alg.ARITHMETIC, A, xv, backend="xla"),
+                       ref.ref_matvec(alg.ARITHMETIC.f, alg.ADD, A, xv),
+                       rtol=1e-4, atol=1e-4)

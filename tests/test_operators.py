@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the operator algebra + primitives.
+
+System invariants under test:
+* every AssocOp is associative; identity is exact (op(id, x) == x);
+* scan with a random *non-commutative* affine operator matches a sequential
+  Python fold (the ground truth independent of any JAX machinery);
+* commutative-op scans are permutation-consistent reductions;
+* UnitFloat8 encode/decode roundtrip (the paper's custom 8-bit type).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import assert_trees_close
+from repro.core import operators as alg
+from repro.core import primitives as forge
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+floats = st.floats(-3.0, 3.0, allow_nan=False, width=32)
+
+
+def _leaves(op_name, vals3):
+    """Build three elements of the given op's element type from floats."""
+    a, b, c = [jnp.asarray(v, jnp.float32) for v in vals3]
+    if op_name in ("affine", "maxplus_affine"):
+        return (a, b), (b, c), (c, a)
+    if op_name in ("quaternion_mul", "mat2_mul"):
+        return ((a, b, c, a), (b, c, a, b), (c, a, b, c))
+    return a, b, c
+
+
+@pytest.mark.parametrize("op_name", list(alg.STD_OPS))
+@settings(**SETTINGS)
+@given(vals=st.tuples(floats, floats, floats))
+def test_associativity(op_name, vals):
+    op = alg.STD_OPS[op_name]
+    if op_name == "softmax_merge":
+        pytest.skip("needs structured (m,l,o) elements; covered below")
+    x, y, z = _leaves(op_name, vals)
+    lhs = op(op(x, y), z)
+    rhs = op(x, op(y, z))
+    assert_trees_close(lhs, rhs, rtol=1e-4, atol=1e-4, err=op_name)
+
+
+@pytest.mark.parametrize("op_name", list(alg.STD_OPS))
+@settings(**SETTINGS)
+@given(v=floats)
+def test_identity_exact(op_name, v):
+    op = alg.STD_OPS[op_name]
+    if op_name == "softmax_merge":
+        pytest.skip("covered below")
+    x, _, _ = _leaves(op_name, (v, v / 2 + 0.1, -v))
+    ident = op.identity(x)
+    assert_trees_close(op(ident, x), x, rtol=1e-6, atol=1e-6, err=op_name)
+    assert_trees_close(op(x, ident), x, rtol=1e-6, atol=1e-6, err=op_name)
+
+
+@settings(**SETTINGS)
+@given(m1=floats, m2=floats, l1=st.floats(0.1, 2.0), l2=st.floats(0.1, 2.0))
+def test_softmax_merge_assoc_and_identity(m1, m2, l1, l2):
+    mk = lambda m, l: (jnp.asarray(m, jnp.float32),
+                       jnp.asarray(l, jnp.float32),
+                       jnp.asarray(l * 0.5, jnp.float32))
+    op = alg.SOFTMAX_MERGE
+    x, y, z = mk(m1, l1), mk(m2, l2), mk((m1 + m2) / 2, l1 + l2)
+    assert_trees_close(op(op(x, y), z), op(x, op(y, z)), rtol=1e-4, atol=1e-4)
+    ident = op.identity(x)
+    assert_trees_close(op(ident, x), x, rtol=1e-6, atol=1e-6)
+    # Commutativity (it is declared commutative).
+    assert_trees_close(op(x, y), op(y, x), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(data=st.lists(st.tuples(st.floats(0.25, 1.0, width=32), floats),
+                     min_size=1, max_size=60))
+def test_scan_affine_vs_python_fold(data):
+    """Non-commutative affine scan == sequential Python ground truth."""
+    a = jnp.asarray([d[0] for d in data], jnp.float32)
+    b = jnp.asarray([d[1] for d in data], jnp.float32)
+    got_a, got_b = forge.scan(alg.AFFINE, (a, b), backend="pallas-interpret")
+    h, acc_a = 0.0, 1.0
+    want_b, want_a = [], []
+    for ai, bi in data:
+        h = ai * h + bi
+        acc_a *= ai
+        want_b.append(h)
+        want_a.append(acc_a)
+    np.testing.assert_allclose(np.asarray(got_b), want_b, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_a), want_a, rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(xs=st.lists(floats, min_size=1, max_size=80))
+def test_mapreduce_matches_numpy(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    got = forge.mapreduce(lambda v: v, alg.ADD, x, backend="pallas-interpret")
+    np.testing.assert_allclose(float(got), float(np.sum(xs)),
+                               rtol=1e-4, atol=1e-3)
+    got = forge.mapreduce(lambda v: v, alg.MAX, x, backend="pallas-interpret")
+    assert float(got) == pytest.approx(max(xs), rel=1e-6)
+
+
+@settings(**SETTINGS)
+@given(u=st.lists(st.integers(0, 255), min_size=1, max_size=50))
+def test_unitfloat8_roundtrip(u):
+    arr = jnp.asarray(u, jnp.uint8)
+    dec = alg.unitfloat8_decode(arr)
+    assert float(jnp.max(jnp.abs(dec))) <= 1.0 + 1e-6
+    re = alg.unitfloat8_encode(dec)
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(arr))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 300))
+def test_scan_length_property(n):
+    """Scan output length == input length for every n (tile raggedness)."""
+    x = jnp.arange(n, dtype=jnp.float32)
+    out = forge.scan(alg.ADD, x, backend="pallas-interpret")
+    assert out.shape == (n,)
+    np.testing.assert_allclose(float(out[-1]), n * (n - 1) / 2, rtol=1e-5)

@@ -1,0 +1,204 @@
+"""End-to-end behaviour tests: per-arch smoke (deliverable f) + consistency.
+
+For every assigned architecture, the REDUCED config runs one forward/train
+step on CPU asserting output shapes + finiteness, and the prefill->decode
+path is checked for *consistency with the full forward pass* -- the KV/ring/
+recurrent-state caches must reproduce the same last-token logits as a fresh
+full-sequence forward (the strongest cheap invariant a serving stack has).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as C
+from repro.models import lm
+
+ARCHS = C.list_archs()
+
+
+def _batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.is_encdec:
+        batch["src_embeds"] = jax.random.normal(ks[2], (B, S, cfg.d_model),
+                                                jnp.float32) * 0.1
+    if cfg.num_prefix_embeds:
+        batch["vision_embeds"] = jax.random.normal(
+            ks[3], (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch, rng):
+    """One forward/train step on the reduced config: shapes + no NaNs."""
+    cfg = C.get_config(arch, smoke=True)
+    assert len(cfg.layer_pattern()) == cfg.n_layers
+    params = lm.init_params(rng, cfg)
+    batch = _batch(cfg, rng)
+    loss, metrics = jax.jit(
+        lambda p, b: lm.forward_train(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    for k, v in metrics.items():
+        assert np.isfinite(float(v)), f"{arch}: metric {k} non-finite"
+    # Gradients exist and are finite for every parameter.
+    grads = jax.jit(jax.grad(
+        lambda p, b: lm.forward_train(p, cfg, b)[0]))(params, batch)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all(), f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_prefill_decode_consistency(arch, rng):
+    """decode_step(cache(prefill(t[:S-1])), t[S-1]) == prefill(t[:S]) logits.
+
+    Run in float32: this is a cache-logic invariant (bf16 would only add
+    rounding noise between the blockwise and direct softmax paths).
+    """
+    import dataclasses
+    cfg = C.get_config(arch, smoke=True)
+    # float32 for exactness; high capacity_factor because capacity-*dropped*
+    # tokens are a documented source of batched-vs-incremental divergence in
+    # capacity-based MoE (serving uses dropless capacity) -- this test checks
+    # the cache logic, not drop policy.
+    cfg = dataclasses.replace(cfg, dtype="float32", capacity_factor=16.0)
+    B, S = 2, 16
+    batch = _batch(cfg, rng, B=B, S=S)
+    params = lm.init_params(rng, cfg)
+    kwargs = {k: batch[k] for k in ("src_embeds", "vision_embeds")
+              if k in batch}
+    cache_len = S + cfg.num_prefix_embeds + 4
+
+    # Ground truth: full prefill over S tokens.
+    full_logits, _ = jax.jit(lambda p, t: lm.prefill(
+        p, cfg, t, cache_len=cache_len, **kwargs))(params, batch["tokens"])
+
+    # Cached path: prefill S-1 then one decode step with token S-1.
+    kwargs_m1 = dict(kwargs)
+    if "src_embeds" in kwargs_m1:
+        pass  # encoder input unchanged (full source)
+    part_logits, caches = jax.jit(lambda p, t: lm.prefill(
+        p, cfg, t, cache_len=cache_len, **kwargs_m1))(
+            params, batch["tokens"][:, :S - 1])
+    pos = S - 1 + cfg.num_prefix_embeds
+    step_logits, _ = jax.jit(lambda p, c, t: lm.decode_step(
+        p, cfg, c, t, jnp.asarray(pos, jnp.int32)))(
+            params, caches, batch["tokens"][:, S - 1:S])
+
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits),
+        rtol=1e-3, atol=1e-3,
+        err_msg=f"{arch}: decode path diverges from full forward")
+
+
+def test_moe_router_invariants(rng):
+    from repro.models import moe as M
+    cfg = C.get_config("moonshot-v1-16b-a3b", smoke=True)
+    params = M.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model), jnp.float32) * 0.3
+    y, aux = M.moe_forward(params, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["lb_loss"]) >= 0.99  # >= 1 at balance by construction
+    # Zero input -> router uniform-ish, output finite.
+    y0, _ = M.moe_forward(params, cfg, jnp.zeros_like(x))
+    assert np.isfinite(np.asarray(y0)).all()
+
+
+def test_moe_capacity_drop(rng):
+    """With capacity_factor << 1 tokens drop but output stays finite."""
+    import dataclasses
+    from repro.models import moe as M
+    cfg = C.get_config("moonshot-v1-16b-a3b", smoke=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.1)
+    params = M.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 32, cfg.d_model), jnp.float32)
+    y, _ = M.moe_forward(params, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_blockwise_attention_matches_naive(rng):
+    from repro.models.attention import blockwise_attention
+    B, S, K, G, hd = 2, 64, 2, 2, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    qpos = jnp.arange(S)
+    got = blockwise_attention(q, k, v, qpos=qpos, causal=True, kv_block=16)
+    # naive reference
+    s = jnp.einsum("bskgd,btkd->bskgt", q / np.sqrt(hd), k)
+    mask = qpos[:, None] >= jnp.arange(S)[None, :]
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bskgt,btkd->bskgd", p, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_window(rng):
+    from repro.models.attention import blockwise_attention
+    B, S, K, G, hd, W = 1, 48, 1, 2, 8, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    qpos = jnp.arange(S)
+    got = blockwise_attention(q, k, v, qpos=qpos, causal=True, window=W,
+                              kv_block=16)
+    s = jnp.einsum("bskgd,btkd->bskgt", q / np.sqrt(hd), k)
+    kpos = jnp.arange(S)
+    mask = (qpos[:, None] >= kpos[None, :]) & (qpos[:, None] - kpos[None, :] < W)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    want = jnp.einsum("bskgt,btkd->bskgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decode_matches_forward(rng):
+    """Step-by-step RG-LRU decode reproduces the scan-based forward."""
+    from repro.models import recurrent as R
+    cfg = C.get_config("recurrentgemma-2b", smoke=True)
+    params = R.init_rglru_block(rng, cfg)
+    x = jax.random.normal(rng, (2, 12, cfg.d_model), jnp.float32) * 0.3
+    y_full, cache = R.rglru_forward(params, cfg, x, return_cache=True)
+    cache0 = R.init_rglru_cache(cfg, 2)
+    ys = []
+    c = cache0
+    for t in range(12):
+        yt, c = R.rglru_decode(params, cfg, x[:, t:t + 1], c)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(c["h"]), np.asarray(cache["h"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_decode_matches_forward(rng):
+    """One-step mLSTM decode continues the chunkwise forward exactly."""
+    from repro.models import recurrent as R
+    cfg = C.get_config("xlstm-1.3b", smoke=True)
+    params = R.init_mlstm_block(rng, cfg)
+    T = 2 * cfg.mlstm_chunk
+    x = jax.random.normal(rng, (2, T + 1, cfg.d_model), jnp.float32) * 0.3
+    # Full forward over T+1 is not chunk-divisible; instead compare:
+    # forward over T with cache, then decode step T+1 == sequential decode.
+    y_full, cache = R.mlstm_forward(params, cfg, x[:, :T], return_cache=True)
+    c = R.init_mlstm_cache(cfg, 2)
+    for t in range(T):
+        yt, c = R.mlstm_decode(params, cfg, x[:, t:t + 1], c)
+        np.testing.assert_allclose(
+            np.asarray(yt[:, 0]), np.asarray(y_full[:, t]), rtol=5e-3,
+            atol=5e-3, err_msg=f"mlstm t={t}")
+    # States agree at the boundary.
+    np.testing.assert_allclose(np.asarray(c["C"]), np.asarray(cache["C"]),
+                               rtol=5e-3, atol=5e-3)
+    y1, _ = R.mlstm_decode(params, cfg, x[:, T:T + 1], cache)
+    y2, _ = R.mlstm_decode(params, cfg, x[:, T:T + 1], c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-3,
+                               atol=5e-3)

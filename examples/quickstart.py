@@ -59,7 +59,17 @@ logp = forge.semiring_vecmat(alg.LOG_SEMIRING, logA, logp, backend=B)
 print("updated log-probs (logsumexp accumulation), max:",
       float(jnp.max(logp)))
 
-print("\n== 6. linear recurrence: the model-stack workhorse ==")
+print("\n== 6. segmented primitives: ragged batches without padding ==")
+# Three "requests" of lengths 3, 5, 2 flattened into one stream.
+vals = jnp.arange(10, dtype=jnp.float32)
+offs = jnp.asarray([0, 3, 8, 10], jnp.int32)
+print("per-request running sums:",
+      np.asarray(forge.segmented_scan(alg.ADD, vals, offsets=offs, backend=B)))
+print("per-request totals:      ",
+      np.asarray(forge.segmented_mapreduce(
+          lambda v: v, alg.ADD, vals, offsets=offs, backend=B)))
+
+print("\n== 7. linear recurrence: the model-stack workhorse ==")
 a = jax.random.uniform(key, (2, 128, 256), jnp.float32, 0.9, 0.99)
 b = jax.random.normal(jax.random.fold_in(key, 9), (2, 128, 256), jnp.float32)
 h = forge.linear_recurrence(a, b, backend=B)

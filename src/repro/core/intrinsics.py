@@ -248,6 +248,16 @@ def detect_chip() -> str:
 
 _IMPL_REGISTRY: dict[tuple[str, str], Callable] = {}
 _FORCED_BACKEND: str | None = None
+# Optional autotuner hook (installed by core.tuning to avoid a layering
+# cycle): called as hook(primitive, backend, impl) and may return a wrapped
+# impl that injects a benchmarked TuningPolicy, or None to pass through.
+_TUNER_HOOK: Callable[[str, str, Callable], Callable | None] | None = None
+
+
+def set_tuner_hook(hook: Callable | None):
+    """Install (or clear) the autotune wrapper consulted by resolve_impl."""
+    global _TUNER_HOOK
+    _TUNER_HOOK = hook
 
 
 def register_impl(primitive: str, backend: str):
@@ -273,11 +283,15 @@ def current_backend() -> str:
 def resolve_impl(primitive: str, backend: str | None = None) -> Callable:
     backend = backend or current_backend()
     key = (primitive, backend)
-    if key in _IMPL_REGISTRY:
-        return _IMPL_REGISTRY[key]
-    # Fall back to the portable XLA implementation -- the algorithmic layer is
-    # always available even on backends with no Pallas lowering.
-    fallback = (primitive, "xla")
-    if fallback in _IMPL_REGISTRY:
-        return _IMPL_REGISTRY[fallback]
-    raise NotImplementedError(f"no implementation registered for {primitive}")
+    impl = _IMPL_REGISTRY.get(key)
+    if impl is None:
+        # Fall back to the portable XLA implementation -- the algorithmic
+        # layer is always available even on backends with no Pallas lowering.
+        impl = _IMPL_REGISTRY.get((primitive, "xla"))
+    if impl is None:
+        raise NotImplementedError(f"no implementation registered for {primitive}")
+    if _TUNER_HOOK is not None:
+        wrapped = _TUNER_HOOK(primitive, backend, impl)
+        if wrapped is not None:
+            return wrapped
+    return impl

@@ -301,6 +301,47 @@ MAT2_MUL = AssocOp(
 
 
 # --------------------------------------------------------------------------
+# Segmented lift: turn any AssocOp into an operator over (flag, value) pairs
+# that resets at segment boundaries (Blelloch's segmented-scan construction).
+# Elements are ``(flag, value)`` where a nonzero flag marks the first element
+# of a segment.  The lift preserves associativity; it is never commutative
+# (segment boundaries are positional), so kernels always take the
+# order-preserving scan path.
+# --------------------------------------------------------------------------
+
+
+def segmented(op: AssocOp) -> AssocOp:
+    """Lift ``op`` to the segment-resetting operator over (flag, value).
+
+    combine((f1, v1), (f2, v2)) = (f1 | f2, v2 if f2 else op(v1, v2)):
+    once the right operand starts a new segment, everything to its left is
+    discarded.  Identity is (0, identity_of_op).
+    """
+
+    def combine(p, q):
+        f1, v1 = p
+        f2, v2 = q
+        started = f2 != 0
+        merged = op(v1, v2)
+        v = jax.tree.map(lambda m, r: jnp.where(started, r, m), merged, v2)
+        return (jnp.maximum(f1, f2), v)
+
+    def identity(like):
+        f_like, v_like = like
+        return (
+            jax.tree.map(lambda l: full_like_spec(l, 0), f_like),
+            op.identity(v_like),
+        )
+
+    return AssocOp(
+        name=f"segmented[{op.name}]",
+        combine=combine,
+        identity=identity,
+        commutative=False,
+    )
+
+
+# --------------------------------------------------------------------------
 # Semirings: (map f, reduce op) pairs for generalized matvec / mapreduce.
 # --------------------------------------------------------------------------
 

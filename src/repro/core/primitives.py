@@ -25,7 +25,10 @@ import jax.numpy as jnp
 
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
+from repro.core import tuning as _tuning
 from repro.kernels import ops as _ops  # noqa: F401  (registers backends)
+
+_tuning.maybe_enable_from_env()  # REPRO_AUTOTUNE=1 turns on autotuned dispatch
 
 Pytree = Any
 
@@ -52,6 +55,42 @@ def mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *, axis=None,
               backend: str | None = None) -> Pytree:
     """``op``-reduction of ``f(x)`` (paper §V-A). ``op`` must be commutative."""
     return ki.resolve_impl("mapreduce", backend)(f, op, xs, axis=axis)
+
+
+def segmented_scan(op: alg.AssocOp, xs: Pytree, *, flags: jax.Array = None,
+                   offsets: jax.Array = None, inclusive: bool = True,
+                   backend: str | None = None) -> Pytree:
+    """Per-segment prefix scan over flat ragged data (MoE groups, ragged
+    decode batches).
+
+    Segments are contiguous runs of the flat ``(n,)`` leaves, described by
+    exactly one of:
+
+    * ``flags`` -- ``(n,)`` int/bool array, nonzero marks a segment start
+      (element 0 always implicitly starts a segment);
+    * ``offsets`` -- ``(num_segments + 1,)`` CSR-style monotone starts with
+      ``offsets[0] == 0`` and ``offsets[-1] == n``.
+
+    ``op`` may be non-commutative and elements arbitrary pytrees, exactly as
+    for :func:`scan`; the scan restarts at every boundary.
+    """
+    return ki.resolve_impl("segmented_scan", backend)(
+        op, xs, flags=flags, offsets=offsets, inclusive=inclusive)
+
+
+def segmented_mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *,
+                        flags: jax.Array = None, offsets: jax.Array = None,
+                        num_segments: int | None = None,
+                        backend: str | None = None) -> Pytree:
+    """Per-segment op-reduction of ``f(x)`` -> one element per segment.
+
+    With ``offsets``, the output length is ``len(offsets) - 1``; with
+    ``flags``, a static ``num_segments`` is required (JAX shapes are static)
+    and segments are numbered in flag order.  Empty segments yield ``op``'s
+    identity.
+    """
+    return ki.resolve_impl("segmented_mapreduce", backend)(
+        f, op, xs, flags=flags, offsets=offsets, num_segments=num_segments)
 
 
 def semiring_matvec(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,

@@ -1,0 +1,254 @@
+"""Empirical autotuner for kernel block/tile parameters.
+
+The static :class:`~repro.core.intrinsics.TuningPolicy` hierarchy encodes
+*priors* per chip family; this module adds the measurement layer on top.
+Kokkos/RAJA-style portability studies find tile/block-size selection to be
+the dominant cost of moving performance-portable kernels between devices, so
+instead of trusting the prior everywhere, the first call of a tunable
+primitive on a new (primitive, operator, dtype, shape-bucket, platform) key
+benchmarks a small candidate ladder of policies on the *actual* inputs and
+memoizes the winner in an on-disk JSON cache.  Every later call -- including
+calls from inside ``jax.jit`` traces, where timing would be meaningless --
+reuses the cached winner with zero measurement overhead.
+
+Layering: ``core.intrinsics`` knows nothing about this module; it exposes a
+hook (:func:`~repro.core.intrinsics.set_tuner_hook`) that :func:`enable`
+installs.  ``resolve_impl`` consults the hook, so *every* primitive dispatch
+site gets tuning for free and the algorithmic layer stays backend- and
+tuner-agnostic.
+
+Usage::
+
+    from repro.core import tuning
+    tuning.enable()                      # or REPRO_AUTOTUNE=1 in the env
+    forge.scan(alg.ADD, x)               # first call: benchmarks + caches
+    forge.scan(alg.ADD, jnp.ones_like(x))  # same key: cache hit, no bench
+
+The cache path defaults to ``~/.cache/repro/tuning.json`` and can be moved
+with ``REPRO_TUNING_CACHE=/path/to/tuning.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.core import intrinsics as ki
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNING_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "tuning.json"))
+
+
+def shape_bucket(n: int) -> int:
+    """Power-of-two bucket so dimension jitter shares one tuning entry."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# What is tunable: per-primitive candidate ladders + key extraction.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableSpec:
+    """How to tune one primitive: cache-key fields + candidate overrides."""
+
+    keyer: Callable[[tuple, dict], tuple[str, str, int] | None]
+    candidates: tuple[dict, ...]  # TuningPolicy field overrides to race
+
+
+def _tree_key(xs) -> tuple[str, int]:
+    leaves = jax.tree.leaves(xs)
+    dtype = str(jax.numpy.result_type(leaves[0]))
+    n = sum(int(l.size) for l in leaves)
+    return dtype, n
+
+
+def _scan_keyer(args, kwargs):
+    op, xs = args[0], args[1]
+    dtype, n = _tree_key(xs)
+    return getattr(op, "name", "?"), dtype, n
+
+
+def _mapreduce_keyer(args, kwargs):
+    op, xs = args[1], args[2]
+    dtype, n = _tree_key(xs)
+    return getattr(op, "name", "?"), dtype, n
+
+
+def _copy_keyer(args, kwargs):
+    dtype, n = _tree_key(args[0])
+    return "copy", dtype, n
+
+
+def _ladder(field: str, values) -> tuple[dict, ...]:
+    return tuple({field: v} for v in values)
+
+
+TUNABLE: dict[str, TunableSpec] = {
+    "scan": TunableSpec(_scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
+    "segmented_scan": TunableSpec(
+        _scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
+    "segmented_mapreduce": TunableSpec(
+        _mapreduce_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
+    "mapreduce": TunableSpec(
+        _mapreduce_keyer, _ladder("nitem_reduce", (4, 8, 16))),
+    "copy": TunableSpec(_copy_keyer, _ladder("nitem_copy", (4, 8, 16))),
+}
+
+
+# ---------------------------------------------------------------------------
+# The tuner itself.
+# ---------------------------------------------------------------------------
+
+
+class Autotuner:
+    """Benchmark-once, memoize-forever policy selection with a JSON cache."""
+
+    def __init__(self, cache_path: str | None = None, *, bench_repeats: int = 2):
+        self.cache_path = cache_path or default_cache_path()
+        self.bench_repeats = bench_repeats
+        self.stats = {"benchmarks": 0, "hits": 0, "bench_calls": 0}
+        self._cache: dict[str, dict] = {}
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+
+    def _load(self):
+        try:
+            with open(self.cache_path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self._cache = data
+        except (OSError, ValueError):
+            self._cache = {}
+
+    def _save(self):
+        try:
+            os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
+            tmp = self.cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._cache, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            pass  # caching is best-effort; never fail the computation
+
+    # -- keys ---------------------------------------------------------------
+
+    def make_key(self, primitive: str, backend: str, op_name: str,
+                 dtype: str, n: int) -> str:
+        platform = f"{jax.default_backend()}/{ki.detect_chip()}"
+        return (f"{primitive}|op={op_name}|dtype={dtype}"
+                f"|n={shape_bucket(n)}|backend={backend}|platform={platform}")
+
+    def lookup(self, key: str) -> dict | None:
+        entry = self._cache.get(key)
+        if entry is not None:
+            self.stats["hits"] += 1
+        return entry
+
+    # -- measurement --------------------------------------------------------
+
+    def _time(self, fn) -> float:
+        out = fn()                                   # compile + warm cache
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(self.bench_repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def benchmark(self, key: str, spec: TunableSpec, base: ki.TuningPolicy,
+                  impl: Callable, args: tuple, kwargs: dict) -> dict:
+        """Race the candidate ladder on the actual inputs; memoize winner."""
+        self.stats["benchmarks"] += 1
+        best_t, best_ov = float("inf"), {}
+        for overrides in spec.candidates:
+            policy = dataclasses.replace(base, **overrides)
+            try:
+                t = self._time(lambda: impl(*args, **kwargs, policy=policy))
+            except Exception:
+                continue  # candidate invalid for this shape -- skip it
+            self.stats["bench_calls"] += 1
+            if t < best_t:
+                best_t, best_ov = t, dict(overrides)
+        entry = {"overrides": best_ov, "seconds": best_t}
+        if best_t != float("inf"):
+            # Only memoize a real measurement: if every candidate failed
+            # (e.g. a transient compile/OOM error), retry on the next call
+            # instead of pinning the untuned base policy forever -- and never
+            # write non-standard `Infinity` into the JSON cache.
+            self._cache[key] = entry
+            self._save()
+        return entry
+
+
+# ---------------------------------------------------------------------------
+# resolve_impl hook.
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Autotuner | None = None
+
+
+def active() -> Autotuner | None:
+    return _ACTIVE
+
+
+def _all_concrete(args, kwargs) -> bool:
+    return not any(isinstance(l, jax.core.Tracer)
+                   for l in jax.tree.leaves((args, kwargs)))
+
+
+def _hook(primitive: str, backend: str, impl: Callable) -> Callable | None:
+    spec = TUNABLE.get(primitive)
+    if spec is None or not backend.startswith("pallas"):
+        return None  # nothing to tune: XLA fallbacks ignore the policy
+
+    def tuned(*args, **kwargs):
+        tuner = _ACTIVE
+        if tuner is None or kwargs.get("policy") is not None:
+            return impl(*args, **kwargs)
+        keyinfo = spec.keyer(args, kwargs)
+        if keyinfo is None:
+            return impl(*args, **kwargs)
+        key = tuner.make_key(primitive, backend, *keyinfo)
+        base = ki.resolve_tuning(
+            "interpret" if backend == "pallas-interpret" else None)
+        entry = tuner.lookup(key)
+        if entry is None:
+            if not _all_concrete(args, kwargs):
+                # Under tracing there is nothing meaningful to time; run the
+                # prior policy and leave the key for a concrete call.
+                return impl(*args, **kwargs)
+            entry = tuner.benchmark(key, spec, base, impl, args, kwargs)
+        policy = dataclasses.replace(base, **entry["overrides"])
+        return impl(*args, **kwargs, policy=policy)
+
+    return tuned
+
+
+def enable(cache_path: str | None = None, **kw) -> Autotuner:
+    """Install the autotuner behind every resolve_impl dispatch."""
+    global _ACTIVE
+    _ACTIVE = Autotuner(cache_path, **kw)
+    ki.set_tuner_hook(_hook)
+    return _ACTIVE
+
+
+def disable():
+    global _ACTIVE
+    _ACTIVE = None
+    ki.set_tuner_hook(None)
+
+
+def maybe_enable_from_env():
+    if os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0"):
+        enable()

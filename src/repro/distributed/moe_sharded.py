@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import operators as alg
+from repro.core import primitives as forge
 from repro.models import layers as L
 
 
@@ -92,9 +94,15 @@ def moe_forward_sharded(params, cfg, x, mesh):
         flat_g = gates.reshape(-1)
         order = jnp.argsort(flat_e, stable=True)
         se, st, sg = flat_e[order], flat_t[order], flat_g[order]
-        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
-        starts = jnp.cumsum(counts) - counts
-        pos = jnp.arange(se.shape[0], dtype=jnp.int32) - starts[se]
+        # Within-expert slot index = exclusive segmented +scan of ones over
+        # the expert-sorted stream (segment = run of equal expert id).  This
+        # is the ragged expert grouping done natively -- no E-sized
+        # counts/starts scatter, no padded intermediate.
+        run_flags = jnp.concatenate(
+            [jnp.ones((1,), jnp.int32), (se[1:] != se[:-1]).astype(jnp.int32)])
+        pos = forge.segmented_scan(
+            alg.ADD, jnp.ones_like(se, jnp.int32), flags=run_flags,
+            inclusive=False)
         keep = pos < C
 
         # ---- take only MY experts (zero-collective "all-to-all") ----

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 from repro.core import intrinsics as ki
 

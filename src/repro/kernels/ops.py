@@ -28,6 +28,7 @@ from repro.kernels import mapreduce as mapreduce_k
 from repro.kernels import matvec as matvec_k
 from repro.kernels import ref
 from repro.kernels import scan as scan_k
+from repro.kernels import segmented as seg_k
 
 Pytree = Any
 
@@ -110,6 +111,91 @@ ki.register_impl("scan", "pallas-interpret")(
 @ki.register_impl("scan", "xla")
 def _scan_xla(op, xs, *, axis=0, inclusive=True, reverse=False, policy=None):
     return ref.ref_scan(op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# segmented scan / mapreduce (ragged workloads)
+# ---------------------------------------------------------------------------
+
+
+def _segment_flags(xs, flags, offsets):
+    """Normalize either segment descriptor to a flag array."""
+    if (flags is None) == (offsets is None):
+        raise ValueError("pass exactly one of flags= or offsets=")
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if offsets is not None:
+        return seg_k.offsets_to_flags(offsets, n)
+    return flags.astype(jnp.int32)
+
+
+def _segmented_scan_pallas(op, xs, *, flags=None, offsets=None, inclusive=True,
+                           interpret=False, policy=None):
+    f = _segment_flags(xs, flags, offsets)
+    return seg_k.segmented_scan_1d_pallas(
+        op, xs, f, inclusive=inclusive, policy=policy, interpret=interpret)
+
+
+ki.register_impl("segmented_scan", "pallas-tpu")(
+    functools.partial(_segmented_scan_pallas, interpret=False))
+ki.register_impl("segmented_scan", "pallas-interpret")(
+    functools.partial(_segmented_scan_pallas, interpret=True))
+
+
+@ki.register_impl("segmented_scan", "xla")
+def _segmented_scan_xla(op, xs, *, flags=None, offsets=None, inclusive=True,
+                        policy=None):
+    """Portable path: associative_scan of the lifted (flag, value) operator."""
+    f = _segment_flags(xs, flags, offsets)
+    seg = alg.segmented(op)
+    _, incl = jax.lax.associative_scan(seg.combine, (f, xs), axis=0)
+    if inclusive:
+        return incl
+    ident = op.identity(jax.tree.map(lambda l: l[:1], xs))
+    shifted = jax.tree.map(
+        lambda l, i: jnp.concatenate([i, l[:-1]], axis=0), incl, ident)
+    ident_full = op.identity(incl)
+    return jax.tree.map(
+        lambda s, i: jnp.where(f != 0, i, s), shifted, ident_full)
+
+
+def _segmented_mapreduce_pallas(f, op, xs, *, flags=None, offsets=None,
+                                num_segments=None, interpret=False,
+                                policy=None):
+    fl = _segment_flags(xs, flags, offsets)
+    vals = f(xs)
+    incl = seg_k.segmented_scan_1d_pallas(
+        op, vals, fl, inclusive=True, policy=policy, interpret=interpret)
+    return seg_k.gather_segment_lasts(
+        op, incl, offsets=offsets, flags=None if offsets is not None else fl,
+        num_segments=num_segments)
+
+
+ki.register_impl("segmented_mapreduce", "pallas-tpu")(
+    functools.partial(_segmented_mapreduce_pallas, interpret=False))
+ki.register_impl("segmented_mapreduce", "pallas-interpret")(
+    functools.partial(_segmented_mapreduce_pallas, interpret=True))
+
+
+@ki.register_impl("segmented_mapreduce", "xla")
+def _segmented_mapreduce_xla(f, op, xs, *, flags=None, offsets=None,
+                             num_segments=None, policy=None):
+    fl = _segment_flags(xs, flags, offsets)
+    vals = f(xs)
+    # Fast path: the standard algebra over plain arrays maps onto XLA's
+    # native segment reductions.
+    direct = {"add": jax.ops.segment_sum, "mul": jax.ops.segment_prod,
+              "max": jax.ops.segment_max, "min": jax.ops.segment_min}
+    ns = num_segments if offsets is None else offsets.shape[0] - 1
+    if op.name in direct and isinstance(vals, jax.Array) and ns is not None:
+        seg_ids = (seg_k.flags_to_segment_ids(fl) if offsets is None else
+                   jnp.searchsorted(offsets[1:], jnp.arange(vals.shape[0]),
+                                    side="right"))
+        return direct[op.name](vals, seg_ids, num_segments=ns)
+    seg = alg.segmented(op)
+    _, incl = jax.lax.associative_scan(seg.combine, (fl, vals), axis=0)
+    return seg_k.gather_segment_lasts(
+        op, incl, offsets=offsets, flags=None if offsets is not None else fl,
+        num_segments=num_segments)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,15 @@
+"""Version-compat shim for ``jax.experimental.pallas.tpu``.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` across JAX releases.  Kernels import ``pltpu`` from here so
+they are written against the current name and still run on older JAX.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl  # noqa: F401  (re-export)
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version-dependent
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["pl", "pltpu"]

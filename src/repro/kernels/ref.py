@@ -80,3 +80,58 @@ def ref_linear_recurrence(a: jax.Array, b: jax.Array, h0=None,
         return B
     h0 = jnp.expand_dims(h0, axis)
     return A * h0 + B
+
+
+# ---------------------------------------------------------------------------
+# Segmented primitives.  Oracles only: they require *concrete* segment
+# descriptors and loop over segments in Python, applying the flat references
+# per segment -- deliberately sharing no code with the lifted-operator
+# construction the kernels use.
+# ---------------------------------------------------------------------------
+
+
+def _concrete_offsets(n, flags=None, offsets=None):
+    import numpy as np
+    if offsets is not None:
+        offs = np.asarray(offsets).tolist()
+    else:
+        starts = np.flatnonzero(np.asarray(flags)).tolist()
+        if not starts or starts[0] != 0:
+            starts = [0] + starts
+        offs = starts + [n]
+    return offs
+
+
+def ref_segmented_scan(op, xs: Pytree, *, flags=None, offsets=None,
+                       inclusive: bool = True) -> Pytree:
+    """Per-segment flat scan, concatenated back into the flat layout."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    offs = _concrete_offsets(n, flags=flags, offsets=offsets)
+    pieces = []
+    for s, e in zip(offs[:-1], offs[1:]):
+        if e > s:
+            pieces.append(ref_scan(op, _take_slice(xs, 0, s, e),
+                                   axis=0, inclusive=inclusive))
+    return jax.tree.map(
+        lambda *ls: jnp.concatenate(ls, axis=0), *pieces)
+
+
+def ref_segmented_mapreduce(f, op, xs: Pytree, *, flags=None, offsets=None,
+                            num_segments: int | None = None) -> Pytree:
+    """Per-segment op-reduce of f(x); empty segments yield the identity."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    offs = _concrete_offsets(n, flags=flags, offsets=offsets)
+    if num_segments is None:
+        num_segments = len(offs) - 1
+    one = jax.eval_shape(
+        f, jax.tree.map(lambda l: jax.ShapeDtypeStruct((1,), l.dtype), xs))
+    ident = op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((), l.dtype), one))
+    results = []
+    for i in range(num_segments):
+        if i < len(offs) - 1 and offs[i + 1] > offs[i]:
+            results.append(
+                ref_mapreduce(f, op, _take_slice(xs, 0, offs[i], offs[i + 1])))
+        else:
+            results.append(ident)
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *results)

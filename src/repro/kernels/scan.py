@@ -33,7 +33,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 from repro.core import intrinsics as ki
 

@@ -5,6 +5,12 @@ length (static shapes => one compiled prefill + one compiled decode step);
 finished sequences are masked out.  For the recurrent/hybrid archs the
 "cache" is O(1) state + ring-buffered local-attention windows, which is what
 makes the ``long_500k`` serving shape feasible.
+
+Per-request sequence scores: the batch is *ragged* -- requests finish at
+different lengths -- so the per-step chosen-token log-probs are flattened
+into one segment-per-request stream and reduced with the segmented mapreduce
+primitive (``last_scores`` / ``last_stats["seq_logprob"]``), not with a
+padded (B, T_max) reduction.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import operators as alg
+from repro.core import primitives as forge
 from repro.models import lm
 from repro.training import train_step as TS
 
@@ -60,6 +68,14 @@ class Engine:
         self.key, sub = jax.random.split(self.key)
         return jax.random.categorical(sub, logits / self.temperature, axis=-1)
 
+    @staticmethod
+    @jax.jit
+    def _chosen_logprobs(logits, tok):
+        """log p of each batch row's sampled token under this step's logits."""
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return jnp.take_along_axis(
+            logp, jnp.asarray(tok)[:, None], axis=-1)[:, 0]
+
     def generate(self, requests: list) -> list:
         """Run a batch of requests to completion; returns token lists."""
         cfg = self.cfg
@@ -85,6 +101,7 @@ class Engine:
         outputs = [[] for _ in range(B)]
         done = np.zeros(B, bool)
         tok = np.asarray(self._sample(logits)).astype(np.int32)
+        step_logps = [self._chosen_logprobs(logits, tok)]  # stays on device
         pos0 = plen + cfg.num_prefix_embeds
         t1 = time.time()
         for i, r in enumerate(requests):
@@ -94,6 +111,7 @@ class Engine:
                 self.params, caches, jnp.asarray(tok[:, None]),
                 jnp.asarray(pos0 + t - 1, jnp.int32))
             tok = np.asarray(self._sample(logits)).astype(np.int32)
+            step_logps.append(self._chosen_logprobs(logits, tok))
             for i, r in enumerate(requests):
                 if i < len(requests) and not done[i] and len(outputs[i]) < r.max_new_tokens:
                     outputs[i].append(int(tok[i]))
@@ -102,10 +120,24 @@ class Engine:
             if done[:len(requests)].all():
                 break
         decode_s = time.time() - t1
-        n_tok = sum(len(o) for o in outputs[:len(requests)])
+        n_req = len(requests)
+        n_tok = sum(len(o) for o in outputs[:n_req])
+
+        # Sequence scores over the ragged batch: one segment per request of
+        # its realized length (no padding to the longest request).
+        lengths = np.asarray([len(o) for o in outputs[:n_req]], np.int32)
+        lp = np.asarray(jnp.stack(step_logps, axis=1))  # (B, steps_taken)
+        flat = np.concatenate([lp[i, :lengths[i]] for i in range(n_req)])
+        offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+        seq_logprob = forge.segmented_mapreduce(
+            lambda v: v, alg.ADD, jnp.asarray(flat, jnp.float32),
+            offsets=jnp.asarray(offsets))
+        self.last_scores = np.asarray(seq_logprob)
+
         self.last_stats = {
             "prefill_s": prefill_s,
             "decode_s": decode_s,
             "decode_tok_per_s": n_tok / max(decode_s, 1e-9),
+            "seq_logprob": self.last_scores.tolist(),
         }
-        return outputs[:len(requests)]
+        return outputs[:n_req]

@@ -1,0 +1,172 @@
+"""Segmented scan / mapreduce vs the per-segment Python-loop oracles.
+
+Covers both segment descriptors (flag array and CSR offsets), inclusive and
+exclusive scans, empty segments, non-commutative pytree operators, mapping
+functions that change the element type, and extents spanning multiple kernel
+grid steps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.kernels import ref
+
+BACKENDS = ["xla", "pallas-interpret"]
+
+# Ragged layout with an empty segment (2nd), a singleton, and a long tail.
+OFFSETS = [0, 7, 7, 40, 41, 170, 300]
+
+
+def _ragged(rng_seed, n, leaves=1):
+    rng = np.random.default_rng(rng_seed)
+    out = tuple(jnp.asarray(rng.normal(size=n), jnp.float32)
+                for _ in range(leaves))
+    return out[0] if leaves == 1 else out
+
+
+def _flags_from_offsets(offsets, n):
+    f = np.zeros(n, np.int32)
+    f[[o for o in offsets[:-1] if o < n]] = 1
+    f[0] = 1
+    return jnp.asarray(f)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("variant", ["offsets", "flags"])
+def test_segmented_scan_add(backend, inclusive, variant):
+    n = OFFSETS[-1]
+    x = _ragged(0, n)
+    offs = jnp.asarray(OFFSETS, jnp.int32)
+    kw = ({"offsets": offs} if variant == "offsets"
+          else {"flags": _flags_from_offsets(OFFSETS, n)})
+    got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
+                               backend=backend, **kw)
+    want = ref.ref_segmented_scan(alg.ADD, x, offsets=OFFSETS,
+                                  inclusive=inclusive)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
+                       err=f"{backend}/{variant}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", ["offsets", "flags"])
+def test_segmented_scan_noncommutative_pytree(backend, variant):
+    """AFFINE (pair pytree) and QUATERNION_MUL (4-tuple): order must hold
+    within segments and reset exactly at boundaries."""
+    n = OFFSETS[-1]
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, n), jnp.float32)
+    b = jnp.asarray(rng.normal(size=n), jnp.float32)
+    offs = jnp.asarray(OFFSETS, jnp.int32)
+    kw = ({"offsets": offs} if variant == "offsets"
+          else {"flags": _flags_from_offsets(OFFSETS, n)})
+    got = forge.segmented_scan(alg.AFFINE, (a, b), backend=backend, **kw)
+    want = ref.ref_segmented_scan(alg.AFFINE, (a, b), offsets=OFFSETS)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                       err=f"affine/{backend}/{variant}")
+
+    q = tuple(jnp.asarray(rng.normal(size=n) * 0.1 + (1.0 if i == 0 else 0.0),
+                          jnp.float32) for i in range(4))
+    got = forge.segmented_scan(alg.QUATERNION_MUL, q, backend=backend, **kw)
+    want = ref.ref_segmented_scan(alg.QUATERNION_MUL, q, offsets=OFFSETS)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                       err=f"quat/{backend}/{variant}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_scan_exclusive_noncommutative(backend):
+    n = OFFSETS[-1]
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, n), jnp.float32)
+    b = jnp.asarray(rng.normal(size=n), jnp.float32)
+    got = forge.segmented_scan(alg.AFFINE, (a, b), inclusive=False,
+                               offsets=jnp.asarray(OFFSETS, jnp.int32),
+                               backend=backend)
+    want = ref.ref_segmented_scan(alg.AFFINE, (a, b), offsets=OFFSETS,
+                                  inclusive=False)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op_name", ["add", "max", "min", "mul"])
+def test_segmented_mapreduce_offsets(backend, op_name):
+    n = OFFSETS[-1]
+    x = _ragged(3, n)
+    op = alg.STD_OPS[op_name]
+    got = forge.segmented_mapreduce(
+        lambda v: v, op, x, offsets=jnp.asarray(OFFSETS, jnp.int32),
+        backend=backend)
+    want = ref.ref_segmented_mapreduce(lambda v: v, op, x, offsets=OFFSETS)
+    assert got.shape == (len(OFFSETS) - 1,)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                       err=f"{op_name}/{backend}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_mapreduce_flags_num_segments(backend):
+    """Flag variant with extra trailing segments -> identity fill."""
+    n = OFFSETS[-1]
+    x = _ragged(4, n)
+    flags = _flags_from_offsets(OFFSETS, n)   # empty segment leaves no flag
+    got = forge.segmented_mapreduce(lambda v: v, alg.MAX, x, flags=flags,
+                                    num_segments=8, backend=backend)
+    want = ref.ref_segmented_mapreduce(lambda v: v, alg.MAX, x, flags=flags,
+                                       num_segments=8)
+    assert got.shape == (8,)
+    assert np.isneginf(np.asarray(got)[-1])   # never-started segment
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5, err=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_mapreduce_type_changing_map(backend):
+    """f changes element type (UnitFloat8 -> f32), per ragged segment."""
+    rng = np.random.default_rng(5)
+    n = OFFSETS[-1]
+    u8 = jnp.asarray(rng.integers(0, 256, n), jnp.uint8)
+    offs = jnp.asarray(OFFSETS, jnp.int32)
+    got = forge.segmented_mapreduce(alg.unitfloat8_decode, alg.ADD, u8,
+                                    offsets=offs, backend=backend)
+    want = ref.ref_segmented_mapreduce(alg.unitfloat8_decode, alg.ADD, u8,
+                                       offsets=OFFSETS)
+    assert got.dtype == jnp.float32
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_segmented_scan_multiblock(backend, inclusive):
+    """Segments crossing kernel grid-step boundaries: the carry must reset
+    mid-stream even when the boundary falls inside a later block (and the
+    exclusive shift must pull the right element across block edges)."""
+    n = 4500   # interpret-policy block is 2048 elements -> 3 grid steps
+    x = _ragged(6, n)
+    offsets = jnp.asarray([0, 1, 2047, 2048, 2050, 4096, 4500], jnp.int32)
+    got = forge.segmented_scan(alg.ADD, x, offsets=offsets,
+                               inclusive=inclusive, backend=backend)
+    want = ref.ref_segmented_scan(alg.ADD, x, offsets=np.asarray(offsets),
+                                  inclusive=inclusive)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_segment_matches_flat_scan(backend):
+    n = 257
+    x = _ragged(7, n)
+    got = forge.segmented_scan(alg.ADD, x,
+                               offsets=jnp.asarray([0, n], jnp.int32),
+                               backend=backend)
+    want = forge.scan(alg.ADD, x, backend=backend)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5, err=backend)
+
+
+def test_descriptor_validation():
+    x = jnp.arange(8, dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        forge.segmented_scan(alg.ADD, x, backend="xla")
+    with pytest.raises(ValueError):
+        forge.segmented_scan(alg.ADD, x, flags=jnp.ones(8, jnp.int32),
+                             offsets=jnp.asarray([0, 8]), backend="xla")

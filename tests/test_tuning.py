@@ -1,0 +1,93 @@
+"""Autotuned dispatch: benchmark-once semantics and on-disk cache round-trip."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core import tuning
+
+
+@pytest.fixture
+def tuner(tmp_path):
+    t = tuning.enable(str(tmp_path / "tuning.json"))
+    yield t
+    tuning.disable()
+
+
+def test_first_call_benchmarks_second_call_hits(tuner):
+    x = jnp.arange(4096, dtype=jnp.float32)
+    y = forge.scan(alg.ADD, x, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y), np.cumsum(np.arange(4096)),
+                               rtol=1e-5)
+    assert tuner.stats["benchmarks"] == 1
+    assert tuner.stats["bench_calls"] == len(tuning.TUNABLE["scan"].candidates)
+
+    # Identical key (same primitive/op/dtype/shape-bucket): no re-benchmark.
+    y2 = forge.scan(alg.ADD, x * 2, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y2),
+                               np.cumsum(2.0 * np.arange(4096)), rtol=1e-5)
+    assert tuner.stats["benchmarks"] == 1
+    assert tuner.stats["hits"] >= 1
+
+
+def test_cache_round_trips_across_tuner_instances(tuner, tmp_path):
+    x = jnp.arange(4096, dtype=jnp.float32)
+    forge.scan(alg.ADD, x, backend="pallas-interpret")
+    path = tuner.cache_path
+    entry = json.load(open(path))
+    assert len(entry) == 1
+    (key, val), = entry.items()
+    assert key.startswith("scan|op=add|dtype=float32|n=4096|")
+    assert "overrides" in val
+
+    # A fresh tuner reading the same file performs no re-benchmarking.
+    fresh = tuning.enable(path)
+    forge.scan(alg.ADD, x + 3, backend="pallas-interpret")
+    assert fresh.stats["benchmarks"] == 0
+    assert fresh.stats["hits"] == 1
+
+
+def test_distinct_keys_tune_separately(tuner):
+    x = jnp.arange(4096, dtype=jnp.float32)
+    forge.scan(alg.ADD, x, backend="pallas-interpret")
+    forge.scan(alg.MAX, x, backend="pallas-interpret")      # different op
+    forge.scan(alg.ADD, x.astype(jnp.bfloat16),             # different dtype
+               backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 3
+
+
+def test_segmented_scan_is_tuned_and_correct(tuner):
+    x = jnp.arange(3000, dtype=jnp.float32)
+    offs = jnp.asarray([0, 100, 2500, 3000], jnp.int32)
+    got = forge.segmented_scan(alg.ADD, x, offsets=offs,
+                               backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 1
+    want = np.concatenate([np.cumsum(np.asarray(x)[s:e])
+                           for s, e in zip([0, 100, 2500], [100, 2500, 3000])])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+
+def test_explicit_policy_bypasses_tuner(tuner):
+    from repro.core import intrinsics as ki
+    x = jnp.arange(1024, dtype=jnp.float32)
+    impl = ki.resolve_impl("scan", "pallas-interpret")
+    impl(alg.ADD, x, policy=ki.resolve_tuning("interpret"))
+    assert tuner.stats["benchmarks"] == 0
+
+
+def test_xla_backend_not_tuned(tuner):
+    x = jnp.arange(1024, dtype=jnp.float32)
+    forge.scan(alg.ADD, x, backend="xla")
+    assert tuner.stats["benchmarks"] == 0
+
+
+def test_shape_bucket_shares_entries(tuner):
+    a = jnp.arange(3000, dtype=jnp.float32)   # bucket 4096
+    b = jnp.arange(4000, dtype=jnp.float32)   # bucket 4096
+    forge.scan(alg.ADD, a, backend="pallas-interpret")
+    forge.scan(alg.ADD, b, backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 1

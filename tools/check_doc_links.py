@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Check that local markdown links in README.md and docs/ resolve.
+
+Verifies relative link targets exist on disk (anchors are checked against
+the target file's headings).  External http(s) links are not fetched.
+
+Usage: python tools/check_doc_links.py [files...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def heading_anchors(path: str) -> set:
+    anchors = set()
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("#"):
+                text = line.lstrip("#").strip().lower()
+                slug = re.sub(r"[^\w\- ]", "", text).replace(" ", "-")
+                anchors.add(slug)
+    return anchors
+
+
+def check_file(md: str) -> list:
+    errors = []
+    base = os.path.dirname(os.path.abspath(md))
+    with open(md, encoding="utf-8") as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        full = os.path.normpath(os.path.join(base, path)) if path else md
+        if not os.path.exists(full):
+            errors.append(f"{md}: broken link -> {target}")
+        elif anchor and full.endswith(".md"):
+            if anchor.lower() not in heading_anchors(full):
+                errors.append(f"{md}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    files = argv or ["README.md"] + sorted(
+        os.path.join("docs", f) for f in os.listdir("docs")
+        if f.endswith(".md"))
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAILED' if errors else 'all local links resolve'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

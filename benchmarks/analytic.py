@@ -75,6 +75,66 @@ def vecmat_bytes(n: int, p: int, dtype, out_dtype=None, policy=None) -> int:
     return a_bytes + x_bytes + z_bytes
 
 
+def segmented_scan_bytes(n: int, dtypes, policy=None) -> int:
+    """Segmented scan: 2n value movement + one int32 flag read per element
+    (scanned flags stay in-register and are never written back)."""
+    policy = policy or ki.resolve_tuning()
+    sub = max(ki.min_tile(d)[0] for d in dtypes)
+    block = policy.nitem_scan * sub * ki.LANES
+    np_ = _pad(n, block)
+    per_elem = sum(jnp.dtype(d).itemsize for d in dtypes)
+    return 2 * np_ * per_elem + np_ * 4
+
+
+def sort_pass_count(key_bits: int, digit_bits: int, num_segments: int = 1) -> int:
+    """LSD scatter passes: key digits, then segment-id digits (if any)."""
+    passes = ki.cdiv(key_bits, digit_bits)
+    if num_segments > 1:
+        passes += ki.cdiv(max((num_segments - 1).bit_length(), 1), digit_bits)
+    return passes
+
+
+def sort_bytes(n: int, dtype, policy=None, *, key_bits: int | None = None,
+               payload_itemsize: int = 0, num_segments: int = 1) -> int:
+    """Structural *key-level* movement of an LSD radix pass, the fused-kernel
+    bound the design targets (and the CI budget enforces):
+
+    * keys read for the digit extract / rank scan (1n),
+    * keys re-read and written by the rank-and-scatter (2n),
+    * any payload read + scattered alongside (2n x payload bytes),
+    * the 2^digit_bits histogram + its offsets (O(R), not O(n)).
+
+    Honesty note: this is what a pass *must* move -- the <= passes x 3n
+    budget made checkable.  A fused TPU kernel keeps the one-hot/rank tiles
+    in VMEM; the current portable composition instead materializes an
+    ``(n, 2^digit_bits)`` rank intermediate through XLA per pass, so its
+    realized traffic exceeds this bound by up to the digit fan-out (the
+    tuning ladder's ``sort_digit_bits`` races exactly that trade-off, and
+    shrinking the gap is the motivation for a future fused sort pass).
+    Fewer significant ``key_bits`` (small-range keys like expert ids)
+    proportionally cut the pass count in both models.
+    """
+    policy = policy or ki.resolve_tuning()
+    sz = jnp.dtype(dtype).itemsize
+    kb = key_bits if key_bits is not None else 8 * sz
+    passes = sort_pass_count(kb, policy.sort_digit_bits, num_segments)
+    sub = ki.min_tile(dtype)[0]
+    block = policy.nitem_scan * sub * ki.LANES
+    np_ = _pad(n, block)
+    per_pass = (3 * np_ * sz + 2 * np_ * payload_itemsize +
+                2 * (1 << policy.sort_digit_bits) * 4)
+    return passes * per_pass
+
+
+def top_k_bytes(n: int, k: int, dtype, policy=None, *,
+                num_segments: int = 1) -> int:
+    """top-k = index-carrying sort + the (S, k) gather of the winners."""
+    sz = jnp.dtype(dtype).itemsize
+    return (sort_bytes(n, dtype, policy, payload_itemsize=4,
+                       num_segments=num_segments) +
+            num_segments * k * (sz + 4))
+
+
 def copy_bytes(n: int, dtype, nitem: int, policy=None) -> int:
     sub = ki.min_tile(dtype)[0]
     block = nitem * sub * ki.LANES

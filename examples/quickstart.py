@@ -75,4 +75,16 @@ b = jax.random.normal(jax.random.fold_in(key, 9), (2, 128, 256), jnp.float32)
 h = forge.linear_recurrence(a, b, backend=B)
 print("h_t = a_t*h_{t-1} + b_t over (B=2, T=128, C=256):",
       "final-state norm =", float(jnp.linalg.norm(h[:, -1])))
+
+print("\n== 8. radix sort / top-k: derived primitives on the scan substrate ==")
+expert = jax.random.randint(jax.random.fold_in(key, 10), (24,), 0, 4,
+                            jnp.int32).astype(jnp.uint32)
+tok = jnp.arange(24, dtype=jnp.int32)
+se, st = forge.sort_pairs(expert, tok, key_bits=2, backend=B)
+print("expert-sorted token stream (stable, 1 digit pass):",
+      np.asarray(se)[:12], "...")
+logits = jax.random.normal(jax.random.fold_in(key, 11), (10,), jnp.float32)
+v, i = forge.segmented_top_k(logits, 2, offsets=offs, backend=B)
+print("per-request top-2 logits:", np.round(np.asarray(v), 2).tolist(),
+      "ids:", np.asarray(i).tolist())
 print("\n(quickstart done -- same API, three backends, zero code changes)")

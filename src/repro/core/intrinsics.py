@@ -188,6 +188,10 @@ class TuningPolicy:
     # Wide/tall shape cutover (aspect ratio heuristic, paper §V-C).
     tall_threshold: float = 64.0
     vmem_budget_bytes: int = 64 * 1024 * 1024
+    # Radix-sort digit width in bits (2^bits buckets per pass).  Wider digits
+    # mean fewer passes but a larger per-pass rank scan; the sweet spot is
+    # shape- and chip-dependent, so it sits on the tuning ladder.
+    sort_digit_bits: int = 8
 
 
 _TUNING_REGISTRY: dict[str, TuningPolicy] = {}
@@ -218,7 +222,8 @@ register_tuning(
 register_tuning(
     "interpret",
     TuningPolicy(name="interpret", nitem_copy=2, nitem_scan=2, nitem_reduce=2,
-                 matvec_rows=2, matvec_cols=1, vecmat_rows=2, vecmat_cols=1),
+                 matvec_rows=2, matvec_cols=1, vecmat_rows=2, vecmat_cols=1,
+                 sort_digit_bits=4),
 )
 
 

@@ -342,6 +342,73 @@ def segmented(op: AssocOp) -> AssocOp:
 
 
 # --------------------------------------------------------------------------
+# Radix-sortable key transforms: order-preserving bijections from every
+# supported key dtype onto unsigned integers of the same width, so the LSD
+# radix sort (kernels/sort.py) only ever manipulates unsigned bit patterns.
+#
+# The induced total order is pinned down exactly:
+#
+# * unsigned ints -- numeric order (identity transform);
+# * signed ints   -- numeric order (flip the sign bit);
+# * floats        -- IEEE numeric order with two canonicalizations applied
+#   *before* the transform: ``-0.0`` maps to ``+0.0`` (so the two zeros
+#   compare equal, matching ``np.sort``), and every NaN maps to the
+#   all-ones-mantissa positive NaN (so **all NaNs compare equal and sort
+#   after +inf**, again matching ``np.sort``'s NaN-last order).  The float
+#   transform is the classic sign-magnitude fix-up: negative values are
+#   bitwise complemented, non-negative values get the sign bit set.
+# --------------------------------------------------------------------------
+
+_RADIX_UINT_FOR_WIDTH = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}
+
+
+def radix_key_bits(dtype) -> int:
+    """Total significant bits in the sortable-transformed key."""
+    dtype = jnp.dtype(dtype)
+    if dtype not in {jnp.dtype(d) for d in
+                     (jnp.uint8, jnp.uint16, jnp.uint32, jnp.int8, jnp.int16,
+                      jnp.int32, jnp.float32, jnp.bfloat16, jnp.float16)}:
+        raise TypeError(f"radix sort: unsupported key dtype {dtype}")
+    return dtype.itemsize * 8
+
+
+def key_to_radix_bits(keys: jax.Array) -> jax.Array:
+    """Map keys onto same-width unsigned bits; ``a < b`` iff ``bits(a) < bits(b)``
+    under the pinned total order documented above."""
+    dtype = jnp.dtype(keys.dtype)
+    width = radix_key_bits(dtype)
+    udt = _RADIX_UINT_FOR_WIDTH[width]
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return keys
+    if jnp.issubdtype(dtype, jnp.signedinteger):
+        sign = jnp.asarray(1 << (width - 1), udt)
+        return jax.lax.bitcast_convert_type(keys, udt) ^ sign
+    # Floats: canonicalize -0.0 and NaN, then sign-magnitude fix-up.
+    keys = jnp.where(keys == 0, jnp.zeros_like(keys), keys)
+    bits = jax.lax.bitcast_convert_type(keys, udt)
+    nan_bits = jnp.asarray((1 << (width - 1)) - 1, udt)   # +NaN, max mantissa
+    bits = jnp.where(jnp.isnan(keys), nan_bits, bits)
+    sign = jnp.asarray(1 << (width - 1), udt)
+    return jnp.where((bits & sign) != 0, ~bits, bits | sign)
+
+
+def radix_bits_to_key(bits: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`key_to_radix_bits` (up to the documented float
+    canonicalizations: ``-0.0`` comes back as ``+0.0`` and NaNs as the
+    canonical quiet NaN)."""
+    dtype = jnp.dtype(dtype)
+    width = radix_key_bits(dtype)
+    udt = _RADIX_UINT_FOR_WIDTH[width]
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return bits.astype(dtype)
+    sign = jnp.asarray(1 << (width - 1), udt)
+    if jnp.issubdtype(dtype, jnp.signedinteger):
+        return jax.lax.bitcast_convert_type(bits ^ sign, dtype)
+    raw = jnp.where((bits & sign) != 0, bits ^ sign, ~bits)
+    return jax.lax.bitcast_convert_type(raw, dtype)
+
+
+# --------------------------------------------------------------------------
 # Semirings: (map f, reduce op) pairs for generalized matvec / mapreduce.
 # --------------------------------------------------------------------------
 

@@ -93,6 +93,98 @@ def segmented_mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *,
         f, op, xs, flags=flags, offsets=offsets, num_segments=num_segments)
 
 
+def sort(keys: jax.Array, *, descending: bool = False,
+         key_bits: int | None = None, backend: str | None = None) -> jax.Array:
+    """Stable LSD radix sort of a flat key array (paper follow-on: CUB's
+    flagship derived primitive, composed from mapreduce + exclusive scan +
+    scatter -- see kernels/sort.py).
+
+    Keys may be u8/u16/u32, i8/i16/i32, f32/bf16/f16.  The total order is
+    numeric with ``-0.0 == +0.0`` and all NaNs equal, sorting after ``+inf``
+    (ascending); float outputs are canonicalized accordingly.  ``key_bits``
+    (unsigned keys only) caps the significant bits so small-range keys --
+    e.g. expert ids -- pay proportionally fewer passes.
+    """
+    return ki.resolve_impl("sort", backend)(
+        keys, descending=descending, key_bits=key_bits)
+
+
+def sort_pairs(keys: jax.Array, values: Pytree, *, descending: bool = False,
+               key_bits: int | None = None,
+               backend: str | None = None) -> tuple[jax.Array, Pytree]:
+    """Stable key sort carrying an arbitrary pytree payload (leaves of
+    leading extent ``n``) through the same permutation."""
+    return ki.resolve_impl("sort_pairs", backend)(
+        keys, values, descending=descending, key_bits=key_bits)
+
+
+def argsort(keys: jax.Array, *, descending: bool = False,
+            key_bits: int | None = None,
+            backend: str | None = None) -> jax.Array:
+    """The stable sorting permutation (int32) of ``keys``."""
+    return ki.resolve_impl("argsort", backend)(
+        keys, descending=descending, key_bits=key_bits)
+
+
+def top_k(keys: jax.Array, k: int, *, largest: bool = True,
+          key_bits: int | None = None,
+          backend: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """(values, indices) of the ``k`` extreme elements, extreme-first and
+    tie-stable.  NaNs rank above ``+inf``, so with ``largest=True`` they
+    surface first (the pinned NaN order of :func:`sort`)."""
+    return ki.resolve_impl("top_k", backend)(keys, k, largest=largest,
+                                             key_bits=key_bits)
+
+
+def segmented_sort(keys: jax.Array, *, flags: jax.Array = None,
+                   offsets: jax.Array = None, descending: bool = False,
+                   key_bits: int | None = None,
+                   backend: str | None = None) -> jax.Array:
+    """Independent stable sort of every contiguous segment, in place in the
+    flat layout.  Segments use the same descriptors as
+    :func:`segmented_scan` (flag array or CSR ``offsets``)."""
+    return ki.resolve_impl("segmented_sort", backend)(
+        keys, flags=flags, offsets=offsets, descending=descending,
+        key_bits=key_bits)
+
+
+def segmented_sort_pairs(keys: jax.Array, values: Pytree, *,
+                         flags: jax.Array = None, offsets: jax.Array = None,
+                         descending: bool = False, key_bits: int | None = None,
+                         backend: str | None = None
+                         ) -> tuple[jax.Array, Pytree]:
+    """Per-segment :func:`sort_pairs` over the flat ragged stream."""
+    return ki.resolve_impl("segmented_sort_pairs", backend)(
+        keys, values, flags=flags, offsets=offsets, descending=descending,
+        key_bits=key_bits)
+
+
+def segmented_argsort(keys: jax.Array, *, flags: jax.Array = None,
+                      offsets: jax.Array = None, descending: bool = False,
+                      key_bits: int | None = None,
+                      backend: str | None = None) -> jax.Array:
+    """Within-segment sorting permutation: position ``i`` of the output holds
+    the *offset inside its segment* of the element sorted into slot ``i``."""
+    return ki.resolve_impl("segmented_argsort", backend)(
+        keys, flags=flags, offsets=offsets, descending=descending,
+        key_bits=key_bits)
+
+
+def segmented_top_k(keys: jax.Array, k: int, *, flags: jax.Array = None,
+                    offsets: jax.Array = None, num_segments: int | None = None,
+                    largest: bool = True, key_bits: int | None = None,
+                    backend: str | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Per-segment top-k over the flat ragged stream -> ``(S, k)`` values and
+    within-segment indices, extreme-first.  Slots past a segment's length are
+    filled with the reduction identity and index ``-1``; with ``flags`` a
+    static ``num_segments`` is required (as for :func:`segmented_mapreduce`).
+    """
+    return ki.resolve_impl("segmented_top_k", backend)(
+        keys, k, flags=flags, offsets=offsets, num_segments=num_segments,
+        largest=largest, key_bits=key_bits)
+
+
 def semiring_matvec(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
                     backend: str | None = None) -> Pytree:
     """y[j] = op_i f(x[i], A[i, j]) for any semiring (paper §V-C)."""

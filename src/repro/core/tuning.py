@@ -88,9 +88,20 @@ def _copy_keyer(args, kwargs):
     return "copy", dtype, n
 
 
+def _keys_keyer(args, kwargs):
+    dtype, n = _tree_key(args[0])
+    return "keys", dtype, n
+
+
 def _ladder(field: str, values) -> tuple[dict, ...]:
     return tuple({field: v} for v in values)
 
+
+# Radix sort races digit width x block policy: wider digits mean fewer
+# scatter passes but a larger per-pass rank scan, and the rank scan's own
+# block size (nitem_scan) interacts with the digit count.
+_SORT_LADDER = tuple({"sort_digit_bits": d, "nitem_scan": m}
+                     for d in (2, 4, 8) for m in (8, 16))
 
 TUNABLE: dict[str, TunableSpec] = {
     "scan": TunableSpec(_scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
@@ -101,6 +112,14 @@ TUNABLE: dict[str, TunableSpec] = {
     "mapreduce": TunableSpec(
         _mapreduce_keyer, _ladder("nitem_reduce", (4, 8, 16))),
     "copy": TunableSpec(_copy_keyer, _ladder("nitem_copy", (4, 8, 16))),
+    "sort": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "sort_pairs": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "argsort": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "top_k": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "segmented_sort": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "segmented_sort_pairs": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "segmented_argsort": TunableSpec(_keys_keyer, _SORT_LADDER),
+    "segmented_top_k": TunableSpec(_keys_keyer, _SORT_LADDER),
 }
 
 
@@ -121,22 +140,53 @@ class Autotuner:
 
     # -- persistence --------------------------------------------------------
 
-    def _load(self):
+    def _read_disk(self) -> dict:
+        """Best-effort read; a corrupt/truncated cache (e.g. a concurrent
+        writer interrupted mid-line before atomic writes) means re-tuning,
+        never an exception."""
         try:
             with open(self.cache_path) as f:
                 data = json.load(f)
-            if isinstance(data, dict):
-                self._cache = data
+            return data if isinstance(data, dict) else {}
         except (OSError, ValueError):
-            self._cache = {}
+            return {}
+
+    def _load(self):
+        self._cache = self._read_disk()
 
     def _save(self):
+        """Atomic, concurrency-tolerant persist.
+
+        Parallel test shards and self-hosted CI runners share one cache
+        path.  The read-merge-write cycle is serialized with an advisory
+        ``flock`` on a sidecar lock file (so a concurrent tuner's freshly
+        benchmarked entries are merged, not overwritten with our stale view
+        of the file), the temp file carries the pid so two processes never
+        clobber each other's half-written file, and ``os.replace`` makes
+        the publish atomic -- a reader never sees a truncated file (and if
+        one ever does appear, ``_read_disk`` treats it as empty).  Where
+        ``fcntl`` is unavailable the lock degrades to merge-on-save, which
+        narrows the lost-update window to the merge itself.
+        """
         try:
             os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
-            tmp = self.cache_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(self._cache, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.cache_path)
+            with open(self.cache_path + ".lock", "w") as lk:
+                try:
+                    import fcntl
+                    fcntl.flock(lk, fcntl.LOCK_EX)
+                except (ImportError, OSError):
+                    pass  # non-POSIX: fall back to unserialized merge-on-save
+                merged = self._read_disk()
+                merged.update(self._cache)
+                self._cache = merged
+                tmp = f"{self.cache_path}.{os.getpid()}.tmp"
+                try:
+                    with open(tmp, "w") as f:
+                        json.dump(merged, f, indent=1, sort_keys=True)
+                    os.replace(tmp, self.cache_path)
+                finally:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
         except OSError:
             pass  # caching is best-effort; never fail the computation
 

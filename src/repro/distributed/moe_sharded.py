@@ -92,8 +92,14 @@ def moe_forward_sharded(params, cfg, x, mesh):
         flat_e = idx.reshape(-1)
         flat_t = jnp.repeat(jnp.arange(T_loc), k)
         flat_g = gates.reshape(-1)
-        order = jnp.argsort(flat_e, stable=True)
-        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        # Expert-sorted stream via the stable radix sort_pairs primitive
+        # (the portable replacement for the global XLA argsort): expert ids
+        # span only ceil(log2(E)) bits, so key_bits= caps the sort at 1-2
+        # digit passes instead of a full 32-bit comparison sort.
+        se, (st, sg) = forge.sort_pairs(
+            flat_e.astype(jnp.uint32), (flat_t, flat_g),
+            key_bits=max(1, (E - 1).bit_length()))
+        se = se.astype(jnp.int32)
         # Within-expert slot index = exclusive segmented +scan of ones over
         # the expert-sorted stream (segment = run of equal expert id).  This
         # is the ragged expert grouping done natively -- no E-sized

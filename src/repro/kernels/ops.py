@@ -29,6 +29,7 @@ from repro.kernels import matvec as matvec_k
 from repro.kernels import ref
 from repro.kernels import scan as scan_k
 from repro.kernels import segmented as seg_k
+from repro.kernels import sort as sort_k
 
 Pytree = Any
 
@@ -131,6 +132,8 @@ def _segment_flags(xs, flags, offsets):
 def _segmented_scan_pallas(op, xs, *, flags=None, offsets=None, inclusive=True,
                            interpret=False, policy=None):
     f = _segment_flags(xs, flags, offsets)
+    if f.shape[0] == 0:                    # zero-length stream: nothing to do
+        return xs
     return seg_k.segmented_scan_1d_pallas(
         op, xs, f, inclusive=inclusive, policy=policy, interpret=interpret)
 
@@ -146,6 +149,8 @@ def _segmented_scan_xla(op, xs, *, flags=None, offsets=None, inclusive=True,
                         policy=None):
     """Portable path: associative_scan of the lifted (flag, value) operator."""
     f = _segment_flags(xs, flags, offsets)
+    if f.shape[0] == 0:
+        return xs
     seg = alg.segmented(op)
     _, incl = jax.lax.associative_scan(seg.combine, (f, xs), axis=0)
     if inclusive:
@@ -158,10 +163,22 @@ def _segmented_scan_xla(op, xs, *, flags=None, offsets=None, inclusive=True,
         lambda s, i: jnp.where(f != 0, i, s), shifted, ident_full)
 
 
+def _empty_segmented_mapreduce(f, op, xs, offsets, num_segments):
+    """num_segments identity rows for a zero-length input stream."""
+    ns = num_segments if offsets is None else offsets.shape[0] - 1
+    if ns is None:
+        raise ValueError("flag-variant segmented mapreduce needs num_segments")
+    vals = jax.eval_shape(f, xs)
+    return op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((ns,) + l.shape[1:], l.dtype), vals))
+
+
 def _segmented_mapreduce_pallas(f, op, xs, *, flags=None, offsets=None,
                                 num_segments=None, interpret=False,
                                 policy=None):
     fl = _segment_flags(xs, flags, offsets)
+    if fl.shape[0] == 0:
+        return _empty_segmented_mapreduce(f, op, xs, offsets, num_segments)
     vals = f(xs)
     incl = seg_k.segmented_scan_1d_pallas(
         op, vals, fl, inclusive=True, policy=policy, interpret=interpret)
@@ -180,6 +197,8 @@ ki.register_impl("segmented_mapreduce", "pallas-interpret")(
 def _segmented_mapreduce_xla(f, op, xs, *, flags=None, offsets=None,
                              num_segments=None, policy=None):
     fl = _segment_flags(xs, flags, offsets)
+    if fl.shape[0] == 0:
+        return _empty_segmented_mapreduce(f, op, xs, offsets, num_segments)
     vals = f(xs)
     # Fast path: the standard algebra over plain arrays maps onto XLA's
     # native segment reductions.
@@ -365,3 +384,23 @@ ki.register_impl("linear_recurrence", "pallas-interpret")(
 @ki.register_impl("linear_recurrence", "xla")
 def _linrec_xla(a, b, h0=None, *, reverse=False, policy=None):
     return ref.ref_linear_recurrence(a, b, h0=h0, axis=1, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# Radix sort family.  One composition (kernels/sort.py) serves every backend:
+# each histogram / offset / rank step dispatches to that backend's
+# scan/mapreduce kernels, so ``pallas-interpret`` runs the real kernel bodies
+# and ``xla`` stays a pure portable fallback -- no backend-specific sort code.
+# ---------------------------------------------------------------------------
+
+for _prim, _fn in [("sort", sort_k.sort_radix),
+                   ("sort_pairs", sort_k.sort_pairs_radix),
+                   ("argsort", sort_k.argsort_radix),
+                   ("top_k", sort_k.top_k_radix),
+                   ("segmented_sort", sort_k.segmented_sort_radix),
+                   ("segmented_sort_pairs", sort_k.segmented_sort_pairs_radix),
+                   ("segmented_argsort", sort_k.segmented_argsort_radix),
+                   ("segmented_top_k", sort_k.segmented_top_k_radix)]:
+    for _backend in ("pallas-tpu", "pallas-interpret", "xla"):
+        ki.register_impl(_prim, _backend)(
+            functools.partial(_fn, sub_backend=_backend))

@@ -106,6 +106,8 @@ def ref_segmented_scan(op, xs: Pytree, *, flags=None, offsets=None,
                        inclusive: bool = True) -> Pytree:
     """Per-segment flat scan, concatenated back into the flat layout."""
     n = jax.tree.leaves(xs)[0].shape[0]
+    if n == 0:
+        return xs
     offs = _concrete_offsets(n, flags=flags, offsets=offsets)
     pieces = []
     for s, e in zip(offs[:-1], offs[1:]):
@@ -135,3 +137,126 @@ def ref_segmented_mapreduce(f, op, xs: Pytree, *, flags=None, offsets=None,
         else:
             results.append(ident)
     return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *results)
+
+
+# ---------------------------------------------------------------------------
+# Sort / top-k oracles.  Deliberately numpy-based (lexsort + Python loops),
+# sharing nothing with the radix composition: the pinned total order --
+# numeric, -0.0 == +0.0, all NaNs equal and last ascending -- is re-derived
+# here from a (nan-flag, value) lexicographic key instead of bit transforms.
+# ---------------------------------------------------------------------------
+
+
+def _np_sort_order(keys, descending: bool = False):
+    """Stable sorting permutation under the pinned total order (numpy)."""
+    import numpy as np
+    a = np.asarray(keys)
+    if a.dtype.kind not in "uif":          # bfloat16 et al: exact upcast
+        a = a.astype(np.float32)
+    n = a.shape[0]
+    if a.dtype.kind in "ui":
+        v = a.astype(np.int64)
+        nanf = np.zeros(n, np.int64)
+    else:
+        v = a.astype(np.float64)
+        nanf = np.isnan(v).astype(np.int64)
+        v = np.where(nanf == 1, 0.0, v) + 0.0      # NaNs tie; -0.0 -> +0.0
+    if descending:
+        v, nanf = -v, -nanf
+    return np.lexsort((v, nanf))           # stable: nan-flag first, then value
+
+
+def ref_sort(keys, *, descending: bool = False):
+    import numpy as np
+    return jnp.asarray(np.asarray(keys)[_np_sort_order(keys, descending)])
+
+
+def ref_sort_pairs(keys, values, *, descending: bool = False):
+    import numpy as np
+    order = _np_sort_order(keys, descending)
+    return (jnp.asarray(np.asarray(keys)[order]),
+            jax.tree.map(lambda l: jnp.asarray(np.asarray(l)[order]), values))
+
+
+def ref_argsort(keys, *, descending: bool = False):
+    return jnp.asarray(_np_sort_order(keys, descending).astype("int32"))
+
+
+def ref_top_k(keys, k: int, *, largest: bool = True):
+    import numpy as np
+    order = _np_sort_order(keys, descending=largest)[:k]
+    return (jnp.asarray(np.asarray(keys)[order]),
+            jnp.asarray(order.astype(np.int32)))
+
+
+def _topk_fill(dtype, largest):
+    import numpy as np
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return -np.inf if largest else np.inf
+    info = jnp.iinfo(dtype)
+    return info.min if largest else info.max
+
+
+def ref_segmented_sort(keys, *, flags=None, offsets=None,
+                       descending: bool = False):
+    import numpy as np
+    a = np.asarray(keys)
+    if a.shape[0] == 0:
+        return jnp.asarray(a)
+    offs = _concrete_offsets(a.shape[0], flags=flags, offsets=offsets)
+    pieces = [a[s:e][_np_sort_order(a[s:e], descending)]
+              for s, e in zip(offs[:-1], offs[1:]) if e > s]
+    return jnp.asarray(np.concatenate(pieces))
+
+
+def ref_segmented_sort_pairs(keys, values, *, flags=None, offsets=None,
+                             descending: bool = False):
+    import numpy as np
+    a = np.asarray(keys)
+    n = a.shape[0]
+    if n == 0:
+        return jnp.asarray(a), values
+    offs = _concrete_offsets(n, flags=flags, offsets=offsets)
+    orders = [s + _np_sort_order(a[s:e], descending)
+              for s, e in zip(offs[:-1], offs[1:]) if e > s]
+    order = np.concatenate(orders)
+    return (jnp.asarray(a[order]),
+            jax.tree.map(lambda l: jnp.asarray(np.asarray(l)[order]), values))
+
+
+def ref_segmented_argsort(keys, *, flags=None, offsets=None,
+                          descending: bool = False):
+    import numpy as np
+    a = np.asarray(keys)
+    n = a.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    offs = _concrete_offsets(n, flags=flags, offsets=offsets)
+    pieces = [_np_sort_order(a[s:e], descending)
+              for s, e in zip(offs[:-1], offs[1:]) if e > s]
+    return jnp.asarray(np.concatenate(pieces).astype(np.int32))
+
+
+def ref_segmented_top_k(keys, k: int, *, flags=None, offsets=None,
+                        num_segments=None, largest: bool = True):
+    import numpy as np
+    a = np.asarray(keys)
+    n = a.shape[0]
+    offs = (_concrete_offsets(n, flags=flags, offsets=offsets)
+            if n else [0, 0])
+    if num_segments is None:
+        num_segments = len(offs) - 1
+    fill = _topk_fill(a.dtype if a.dtype.kind in "uif" else jnp.float32,
+                      largest)
+    vals = np.full((num_segments, k), fill,
+                   a.dtype if a.dtype.kind in "uif" else np.float32)
+    idx = np.full((num_segments, k), -1, np.int32)
+    for s in range(num_segments):
+        if s >= len(offs) - 1 or offs[s + 1] <= offs[s]:
+            continue
+        seg = a[offs[s]:offs[s + 1]]
+        order = _np_sort_order(seg, descending=largest)[:k]
+        vals[s, :len(order)] = seg[order]
+        idx[s, :len(order)] = order
+    return jnp.asarray(vals.astype(np.asarray(keys).dtype)), jnp.asarray(idx)

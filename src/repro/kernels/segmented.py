@@ -186,11 +186,15 @@ def segmented_scan_1d_pallas(op, xs: Pytree, flags: jax.Array, *,
 def offsets_to_flags(offsets: jax.Array, n: int) -> jax.Array:
     """CSR offsets -> flag array.  Empty segments leave no flag behind."""
     flags = jnp.zeros((n,), jnp.int32)
+    if n == 0:
+        return flags
     return flags.at[offsets[:-1]].set(1, mode="drop").at[0].set(1)
 
 
 def flags_to_segment_ids(flags: jax.Array) -> jax.Array:
     """0-based contiguous segment id per element (element 0 starts seg 0)."""
+    if flags.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
     f = flags.astype(jnp.int32).at[0].set(1)
     return jnp.cumsum(f) - 1
 

@@ -11,6 +11,11 @@ different lengths -- so the per-step chosen-token log-probs are flattened
 into one segment-per-request stream and reduced with the segmented mapreduce
 primitive (``last_scores`` / ``last_stats["seq_logprob"]``), not with a
 padded (B, T_max) reduction.
+
+Sampling: ``temperature > 0`` with ``top_k``/``top_p`` set filters each
+step's logits through ``segmented_top_k`` over the flat per-request vocab
+stream plus an exclusive-scan nucleus cutoff -- the serving-side consumer of
+the radix sort family (kernels/sort.py).
 """
 from __future__ import annotations
 
@@ -38,13 +43,17 @@ class Request:
 
 class Engine:
     def __init__(self, cfg, mesh, params, *, cache_len: int, batch_size: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+                 top_p_candidates: int = 64, seed: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.params = params
         self.cache_len = cache_len
         self.batch_size = batch_size
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
+        self.top_p_candidates = top_p_candidates
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
             TS.make_prefill_step(cfg, mesh, cache_len) if mesh is not None
@@ -66,7 +75,40 @@ class Engine:
         if self.temperature <= 0:
             return jnp.argmax(logits, axis=-1)
         self.key, sub = jax.random.split(self.key)
+        if self.top_k or self.top_p < 1.0:
+            return self._topk_topp_sample(sub, logits)
         return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def _topk_topp_sample(self, key, logits):
+        """Top-k / nucleus sampling via the segmented sort primitives.
+
+        The decode batch is treated as one flat stream of per-request vocab
+        segments (CSR offsets -- the same descriptors the seq-logprob
+        reduction uses, so a future ragged/per-request vocab mask is a
+        descriptor change, not a new code path).  ``segmented_top_k`` returns
+        each request's k highest logits descending plus their within-segment
+        indices, which *are* the vocab ids; the nucleus filter is then an
+        exclusive +scan of the candidate probabilities along the k axis.
+
+        With ``top_p`` alone, the nucleus is drawn from the
+        ``top_p_candidates`` highest-probability tokens rather than all V
+        -- the standard serving approximation that keeps the per-step sort
+        bounded (tokens beyond that set carry negligible mass for any
+        practical ``top_p``); raise ``top_p_candidates`` to widen it.
+        """
+        B, V = logits.shape
+        k = min(self.top_k if self.top_k else self.top_p_candidates, V)
+        flat = logits.astype(jnp.float32).reshape(-1)
+        offsets = jnp.arange(B + 1, dtype=jnp.int32) * V
+        vals, idx = forge.segmented_top_k(flat, k, offsets=offsets)
+        scaled = vals / self.temperature                   # (B, k) descending
+        # Keep the shortest prefix whose mass reaches top_p (the first
+        # candidate always survives: its exclusive prefix mass is 0).
+        probs = jax.nn.softmax(scaled, axis=-1)
+        cum = forge.scan(alg.ADD, probs, axis=1, inclusive=False)
+        filtered = jnp.where(cum < self.top_p, scaled, -jnp.inf)
+        choice = jax.random.categorical(key, filtered, axis=-1)
+        return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0]
 
     @staticmethod
     @jax.jit

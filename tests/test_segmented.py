@@ -163,6 +163,61 @@ def test_single_segment_matches_flat_scan(backend):
     assert_trees_close(got, want, rtol=1e-5, atol=1e-5, err=backend)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_single_segment_spanning_all_blocks(backend, inclusive):
+    """One segment across every kernel grid step (interpret block = 2048
+    elements -> 3 steps): the carry must propagate like the flat scan's."""
+    n = 4500
+    x = _ragged(8, n)
+    for kw in ({"offsets": jnp.asarray([0, n], jnp.int32)},
+               {"flags": jnp.zeros((n,), jnp.int32).at[0].set(1)}):
+        got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
+                                   backend=backend, **kw)
+        want = forge.scan(alg.ADD, x, inclusive=inclusive, backend=backend)
+        assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                           err=f"{backend}/{list(kw)}")
+    got = forge.segmented_mapreduce(
+        lambda v: v, alg.ADD, x, offsets=jnp.asarray([0, n], jnp.int32),
+        backend=backend)
+    assert got.shape == (1,)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(x).sum(),
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", ["offsets", "flags"])
+def test_zero_length_input(backend, variant):
+    """n == 0 streams: scans return the empty stream, mapreduce returns the
+    identity for every declared segment."""
+    x = jnp.zeros((0,), jnp.float32)
+    kw = ({"offsets": jnp.asarray([0, 0, 0], jnp.int32)}
+          if variant == "offsets"
+          else {"flags": jnp.zeros((0,), jnp.int32)})
+    for inclusive in (True, False):
+        got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
+                                   backend=backend, **kw)
+        assert jax.tree.leaves(got)[0].shape == (0,)
+    mr_kw = dict(kw) if variant == "offsets" else {**kw, "num_segments": 2}
+    got = forge.segmented_mapreduce(lambda v: v, alg.MAX, x, backend=backend,
+                                    **mr_kw)
+    assert got.shape == (2,)
+    assert np.isneginf(np.asarray(got)).all()   # identity fill
+    want = ref.ref_segmented_mapreduce(lambda v: v, alg.MAX, x,
+                                       offsets=[0, 0, 0], num_segments=2)
+    assert_trees_close(got, want, err=f"{backend}/{variant}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_zero_length_pytree_input(backend):
+    """Zero-length non-commutative pytree elements survive the guards too."""
+    a = jnp.zeros((0,), jnp.float32)
+    got = forge.segmented_scan(alg.AFFINE, (a, a),
+                               offsets=jnp.asarray([0, 0], jnp.int32),
+                               backend=backend)
+    assert all(l.shape == (0,) for l in jax.tree.leaves(got))
+
+
 def test_descriptor_validation():
     x = jnp.arange(8, dtype=jnp.float32)
     with pytest.raises(ValueError):

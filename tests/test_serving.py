@@ -54,3 +54,38 @@ def test_recurrent_arch_serving():
                                  max_new_tokens=8)])
     assert len(outs[0]) == 8
     assert all(np.isfinite(t) for t in outs[0])
+
+
+def test_topk_sampling_generates_valid_tokens(setup):
+    """temperature>0 with top_k routes through segmented_top_k sampling."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=4,
+                 temperature=1.0, top_k=5, seed=3)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=5),
+            Request(prompt=[4, 5], max_new_tokens=5)]
+    outs = eng.generate(reqs)
+    assert len(outs) == 2 and all(len(o) == 5 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+    assert len(eng.last_stats["seq_logprob"]) == 2
+
+
+def test_topk1_equals_greedy(setup):
+    """k=1 sampling must collapse to argmax regardless of temperature."""
+    cfg, params, _ = setup
+    reqs = [Request(prompt=[2, 7, 1], max_new_tokens=4)]
+    greedy = Engine(cfg, None, params, cache_len=64,
+                    batch_size=2).generate(reqs)
+    topk1 = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                   temperature=0.7, top_k=1, seed=5).generate(reqs)
+    assert greedy == topk1
+
+
+def test_tiny_topp_equals_greedy(setup):
+    """A nucleus below the first token's mass keeps only the argmax."""
+    cfg, params, _ = setup
+    reqs = [Request(prompt=[3, 3, 9], max_new_tokens=4)]
+    greedy = Engine(cfg, None, params, cache_len=64,
+                    batch_size=2).generate(reqs)
+    topp = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                  temperature=0.9, top_p=1e-6, seed=7).generate(reqs)
+    assert greedy == topp

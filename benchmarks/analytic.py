@@ -86,6 +86,60 @@ def segmented_scan_bytes(n: int, dtypes, policy=None) -> int:
     return 2 * np_ * per_elem + np_ * 4
 
 
+def batched_scan_bytes(batch: int, n: int, dtypes, policy=None) -> int:
+    """Batched scan: one read + one write per (padded) element of every row,
+    in a single launch -- the 2*B*n element-movement bound.  Padding is per
+    row (each row tiles independently on the inner grid axis)."""
+    policy = policy or ki.resolve_tuning()
+    sub = max(ki.min_tile(d)[0] for d in dtypes)
+    block = policy.nitem_scan * sub * ki.LANES
+    np_ = _pad(n, block)
+    per_elem = sum(jnp.dtype(d).itemsize for d in dtypes)
+    return 2 * batch * np_ * per_elem
+
+
+def batched_mapreduce_bytes(batch: int, n: int, in_dtypes, out_dtypes,
+                            policy=None) -> int:
+    """Batched reduce: one read per element of every row + one output
+    element per row."""
+    policy = policy or ki.resolve_tuning()
+    sub = max(ki.min_tile(d)[0] for d in in_dtypes)
+    block = policy.nitem_reduce * sub * ki.LANES
+    np_ = _pad(n, block)
+    return batch * (np_ * sum(jnp.dtype(d).itemsize for d in in_dtypes) +
+                    sum(jnp.dtype(d).itemsize for d in out_dtypes))
+
+
+def batched_matvec_bytes(batch: int, n: int, p: int, dtype, out_dtype=None,
+                         policy=None) -> int:
+    """B independent matvecs in one launch: per-row traffic times B (the
+    batch grid dimension maps disjoint blocks, so no amplification)."""
+    from repro.kernels.ops import _pick_blocks_matvec
+    policy = policy or ki.resolve_tuning()
+    sz = jnp.dtype(dtype).itemsize
+    osz = jnp.dtype(out_dtype or dtype).itemsize
+    rn, cp = _pick_blocks_matvec(policy, jnp.zeros((1, 1), dtype), n, p)
+    a_bytes = _pad(n, rn) * _pad(p, cp) * sz
+    x_bytes = ki.cdiv(p, cp) * _pad(n, rn) * sz
+    y_bytes = _pad(p, cp) * osz
+    return batch * (a_bytes + x_bytes + y_bytes)
+
+
+def channel_scan_bytes(batch: int, t: int, c: int, n_leaves_in: int,
+                       n_leaves_out: int, dtype, policy=None) -> int:
+    """(B, T, C) channelwise scan (the batched linear-recurrence layout):
+    one read per input leaf element, one write per output leaf element,
+    padded to the (t_rows, LANES) tile grid."""
+    policy = policy or ki.resolve_tuning()
+    sub = ki.min_tile(dtype)[0]
+    t_rows = min(policy.nitem_scan * sub,
+                 max(sub, 1 << (max(t - 1, 1)).bit_length()))
+    tp = _pad(t, t_rows)
+    cp_ = _pad(c, ki.LANES)
+    sz = jnp.dtype(dtype).itemsize
+    return batch * tp * cp_ * sz * (n_leaves_in + n_leaves_out)
+
+
 def sort_pass_count(key_bits: int, digit_bits: int, num_segments: int = 1) -> int:
     """LSD scatter passes: key digits, then segment-id digits (if any)."""
     passes = ki.cdiv(key_bits, digit_bits)

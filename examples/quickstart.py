@@ -76,6 +76,20 @@ h = forge.linear_recurrence(a, b, backend=B)
 print("h_t = a_t*h_{t-1} + b_t over (B=2, T=128, C=256):",
       "final-state norm =", float(jnp.linalg.norm(h[:, -1])))
 
+print("\n== 7b. batched primitives: one launch per uniform batch ==")
+probs = jax.nn.softmax(
+    jax.random.normal(jax.random.fold_in(key, 12), (4, 8), jnp.float32), -1)
+cum = forge.batched_scan(alg.ADD, probs, inclusive=False, backend=B)
+print("per-request exclusive nucleus mass (B=4 rows, one launch):",
+      np.round(np.asarray(cum[:, -1]), 3).tolist())
+lens = jnp.asarray([8, 3, 5, 1], jnp.int32)
+msk = (jnp.arange(8, dtype=jnp.int32)[None, :] < lens[:, None]).astype(jnp.int32)
+tot = forge.batched_mapreduce(
+    lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD, (probs, msk),
+    backend=B)
+print("masked per-request sums (ragged lengths, no host loop):",
+      np.round(np.asarray(tot), 3).tolist())
+
 print("\n== 8. radix sort / top-k: derived primitives on the scan substrate ==")
 expert = jax.random.randint(jax.random.fold_in(key, 10), (24,), 0, 4,
                             jnp.int32).astype(jnp.uint32)

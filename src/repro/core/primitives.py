@@ -57,6 +57,82 @@ def mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *, axis=None,
     return ki.resolve_impl("mapreduce", backend)(f, op, xs, axis=axis)
 
 
+def batched_scan(op: alg.AssocOp, xs: Pytree, *, inclusive: bool = True,
+                 reverse: bool = False, backend: str | None = None) -> Pytree:
+    """Per-row prefix scan over ``(B, n)`` pytree leaves in a single launch.
+
+    Each of the ``B`` rows is scanned independently along axis 1 -- the
+    batch rides a parallel grid dimension instead of paying one kernel
+    launch (and one tuning lookup) per row.  ``op`` may be non-commutative
+    and elements arbitrary pytrees, exactly as for :func:`scan`.  ``B == 0``
+    and ``n == 0`` are valid and return the input unchanged.
+    """
+    return ki.resolve_impl("batched_scan", backend)(
+        op, xs, inclusive=inclusive, reverse=reverse)
+
+
+def batched_mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *,
+                      backend: str | None = None) -> Pytree:
+    """Per-row ``op``-reduction of ``f(x)`` over ``(B, n)`` leaves -> ``(B,)``.
+
+    One launch for the whole batch.  Unlike the flat :func:`mapreduce`,
+    ``op`` need not be commutative: non-commutative operators take the
+    order-preserving batched-scan route internally.  Rows of length 0 (and
+    ``B == 0`` batches) yield ``op``'s identity per row.
+    """
+    return ki.resolve_impl("batched_mapreduce", backend)(f, op, xs)
+
+
+def batched_matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array,
+                   *, backend: str | None = None) -> Pytree:
+    """y[b, j] = op_i f(x[b, i], A[b, i, j]) over ``(B, n, p)`` / ``(B, n)``.
+
+    The generalized matvec of :func:`matvec`, one instance per batch row,
+    single launch.  ``n == 0`` yields identity rows.
+    """
+    return ki.resolve_impl("batched_matvec", backend)(f, op, A, x)
+
+
+def batched_vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array,
+                   *, backend: str | None = None) -> Pytree:
+    """z[b, i] = op_j f(A[b, i, j], x[b, j]) over ``(B, n, p)`` / ``(B, p)``."""
+    return ki.resolve_impl("batched_vecmat", backend)(f, op, A, x)
+
+
+def batched_semiring_matvec(semiring: alg.Semiring, A: jax.Array,
+                            x: jax.Array, *,
+                            backend: str | None = None) -> Pytree:
+    """Semiring-bundled form of :func:`batched_matvec`."""
+    return ki.resolve_impl("batched_matvec", backend)(
+        semiring.f, semiring.op, A, x)
+
+
+def batched_semiring_vecmat(semiring: alg.Semiring, A: jax.Array,
+                            x: jax.Array, *,
+                            backend: str | None = None) -> Pytree:
+    """Semiring-bundled form of :func:`batched_vecmat`."""
+    return ki.resolve_impl("batched_vecmat", backend)(
+        semiring.f, semiring.op, A, x)
+
+
+def batched_linear_recurrence(a: jax.Array, b: jax.Array,
+                              h0: jax.Array | None = None, *,
+                              reverse: bool = False,
+                              backend: str | None = None) -> jax.Array:
+    """h[b]_t = a[b]_t * h[b]_{t-1} + b[b]_t along axis 1 of (B, T, C).
+
+    The explicitly batch-native registration of :func:`linear_recurrence`:
+    the whole ``(B, T, C)`` recurrence is one kernel launch with batch and
+    channel blocks on parallel grid dimensions (channels ride the 128 lanes,
+    so no cross-lane combine is ever emitted).  ``h0`` is an optional
+    per-row ``(B, C)`` initial state.  This is the entry point the serving
+    and recurrent-model decode paths call, and the one the autotuner keys
+    with a batch bucket.
+    """
+    return ki.resolve_impl("batched_linear_recurrence", backend)(
+        a, b, h0=h0, reverse=reverse)
+
+
 def segmented_scan(op: alg.AssocOp, xs: Pytree, *, flags: jax.Array = None,
                    offsets: jax.Array = None, inclusive: bool = True,
                    backend: str | None = None) -> Pytree:
@@ -214,7 +290,10 @@ def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
 
     The model-facing specialization of ``scan`` with the AFFINE operator --
     the compute core of RG-LRU (recurrentgemma) and mLSTM inter-chunk state
-    propagation (xlstm).
+    propagation (xlstm).  Identical implementations to
+    :func:`batched_linear_recurrence` (the layout is batch-native already);
+    consumers on the decode hot path call the ``batched_`` name so the
+    tuner's batch-bucketed keys apply.
     """
     return ki.resolve_impl("linear_recurrence", backend)(
         a, b, h0=h0, reverse=reverse)

@@ -58,9 +58,15 @@ def shape_bucket(n: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TunableSpec:
-    """How to tune one primitive: cache-key fields + candidate overrides."""
+    """How to tune one primitive: cache-key fields + candidate overrides.
 
-    keyer: Callable[[tuple, dict], tuple[str, str, int] | None]
+    ``keyer`` returns ``(op_name, dtype, n)`` or, for the batched family,
+    ``(op_name, dtype, n, batch)`` -- the batch rides its own bucket in the
+    cache key, and because the batched primitives are single launches, one
+    tuning race covers the whole batch rather than one race per row.
+    """
+
+    keyer: Callable[[tuple, dict], tuple | None]
     candidates: tuple[dict, ...]  # TuningPolicy field overrides to race
 
 
@@ -93,6 +99,42 @@ def _keys_keyer(args, kwargs):
     return "keys", dtype, n
 
 
+def _batched_rowkey(xs) -> tuple[str, int, int]:
+    """(dtype, per-row leading extent, batch) of (B, n) pytree leaves."""
+    leaves = jax.tree.leaves(xs)
+    dtype = str(jax.numpy.result_type(leaves[0]))
+    return dtype, int(leaves[0].shape[1]), int(leaves[0].shape[0])
+
+
+def _batched_scan_keyer(args, kwargs):
+    op, xs = args[0], args[1]
+    dtype, n, batch = _batched_rowkey(xs)
+    return getattr(op, "name", "?"), dtype, n, batch
+
+
+def _batched_mapreduce_keyer(args, kwargs):
+    op, xs = args[1], args[2]
+    dtype, n, batch = _batched_rowkey(xs)
+    return getattr(op, "name", "?"), dtype, n, batch
+
+
+def _batched_matvec_keyer(args, kwargs):
+    # Per-row dims are bucketed *separately* ("128x8192", not their product):
+    # block selection (_pick_blocks_matvec) branches on the aspect ratio, so
+    # a tall-narrow winner must never be replayed on a wide-short problem.
+    A = args[2]
+    B, n, p = A.shape
+    nk = f"{shape_bucket(n)}x{shape_bucket(p)}"
+    return getattr(args[1], "name", "?"), str(A.dtype), nk, int(B)
+
+
+def _batched_linrec_keyer(args, kwargs):
+    a = args[0]
+    B, t, c = a.shape
+    nk = f"{shape_bucket(t)}x{shape_bucket(c)}"   # T tiling != C tiling
+    return "affine", str(a.dtype), nk, int(B)
+
+
 def _ladder(field: str, values) -> tuple[dict, ...]:
     return tuple({field: v} for v in values)
 
@@ -120,6 +162,23 @@ TUNABLE: dict[str, TunableSpec] = {
     "segmented_sort_pairs": TunableSpec(_keys_keyer, _SORT_LADDER),
     "segmented_argsort": TunableSpec(_keys_keyer, _SORT_LADDER),
     "segmented_top_k": TunableSpec(_keys_keyer, _SORT_LADDER),
+    # Batched family: keys carry a batch bucket; one race per whole batch.
+    "batched_scan": TunableSpec(
+        _batched_scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
+    # batched_mapreduce has two routes: the accumulate-tile kernel reads
+    # nitem_reduce (commutative ops), the order-preserving scan route reads
+    # nitem_scan (non-commutative ops).  Each candidate overrides both so
+    # whichever route the op takes, the race varies the knob it consumes
+    # (keys carry the op name, so the routes never share a cache entry).
+    "batched_mapreduce": TunableSpec(
+        _batched_mapreduce_keyer,
+        tuple({"nitem_reduce": v, "nitem_scan": v} for v in (4, 8, 16))),
+    "batched_matvec": TunableSpec(
+        _batched_matvec_keyer, _ladder("matvec_rows", (4, 8, 16))),
+    "batched_vecmat": TunableSpec(
+        _batched_matvec_keyer, _ladder("vecmat_rows", (4, 8, 16))),
+    "batched_linear_recurrence": TunableSpec(
+        _batched_linrec_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
 }
 
 
@@ -193,10 +252,18 @@ class Autotuner:
     # -- keys ---------------------------------------------------------------
 
     def make_key(self, primitive: str, backend: str, op_name: str,
-                 dtype: str, n: int) -> str:
+                 dtype: str, n, batch: int | None = None) -> str:
+        """Cache key; ``batch`` (batched family only) gets its own bucket so
+        a B=4 decode batch and a B=256 one tune independently while keeping
+        one entry -- one race -- per whole batch.  ``n`` is a flat extent to
+        bucket, or a pre-bucketed string for multi-dim rows (e.g.
+        ``"8192x128"``) whose aspect ratio drives block selection."""
         platform = f"{jax.default_backend()}/{ki.detect_chip()}"
+        batch_part = "" if batch is None else f"|batch={shape_bucket(batch)}"
+        n_part = n if isinstance(n, str) else shape_bucket(n)
         return (f"{primitive}|op={op_name}|dtype={dtype}"
-                f"|n={shape_bucket(n)}|backend={backend}|platform={platform}")
+                f"|n={n_part}{batch_part}"
+                f"|backend={backend}|platform={platform}")
 
     def lookup(self, key: str) -> dict | None:
         entry = self._cache.get(key)

@@ -30,12 +30,20 @@ Pytree = Any
 
 
 def _mapreduce_kernel(f, op, in_treedef, out_treedef, n, rows, n_in, n_out,
-                      *refs):
+                      grid_axis, *refs):
+    """Strided accumulate into a persistent VMEM tile, collapse on last step.
+
+    ``grid_axis`` names the sequential (reduction) grid dimension: 0 for the
+    flat 1-D kernel, 1 for the grid-batched kernel (kernels/batched.py) whose
+    leading grid dimension rides the batch in parallel.  The accumulator
+    resets at step 0 of the sequential axis, which for the batched layout is
+    exactly the start of each new row.
+    """
     x_refs = refs[:n_in]
     o_refs = refs[n_in:n_in + n_out]
     acc_refs = refs[n_in + n_out:]
-    g = pl.program_id(0)
-    ng = pl.num_programs(0)
+    g = pl.program_id(grid_axis)
+    ng = pl.num_programs(grid_axis)
     block = rows * ki.LANES
 
     acc_like = jax.tree.unflatten(
@@ -98,7 +106,7 @@ def mapreduce_1d_pallas(f, op, xs: Pytree, *,
 
     kernel = functools.partial(
         _mapreduce_kernel, f, op, in_treedef, out_treedef, n, rows,
-        len(in_leaves), len(out_leaves))
+        len(in_leaves), len(out_leaves), 0)
     out = pl.pallas_call(
         kernel,
         grid=(grid,),

@@ -44,11 +44,19 @@ def _out_struct(f, x_like, a_like):
     return jax.tree.flatten(out)
 
 
-def _matvec_kernel(f, op, out_treedef, n, rn, n_out, *refs):
+def _matvec_kernel(f, op, out_treedef, n, rn, n_out, batched, *refs):
+    """Column-stripe matvec body.
+
+    ``batched`` shifts the reduction grid axis from 1 to 2: the batched
+    layout (kernels/batched.py) prepends a parallel batch grid dimension and
+    gives every block a leading singleton batch extent, but the reduction
+    protocol -- output block doubles as the accumulator, reset at reduction
+    step 0, in-order fold per tile -- is identical.
+    """
     x_ref, a_ref = refs[0], refs[1]
     o_refs = refs[2:]
-    i = pl.program_id(1)
-    cp = a_ref.shape[1]
+    i = pl.program_id(2 if batched else 1)
+    cp = a_ref.shape[-1]
 
     acc_like = jax.tree.unflatten(
         out_treedef,
@@ -58,10 +66,10 @@ def _matvec_kernel(f, op, out_treedef, n, rn, n_out, *refs):
     @pl.when(i == 0)
     def _init():
         for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
-            orf[...] = ia
+            orf[...] = ia.reshape(orf.shape)
 
-    x = x_ref[...]            # (rn, 1)
-    a = a_ref[...]            # (rn, cp)
+    x = x_ref[...].reshape(rn, 1)
+    a = a_ref[...].reshape(rn, cp)
     v = f(x, a)               # pytree of (rn, cp)
 
     tile_like = jax.tree.unflatten(
@@ -73,10 +81,11 @@ def _matvec_kernel(f, op, out_treedef, n, rn, n_out, *refs):
     v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
 
     part = ki.tile_reduce(op, v, axis=0)        # (1, cp), in-order
-    acc = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+    acc = jax.tree.unflatten(
+        out_treedef, [orf[...].reshape(1, cp) for orf in o_refs])
     acc = op(acc, part)
     for orf, l in zip(o_refs, jax.tree.leaves(acc)):
-        orf[...] = l
+        orf[...] = l.reshape(orf.shape)
 
 
 def matvec_pallas(f, op, A: jax.Array, x: jax.Array, *,
@@ -92,7 +101,7 @@ def matvec_pallas(f, op, A: jax.Array, x: jax.Array, *,
 
     grid = (ki.cdiv(p, cp), ki.cdiv(n, rn))
     kernel = functools.partial(
-        _matvec_kernel, f, op, out_treedef, n, rn, len(out_leaves))
+        _matvec_kernel, f, op, out_treedef, n, rn, len(out_leaves), False)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -111,14 +120,20 @@ def matvec_pallas(f, op, A: jax.Array, x: jax.Array, *,
 
 
 def _matvec_packed_kernel(f, op, out_treedef, n, p, g, rn, *refs):
-    """Tall-narrow matvec with lane packing (p <= 64).
+    """Tall-narrow matvec with lane packing (p <= 64).  COMMUTATIVE ops only.
 
     The naive layout pads p columns to 128 lanes (12x waste at p=10,
     EXPERIMENTS.md §Kernel).  Here ``g = 128 // p`` row-groups ride the
     lanes: A is viewed (free, row-major) as (n/g, g*p); each lane column
     (r, j) accumulates rows i ≡ r (mod g) of original column j, and the
-    final combine folds the g group partials -- order-preserved via the
-    in-order tile fold, so non-commutative ops stay correct.
+    final combine folds the g group partials.  That group fold is in tile
+    order, but group r holds rows r, g+r, 2g+r, ... -- an *interleaving* of
+    the row sequence -- and the ``n % g`` tail rows fold in separately after
+    the packed body, so the reduction order is NOT the row order.  Only
+    commutative operators are correct here; the dispatcher
+    (ops.py ``_matvec_pallas``) sends non-commutative ops to the
+    order-preserving :func:`matvec_pallas`, and :func:`matvec_packed_pallas`
+    rejects them outright.
     """
     x_ref, a_ref = refs[0], refs[1]
     o_refs = refs[2:]
@@ -171,7 +186,17 @@ def _matvec_packed_kernel(f, op, out_treedef, n, p, g, rn, *refs):
 
 def matvec_packed_pallas(f, op, A: jax.Array, x: jax.Array, *,
                          block_rows: int, interpret: bool = False):
-    """Lane-packed tall-narrow matvec: y[j] = op_i f(x[i], A[i, j]), p <= 64."""
+    """Lane-packed tall-narrow matvec: y[j] = op_i f(x[i], A[i, j]), p <= 64.
+
+    Commutative ``op`` only (group interleave + separate tail fold reorder
+    the reduction -- see :func:`_matvec_packed_kernel`).
+    """
+    if not getattr(op, "commutative", False):
+        raise ValueError(
+            "matvec_packed_pallas: lane packing interleaves row groups and "
+            "folds the n % g tail out of row order; non-commutative "
+            f"operators (got {getattr(op, 'name', op)!r}) must use "
+            "matvec_pallas instead")
     n, p = A.shape
     g = max(ki.LANES // p, 1)
     w = g * p
@@ -216,11 +241,12 @@ def matvec_packed_pallas(f, op, A: jax.Array, x: jax.Array, *,
     return result
 
 
-def _vecmat_kernel(f, op, out_treedef, p, cj, n_out, *refs):
+def _vecmat_kernel(f, op, out_treedef, p, cj, n_out, batched, *refs):
+    """Row-stripe vecmat body; ``batched`` as in :func:`_matvec_kernel`."""
     x_ref, a_ref = refs[0], refs[1]
     o_refs = refs[2:]
-    j = pl.program_id(1)
-    ri = a_ref.shape[0]
+    j = pl.program_id(2 if batched else 1)
+    ri = a_ref.shape[-2]
 
     acc_like = jax.tree.unflatten(
         out_treedef,
@@ -230,10 +256,10 @@ def _vecmat_kernel(f, op, out_treedef, p, cj, n_out, *refs):
     @pl.when(j == 0)
     def _init():
         for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
-            orf[...] = ia
+            orf[...] = ia.reshape(orf.shape)
 
-    x = x_ref[...]            # (1, cj)
-    a = a_ref[...]            # (ri, cj)
+    x = x_ref[...].reshape(1, cj)
+    a = a_ref[...].reshape(ri, cj)
     v = f(a, x)               # pytree of (ri, cj)
 
     tile_like = jax.tree.unflatten(
@@ -245,10 +271,11 @@ def _vecmat_kernel(f, op, out_treedef, p, cj, n_out, *refs):
     v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
 
     part = ki.tile_reduce(op, v, axis=1)        # (ri, 1), in-order
-    acc = jax.tree.unflatten(out_treedef, [orf[...] for orf in o_refs])
+    acc = jax.tree.unflatten(
+        out_treedef, [orf[...].reshape(ri, 1) for orf in o_refs])
     acc = op(acc, part)
     for orf, l in zip(o_refs, jax.tree.leaves(acc)):
-        orf[...] = l
+        orf[...] = l.reshape(orf.shape)
 
 
 def vecmat_pallas(f, op, A: jax.Array, x: jax.Array, *,
@@ -264,7 +291,7 @@ def vecmat_pallas(f, op, A: jax.Array, x: jax.Array, *,
 
     grid = (ki.cdiv(n, ri), ki.cdiv(p, cj))
     kernel = functools.partial(
-        _vecmat_kernel, f, op, out_treedef, p, cj, len(out_leaves))
+        _vecmat_kernel, f, op, out_treedef, p, cj, len(out_leaves), False)
     out = pl.pallas_call(
         kernel,
         grid=grid,

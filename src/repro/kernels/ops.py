@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
+from repro.kernels import batched as batched_k
 from repro.kernels import copy as copy_k
 from repro.kernels import mapreduce as mapreduce_k
 from repro.kernels import matvec as matvec_k
@@ -384,6 +385,165 @@ ki.register_impl("linear_recurrence", "pallas-interpret")(
 @ki.register_impl("linear_recurrence", "xla")
 def _linrec_xla(a, b, h0=None, *, reverse=False, policy=None):
     return ref.ref_linear_recurrence(a, b, h0=h0, axis=1, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# Batched family: one launch per uniform batch of independent rows
+# (kernels/batched.py).  Zero-extent edges (B == 0, n == 0, p == 0) are
+# resolved here so the kernels only ever see grids of extent >= 1.
+# ---------------------------------------------------------------------------
+
+
+def _batched_mapreduce_identity(f, op, xs, B):
+    """Per-row identity output: what reducing zero elements must yield."""
+    one = jax.eval_shape(
+        f, jax.tree.map(lambda l: jax.ShapeDtypeStruct((1, 1), l.dtype), xs))
+    return op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((B,), l.dtype), one))
+
+
+def _batched_scan_pallas(op, xs, *, inclusive=True, reverse=False,
+                         interpret=False, policy=None):
+    leaves = jax.tree.leaves(xs)
+    B, n = leaves[0].shape
+    if B == 0 or n == 0:
+        return xs
+    if reverse:
+        xs = jax.tree.map(lambda l: jnp.flip(l, 1), xs)
+    out = batched_k.batched_scan_pallas(op, xs, inclusive=inclusive,
+                                        policy=policy, interpret=interpret)
+    if reverse:
+        out = jax.tree.map(lambda l: jnp.flip(l, 1), out)
+    return out
+
+
+ki.register_impl("batched_scan", "pallas-tpu")(
+    functools.partial(_batched_scan_pallas, interpret=False))
+ki.register_impl("batched_scan", "pallas-interpret")(
+    functools.partial(_batched_scan_pallas, interpret=True))
+
+
+@ki.register_impl("batched_scan", "xla")
+def _batched_scan_xla(op, xs, *, inclusive=True, reverse=False, policy=None):
+    leaves = jax.tree.leaves(xs)
+    if 0 in leaves[0].shape:
+        return xs
+    return ref.ref_scan(op, xs, axis=1, inclusive=inclusive, reverse=reverse)
+
+
+def _batched_mapreduce_pallas(f, op, xs, *, interpret=False, policy=None):
+    leaves = jax.tree.leaves(xs)
+    B, n = leaves[0].shape
+    if B == 0 or n == 0:
+        return _batched_mapreduce_identity(f, op, xs, B)
+    if not getattr(op, "commutative", False):
+        # Order-preserving route: batched inclusive scan of the mapped
+        # values, take each row's last element.  (The flat mapreduce keeps
+        # its commutative contract; the batched family relaxes it the same
+        # way scan does, because the scan substrate is order-preserving.)
+        vals = f(xs)
+        incl = batched_k.batched_scan_pallas(
+            op, vals, inclusive=True, policy=policy, interpret=interpret)
+        return jax.tree.map(lambda l: l[:, -1], incl)
+    return batched_k.batched_mapreduce_pallas(
+        f, op, xs, policy=policy, interpret=interpret)
+
+
+ki.register_impl("batched_mapreduce", "pallas-tpu")(
+    functools.partial(_batched_mapreduce_pallas, interpret=False))
+ki.register_impl("batched_mapreduce", "pallas-interpret")(
+    functools.partial(_batched_mapreduce_pallas, interpret=True))
+
+
+@ki.register_impl("batched_mapreduce", "xla")
+def _batched_mapreduce_xla(f, op, xs, *, policy=None):
+    leaves = jax.tree.leaves(xs)
+    B, n = leaves[0].shape
+    if B == 0 or n == 0:
+        return _batched_mapreduce_identity(f, op, xs, B)
+    direct = {"add": jnp.sum, "mul": jnp.prod, "max": jnp.max, "min": jnp.min}
+    vals = f(xs)
+    if op.name in direct and isinstance(vals, jax.Array):
+        return direct[op.name](vals, axis=1)
+    if op.name == "logsumexp" and isinstance(vals, jax.Array):
+        return jax.scipy.special.logsumexp(vals, axis=1)
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=1)
+    return jax.tree.map(lambda l: l[:, -1], scanned)
+
+
+def _batched_matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
+    policy = policy or ki.resolve_tuning("interpret" if interpret else None)
+    B, n, p = A.shape
+    if B == 0 or n == 0 or p == 0:
+        return _batched_mv_empty(f, op, (x.dtype, A.dtype), B, p)
+    rn, cp = _pick_blocks_matvec(policy, A, n, p)
+    return batched_k.batched_matvec_pallas(
+        f, op, A, x, block_rows=rn, block_cols=cp, interpret=interpret)
+
+
+def _batched_vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
+    policy = policy or ki.resolve_tuning("interpret" if interpret else None)
+    B, n, p = A.shape
+    if B == 0 or n == 0 or p == 0:
+        return _batched_mv_empty(f, op, (A.dtype, x.dtype), B, n)
+    ri, cj = _pick_blocks_vecmat(policy, A, n, p)
+    return batched_k.batched_vecmat_pallas(
+        f, op, A, x, block_rows=ri, block_cols=cj, interpret=interpret)
+
+
+def _batched_mv_empty(f, op, arg_dtypes, B, out_extent):
+    """(B, out_extent) identity rows: reducing zero terms yields identity."""
+    one = jax.eval_shape(
+        f, jax.ShapeDtypeStruct((1, 1), arg_dtypes[0]),
+        jax.ShapeDtypeStruct((1, 1), arg_dtypes[1]))
+    return op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((B, out_extent), l.dtype), one))
+
+
+ki.register_impl("batched_matvec", "pallas-tpu")(
+    functools.partial(_batched_matvec_pallas, interpret=False))
+ki.register_impl("batched_matvec", "pallas-interpret")(
+    functools.partial(_batched_matvec_pallas, interpret=True))
+ki.register_impl("batched_vecmat", "pallas-tpu")(
+    functools.partial(_batched_vecmat_pallas, interpret=False))
+ki.register_impl("batched_vecmat", "pallas-interpret")(
+    functools.partial(_batched_vecmat_pallas, interpret=True))
+
+
+@ki.register_impl("batched_matvec", "xla")
+def _batched_matvec_xla(f, op, A, x, *, policy=None):
+    B, n, p = A.shape
+    if B == 0 or n == 0 or p == 0:
+        return _batched_mv_empty(f, op, (x.dtype, A.dtype), B, p)
+    if op.name == "add" and _is_arithmetic(f, x, A):
+        return jnp.einsum("bn,bnp->bp", x, A)
+    vals = f(x[:, :, None], A)
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=1)
+    return jax.tree.map(lambda l: l[:, -1], scanned)
+
+
+@ki.register_impl("batched_vecmat", "xla")
+def _batched_vecmat_xla(f, op, A, x, *, policy=None):
+    B, n, p = A.shape
+    if B == 0 or n == 0 or p == 0:
+        return _batched_mv_empty(f, op, (A.dtype, x.dtype), B, n)
+    if op.name == "add" and _is_arithmetic(f, x, A):
+        return jnp.einsum("bnp,bp->bn", A, x)
+    vals = f(A, x[:, None, :])
+    scanned = jax.lax.associative_scan(op.combine, vals, axis=2)
+    return jax.tree.map(lambda l: l[:, :, -1], scanned)
+
+
+# Batched linear recurrence: the (B, T, C) channelwise scan IS the
+# grid-batched layout (batch and channel blocks ride parallel grid
+# dimensions), so the same implementations serve both names; the explicit
+# ``batched_`` registration is the one consumers (serving, recurrent models)
+# call and the one the tuner keys with a batch bucket.
+ki.register_impl("batched_linear_recurrence", "pallas-tpu")(
+    functools.partial(_linrec_pallas, interpret=False))
+ki.register_impl("batched_linear_recurrence", "pallas-interpret")(
+    functools.partial(_linrec_pallas, interpret=True))
+ki.register_impl("batched_linear_recurrence", "xla")(_linrec_xla)
 
 
 # ---------------------------------------------------------------------------

@@ -83,6 +83,105 @@ def ref_linear_recurrence(a: jax.Array, b: jax.Array, h0=None,
 
 
 # ---------------------------------------------------------------------------
+# Batched primitives.  Per-family Python-loop oracles: each (B, ...) input is
+# split into rows and the *flat* reference is applied per row -- deliberately
+# sharing nothing with the grid-batched layout the kernels use, so batched
+# kernel-vs-ref agreement checks the batching itself, not just the row math.
+# ---------------------------------------------------------------------------
+
+
+def _take_row(xs, i):
+    return jax.tree.map(lambda l: l[i], xs)
+
+
+def _stack_rows(rows, like):
+    if not rows:                       # B == 0: zero-row leaves, shape known
+        return jax.tree.map(lambda l: l[:0], like)
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *rows)
+
+
+def ref_batched_scan(op, xs: Pytree, *, inclusive: bool = True,
+                     reverse: bool = False) -> Pytree:
+    """Row-by-row flat scan of ``(B, n)`` leaves, restacked."""
+    B = jax.tree.leaves(xs)[0].shape[0]
+    rows = [ref_scan(op, _take_row(xs, i), axis=0, inclusive=inclusive,
+                     reverse=reverse) for i in range(B)]
+    return _stack_rows(rows, xs)
+
+
+def ref_batched_mapreduce(f, op, xs: Pytree) -> Pytree:
+    """Row-by-row op-reduce of ``f(row)`` -> one element per row.
+
+    Length-0 rows (and B == 0 batches) yield ``op``'s identity per row --
+    the reduction of zero elements.
+    """
+    B, n = jax.tree.leaves(xs)[0].shape[:2]
+    one = jax.eval_shape(
+        f, jax.tree.map(lambda l: jax.ShapeDtypeStruct((1,), l.dtype), xs))
+    ident = op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((), l.dtype), one))
+    if B == 0:
+        return jax.tree.map(lambda l: jnp.zeros((0,), l.dtype), one)
+    rows = [ident if n == 0 else ref_mapreduce(f, op, _take_row(xs, i))
+            for i in range(B)]
+    return _stack_rows(rows, None)
+
+
+def _mv_row_identity(f, op, lhs_dtype, rhs_dtype, extent):
+    """Identity row for a zero-term generalized matvec/vecmat reduction."""
+    one = jax.eval_shape(
+        f, jax.ShapeDtypeStruct((1, 1), lhs_dtype),
+        jax.ShapeDtypeStruct((1, 1), rhs_dtype))
+    return op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((extent,), l.dtype), one))
+
+
+def ref_batched_matvec(f, op, A: jax.Array, x: jax.Array) -> Pytree:
+    """Row-by-row :func:`ref_matvec` over (B, n, p) x (B, n).
+
+    ``n == 0`` rows (zero reduction terms) yield ``op``'s identity.
+    """
+    B, n, p = A.shape
+    if B == 0 or n == 0:
+        ident = _mv_row_identity(f, op, x.dtype, A.dtype, p)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (B,) + l.shape), ident)
+    rows = [ref_matvec(f, op, A[b], x[b]) for b in range(B)]
+    return _stack_rows(rows, None)
+
+
+def ref_batched_vecmat(f, op, A: jax.Array, x: jax.Array) -> Pytree:
+    """Row-by-row :func:`ref_vecmat` over (B, n, p) x (B, p)."""
+    B, n, p = A.shape
+    if B == 0 or p == 0:
+        ident = _mv_row_identity(f, op, A.dtype, x.dtype, n)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (B,) + l.shape), ident)
+    rows = [ref_vecmat(f, op, A[b], x[b]) for b in range(B)]
+    return _stack_rows(rows, None)
+
+
+def ref_batched_linear_recurrence(a, b, h0=None, *, reverse: bool = False):
+    """Sequential numpy time loop per batch row: h_t = a_t h_{t-1} + b_t.
+
+    The most independent oracle available -- no associative_scan, no
+    vectorized recurrence, just the defining equation stepped in order.
+    """
+    import numpy as np
+    an, bn = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    B, T, C = an.shape
+    out = np.zeros_like(bn)
+    for i in range(B):
+        h = (np.zeros((C,), np.float64) if h0 is None
+             else np.asarray(h0, np.float64)[i])
+        ts = range(T - 1, -1, -1) if reverse else range(T)
+        for t in ts:
+            h = an[i, t] * h + bn[i, t]
+            out[i, t] = h
+    return jnp.asarray(out.astype(np.asarray(b).dtype))
+
+
+# ---------------------------------------------------------------------------
 # Segmented primitives.  Oracles only: they require *concrete* segment
 # descriptors and loop over segments in Python, applying the flat references
 # per segment -- deliberately sharing no code with the lifted-operator

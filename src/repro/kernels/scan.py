@@ -54,6 +54,51 @@ def _mask_tree(mask, x, ident):
 # ---------------------------------------------------------------------------
 
 
+def block_scan_rowmajor(op, treedef, dtypes, x, carry, *, rows, inclusive):
+    """Scan one masked ``(rows, LANES)`` tile in row-major element order.
+
+    ``carry`` is the running ``(1, 1)``-shaped pytree carried across the
+    sequential grid.  Returns ``(out, new_carry)``.  Entirely in registers:
+
+      1. scan along lanes within each row (row-major element order),
+      2. prefix the per-row totals down the sublanes,
+      3. broadcast-combine row prefixes back onto the lane scans.
+
+    Shared by the flat 1-D kernel here and the grid-batched kernel
+    (kernels/batched.py), which runs this exact body once per
+    (row, block) grid step with a per-row carry reset.
+    """
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (rows, ki.LANES), 1)
+    lane_scan = ki.tile_scan(op, x, axis=1)
+    row_tot = ki.tile_take_last(lane_scan, axis=1)           # (rows, 1)
+    row_pref = ki.tile_scan(op, row_tot, axis=0)             # inclusive
+    ident_col = op.identity(_tile_likes(treedef, (rows, 1), dtypes))
+    row0 = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) == 0
+    row_excl = jax.tree.map(
+        lambda p, i: jnp.where(row0, i, jnp.roll(p, 1, axis=0)),
+        row_pref, ident_col)
+    local = op(row_excl, lane_scan)                          # broadcast over lanes
+
+    incl = op(carry, local)                                  # broadcast over tile
+
+    if inclusive:
+        out = incl
+    else:
+        # exclusive[k] = inclusive[k-1]; the element entering each row 0 is
+        # the previous row's last, and tile element (0, 0) gets the carry.
+        prev_lane = jax.tree.map(lambda l: jnp.roll(l, 1, axis=1), incl)
+        row_last = ki.tile_take_last(incl, axis=1)
+        prev_row_last = jax.tree.map(
+            lambda rl, c: jnp.where(row0, c, jnp.roll(rl, 1, axis=0)),
+            row_last, carry)
+        out = jax.tree.map(
+            lambda pl_, prl: jnp.where(cidx == 0, prl, pl_),
+            prev_lane, prev_row_last)
+
+    new_carry = op(carry, ki.tile_take_last(row_pref, axis=0))
+    return out, new_carry
+
+
 def _scan1d_kernel(op, treedef, n, rows, inclusive, n_leaves, *refs):
     x_refs = refs[:n_leaves]
     o_refs = refs[n_leaves:2 * n_leaves]
@@ -61,10 +106,10 @@ def _scan1d_kernel(op, treedef, n, rows, inclusive, n_leaves, *refs):
     g = pl.program_id(0)
     block = rows * ki.LANES
 
-    tile_like = _tile_likes(treedef, (rows, ki.LANES), [r.dtype for r in x_refs])
-    ident_tile = op.identity(tile_like)
-    carry_like = _tile_likes(treedef, (1, 1), [r.dtype for r in carry_refs])
-    ident_carry = op.identity(carry_like)
+    dtypes = [r.dtype for r in x_refs]
+    ident_tile = op.identity(_tile_likes(treedef, (rows, ki.LANES), dtypes))
+    ident_carry = op.identity(
+        _tile_likes(treedef, (1, 1), [r.dtype for r in carry_refs]))
 
     @pl.when(g == 0)
     def _init():
@@ -82,42 +127,9 @@ def _scan1d_kernel(op, treedef, n, rows, inclusive, n_leaves, *refs):
     valid = gidx < n
     x = _mask_tree(valid, x, ident_tile)
 
-    # Block-local scan, entirely in registers:
-    #   1. scan along lanes within each row (row-major element order),
-    #   2. prefix the per-row totals down the sublanes,
-    #   3. broadcast-combine row prefixes back onto the lane scans.
-    lane_scan = ki.tile_scan(op, x, axis=1)
-    row_tot = ki.tile_take_last(lane_scan, axis=1)           # (rows, 1)
-    row_pref = ki.tile_scan(op, row_tot, axis=0)             # inclusive
-    ident_col = op.identity(
-        _tile_likes(treedef, (rows, 1), [r.dtype for r in x_refs]))
-    row_excl = jax.tree.map(
-        lambda p, i: jnp.where(
-            jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) == 0,
-            i, jnp.roll(p, 1, axis=0)),
-        row_pref, ident_col)
-    local = op(row_excl, lane_scan)                          # broadcast over lanes
-
     carry = jax.tree.unflatten(treedef, [cr[...] for cr in carry_refs])
-    incl = op(carry, local)                                  # broadcast over tile
-
-    if inclusive:
-        out = incl
-    else:
-        # exclusive[k] = inclusive[k-1]; the element entering each row 0 is
-        # the previous row's last, and tile element (0, 0) gets the carry.
-        prev_lane = jax.tree.map(lambda l: jnp.roll(l, 1, axis=1), incl)
-        row_last = ki.tile_take_last(incl, axis=1)
-        prev_row_last = jax.tree.map(
-            lambda rl, c: jnp.where(
-                jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) == 0,
-                c, jnp.roll(rl, 1, axis=0)),
-            row_last, carry)
-        out = jax.tree.map(
-            lambda pl_, prl: jnp.where(cidx == 0, prl, pl_),
-            prev_lane, prev_row_last)
-
-    new_carry = op(carry, ki.tile_take_last(row_pref, axis=0))
+    out, new_carry = block_scan_rowmajor(
+        op, treedef, dtypes, x, carry, rows=rows, inclusive=inclusive)
     for cr, nc in zip(carry_refs, jax.tree.leaves(new_carry)):
         cr[...] = nc
     for orf, o in zip(o_refs, jax.tree.leaves(out)):

@@ -3,17 +3,28 @@
 These are where the paper's scan primitive is load-bearing:
 
 * RG-LRU's diagonal recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t x_t)
-  runs on ``core.primitives.linear_recurrence`` -- the AFFINE-operator scan
-  in the (B, T, C) channel layout (Pallas kernel on TPU, associative_scan on
-  XLA backends).
+  runs on ``core.primitives.batched_linear_recurrence`` -- the
+  AFFINE-operator scan in the (B, T, C) channel layout, one launch for the
+  whole batch (Pallas kernel on TPU, associative_scan on XLA backends).
 * mLSTM's exponential-gating stabilizer m_t = max(log f_t + m_{t-1}, log i_t)
   runs on ``core.scan`` with the non-commutative MAXPLUS_AFFINE operator --
   an "arbitrary operator" the vendor libraries the paper benchmarks against
   cannot express.  With m known, the (C, n) matrix recurrence is processed
-  chunkwise (intra-chunk = masked decay attention; inter-chunk = sequential
-  lax.scan over chunk states, the memory-sane choice for d_head^2 states).
+  chunkwise: intra-chunk = masked decay attention, parallel over chunks;
+  inter-chunk = the per-chunk decay is a *scalar per head*, so the chunk
+  states follow a diagonal linear recurrence along the chunk axis and run on
+  ``batched_linear_recurrence`` (one launch), replacing the former
+  sequential lax.scan of chunk steps.  The trade: chunk-start states
+  (NC x H x d_head^2) are materialized instead of streamed -- comparable to
+  the (T x H x d_head) activations already produced, and what buys decode
+  batches a launch count independent of sequence length.  The per-chunk
+  *output* computation (whose L x L attention tensor would grow NC-fold if
+  vectorized) is size-gated: fully chunk-parallel up to a footprint cutoff,
+  streamed with a carry-free lax.map beyond it, so long-context prefill
+  keeps its one-chunk peak.
 * sLSTM's gates read h_{t-1}: a genuinely non-associative recurrence, noted
-  in DESIGN.md §4 -- lowered as lax.scan over time (one XLA while loop).
+  in DESIGN.md §4 -- lowered as lax.scan over time (one XLA while loop);
+  no associative operator exists for it, so it stays off the scan substrate.
 """
 from __future__ import annotations
 
@@ -85,6 +96,14 @@ def blockdiag_apply(w, x):
 
 _RGLRU_C = 8.0
 
+# Elements of the (B, NC, L, L, H) intra-chunk attention tensor above which
+# mLSTM computes chunk outputs with a memory-streaming lax.map instead of
+# vectorizing over all chunks (see _mlstm_chunk_scan): 2^24 bf16 elements is
+# a 32 MiB attention tensor (plus its float32 feeders), comfortably VMEM/HBM
+# -sane while keeping every decode and moderate-prefill shape on the fully
+# parallel path.
+_MLSTM_INTRA_PARALLEL_MAX_ELEMS = 1 << 24
+
 
 def init_rglru_block(key, cfg, dtype=jnp.float32):
     d = cfg.d_model
@@ -130,7 +149,7 @@ def rglru_forward(params, cfg, x, *, return_cache=False):
     u = L.shard(u, "batch", "seq_sp", "rnn")
     a, i, mult = _rglru_gates(params, u)
     b = (mult * i * u.astype(jnp.float32))
-    h = forge.linear_recurrence(a, b)                    # (B, T, w) fp32
+    h = forge.batched_linear_recurrence(a, b)            # (B, T, w) fp32
     h = h.astype(dtype)
     y = jnp.einsum("btw,wd->btd", h * jax.nn.gelu(gate_branch),
                    params["wo"].astype(dtype))
@@ -214,10 +233,18 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
                       state_dtype=jnp.float32):
     """Chunkwise mLSTM.  q,k,v: (B,NC,L,H,dh); lf,li,m: (B,NC,L,H).
 
-    Carries stabilized (C', n') across chunks; intra-chunk is masked decay
-    attention.  Returns h: (B,NC,L,H,dh) and final (C', n').
-    ``state_dtype``: precision of the O(dh^2) chunk carry -- the dominant
-    HBM traffic of the layer (EXPERIMENTS.md §Perf xlstm iteration).
+    Fully chunk-parallel: the inter-chunk state recurrence
+    ``S_c = exp(G_L,c) * S_{c-1} + U_c`` has a *scalar per-head* decay, so
+    it is a diagonal linear recurrence along the chunk axis -- one
+    ``batched_linear_recurrence`` launch over channels = the flattened
+    (H, dh, dh) state, instead of a sequential lax.scan of NC chunk steps.
+    Everything else (masked decay attention intra-chunk, the state-feeding
+    einsums) is chunk-independent and vectorizes over NC.
+
+    Returns h: (B,NC,L,H,dh) and final (C', n').
+    ``state_dtype``: precision of the O(dh^2) inter-chunk states -- the
+    dominant HBM traffic of the layer (EXPERIMENTS.md §Perf xlstm
+    iteration); the chunk-axis recurrence runs in this dtype.
     """
     Bb, NC, Lc, H, dh = q.shape
     scale = 1.0 / np.sqrt(dh)
@@ -233,12 +260,45 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
     # Intra-chunk cumulative log decay G_t = sum_{s<=t} lf'_s (per chunk).
     G = jnp.cumsum(lf_p, axis=2)
 
-    def step(carry, xs):
-        Cs, ns = carry
-        qc, kc, vc, lic, Gc, m_c = xs
-        # Fused mask+exp+product: one (B,L,L,H) tensor instead of three, and
-        # the weight matrix feeds the v/k matmuls in bf16 (§Perf xlstm iter 2:
-        # intra-chunk tensors dominate the memory term once carries shrink).
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # Per-chunk state contributions (parallel over chunks):
+    #   U_c = sum_s exp(G_L - G_s + li'_s) k_s v_s^T,   u_c likewise for n.
+    gl = G[:, :, -1:, :]                         # (B,NC,1,H) end-of-chunk G_L
+    wst = jnp.exp(gl - G + li_p)                 # (B,NC,L,H)
+    U = jnp.einsum("bclh,bclhd,bclhe->bchde", wst, kf, vf)
+    un = jnp.einsum("bclh,bclhd->bchd", wst, kf)
+    eg = jnp.exp(gl[:, :, 0])                    # (B,NC,H) per-chunk decay
+
+    if state0 is None:
+        C0 = jnp.zeros((Bb, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((Bb, H, dh), jnp.float32)
+    else:
+        C0, n0 = jax.tree.map(lambda t: t.astype(jnp.float32), state0)
+
+    # Inter-chunk states after every chunk, in one batched launch each:
+    # channels = flattened per-head state, decay broadcast across its block.
+    def chunk_states(contrib, init, chan):
+        a_full = jnp.broadcast_to(
+            eg[..., None], (Bb, NC, H, chan)).reshape(Bb, NC, H * chan)
+        S = forge.batched_linear_recurrence(
+            a_full.astype(state_dtype),
+            contrib.reshape(Bb, NC, H * chan).astype(state_dtype),
+            init.reshape(Bb, H * chan).astype(state_dtype))
+        # Chunk-START states: shift right, seed with the initial state.
+        start = jnp.concatenate(
+            [init.reshape(Bb, 1, H * chan).astype(S.dtype), S[:, :-1]], axis=1)
+        return S, start.reshape((Bb, NC, H, chan)).astype(jnp.float32)
+
+    SC, Cs = chunk_states(U, C0, dh * dh)
+    Sn, ns = chunk_states(un, n0, dh)
+    Cs = Cs.reshape(Bb, NC, H, dh, dh)
+
+    # Per-chunk outputs from the precomputed chunk-start states.  Fused
+    # mask+exp+product: one (B,L,L,H) tensor instead of three, feeding the
+    # v/k matmuls in bf16 (§Perf xlstm iter 2).
+    def chunk_out(qc, kc, vc, lic, Gc, m_c, Cs_c, ns_c):
         logw = Gc[:, :, None, :] - Gc[:, None, :, :] + lic[:, None, :, :]
         tri = jnp.tril(jnp.ones((Lc, Lc), bool))
         qk = jnp.einsum("blhd,bshd->blsh", qc.astype(jnp.float32),
@@ -250,40 +310,37 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
                              preferred_element_type=jnp.float32)
         decay_t = jnp.exp(Gc)
         h_inter = jnp.einsum("blhd,bhde->blhe", qc.astype(jnp.float32),
-                             Cs.astype(jnp.float32)) * decay_t[..., None]
+                             Cs_c) * decay_t[..., None]
         n_intra = jnp.einsum("blsh,bshd->blhd", attn,
                              kc.astype(jnp.bfloat16),
                              preferred_element_type=jnp.float32)
         qn_intra = jnp.einsum("blhd,blhd->blh", qc.astype(jnp.float32),
                               n_intra)
-        qn_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32), ns) \
-            * decay_t
+        qn_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32),
+                              ns_c) * decay_t
         num = h_intra + h_inter
         qn = qn_intra + qn_inter
         denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_c))
-        h = num / denom[..., None]
-        # Chunk-end state update: C' <- exp(G_L) C' + sum_s exp(G_L - G_s + li'_s) k_s v_s^T
-        gl = Gc[:, -1:, :]                          # (B,1,H)
-        wst = jnp.exp(gl - Gc + lic)                # (B,L,H)
-        C_new = Cs.astype(jnp.float32) * jnp.exp(gl[:, 0])[:, :, None, None] \
-            + jnp.einsum("blh,blhd,blhe->bhde", wst, kc.astype(jnp.float32),
-                         vc.astype(jnp.float32))
-        n_new = ns.astype(jnp.float32) * jnp.exp(gl[:, 0])[:, :, None] \
-            + jnp.einsum("blh,blhd->bhd", wst, kc.astype(jnp.float32))
-        return (C_new.astype(state_dtype), n_new.astype(state_dtype)), h
+        return num / denom[..., None]
 
-    if state0 is None:
-        C0 = jnp.zeros((Bb, H, dh, dh), state_dtype)
-        n0 = jnp.zeros((Bb, H, dh), state_dtype)
+    # Vectorizing chunk_out over NC multiplies the peak (B,L,L,H) attention
+    # footprint by NC -- fine for decode/smoke/moderate-prefill shapes and
+    # fastest there, but long-context prefill (T=500k at L=64 is ~8k chunks)
+    # must not trade its former streamed peak for an NC-fold one.  Past the
+    # cutoff, loop chunks with a carry-free lax.map: peak stays one chunk,
+    # and unlike the old lax.scan the iterations carry no state dependency
+    # (the recurrence already ran above).
+    args = tuple(jnp.moveaxis(t, 1, 0)
+                 for t in (q, k, v, li_p, G, m, Cs, ns))
+    if Bb * NC * Lc * Lc * H <= _MLSTM_INTRA_PARALLEL_MAX_ELEMS:
+        hs = jax.vmap(chunk_out)(*args)
     else:
-        C0, n0 = jax.tree.map(lambda t: t.astype(state_dtype), state0)
-    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
-          jnp.moveaxis(li_p, 1, 0), jnp.moveaxis(G, 1, 0),
-          jnp.moveaxis(m, 1, 0))
-    from repro.models import attention as _attn  # dry-run unroll flag
-    (Cf, nf), hs = jax.lax.scan(step, (C0, n0), xs,
-                                unroll=NC if _attn.KV_UNROLL else 1)
-    return jnp.moveaxis(hs, 0, 1), (Cf, nf)
+        hs = jax.lax.map(lambda a: chunk_out(*a), args)
+    h = jnp.moveaxis(hs, 0, 1)
+
+    Cf = SC[:, -1].reshape(Bb, H, dh, dh).astype(state_dtype)
+    nf = Sn[:, -1].reshape(Bb, H, dh).astype(state_dtype)
+    return h, (Cf, nf)
 
 
 def mlstm_forward(params, cfg, x, *, return_cache=False):

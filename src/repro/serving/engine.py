@@ -6,16 +6,23 @@ finished sequences are masked out.  For the recurrent/hybrid archs the
 "cache" is O(1) state + ring-buffered local-attention windows, which is what
 makes the ``long_500k`` serving shape feasible.
 
+The decode hot path is *batch-native*: every per-request quantity is
+computed by one grid-batched primitive launch over the whole batch
+(kernels/batched.py), never by a ``vmap`` of per-request 1-D calls or a
+per-request Python loop.
+
 Per-request sequence scores: the batch is *ragged* -- requests finish at
-different lengths -- so the per-step chosen-token log-probs are flattened
-into one segment-per-request stream and reduced with the segmented mapreduce
-primitive (``last_scores`` / ``last_stats["seq_logprob"]``), not with a
-padded (B, T_max) reduction.
+different lengths -- so the per-step chosen-token log-probs are reduced with
+``batched_mapreduce`` over a (requests, steps) grid with a per-request
+length mask (``last_scores`` / ``last_stats["seq_logprob"]``): one launch,
+one row per request, masked steps contribute the identity.
 
 Sampling: ``temperature > 0`` with ``top_k``/``top_p`` set filters each
 step's logits through ``segmented_top_k`` over the flat per-request vocab
-stream plus an exclusive-scan nucleus cutoff -- the serving-side consumer of
-the radix sort family (kernels/sort.py).
+stream (uniform V-sized segments -- the batched layout in segment clothing)
+plus a ``batched_scan`` nucleus cutoff over the (B, k) candidate grid -- the
+serving-side consumers of the sort family (kernels/sort.py) and the batched
+family (kernels/batched.py).
 """
 from __future__ import annotations
 
@@ -103,9 +110,11 @@ class Engine:
         vals, idx = forge.segmented_top_k(flat, k, offsets=offsets)
         scaled = vals / self.temperature                   # (B, k) descending
         # Keep the shortest prefix whose mass reaches top_p (the first
-        # candidate always survives: its exclusive prefix mass is 0).
+        # candidate always survives: its exclusive prefix mass is 0).  The
+        # (B, k) candidate grid is exactly the batched-scan layout: one
+        # launch scans every request's row, whatever the batch size.
         probs = jax.nn.softmax(scaled, axis=-1)
-        cum = forge.scan(alg.ADD, probs, axis=1, inclusive=False)
+        cum = forge.batched_scan(alg.ADD, probs, inclusive=False)
         filtered = jnp.where(cum < self.top_p, scaled, -jnp.inf)
         choice = jax.random.categorical(key, filtered, axis=-1)
         return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0]
@@ -165,15 +174,18 @@ class Engine:
         n_req = len(requests)
         n_tok = sum(len(o) for o in outputs[:n_req])
 
-        # Sequence scores over the ragged batch: one segment per request of
-        # its realized length (no padding to the longest request).
-        lengths = np.asarray([len(o) for o in outputs[:n_req]], np.int32)
-        lp = np.asarray(jnp.stack(step_logps, axis=1))  # (B, steps_taken)
-        flat = np.concatenate([lp[i, :lengths[i]] for i in range(n_req)])
-        offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
-        seq_logprob = forge.segmented_mapreduce(
-            lambda v: v, alg.ADD, jnp.asarray(flat, jnp.float32),
-            offsets=jnp.asarray(offsets))
+        # Sequence scores over the ragged batch: one batched-mapreduce row
+        # per request, masked to its realized length -- a single launch over
+        # (n_req, steps) with no per-request host loop or flatten, and the
+        # identical code path whether n_req is 1 or the full batch.
+        lengths = jnp.asarray([len(o) for o in outputs[:n_req]], jnp.int32)
+        lp = jnp.stack(step_logps, axis=1)[:n_req]      # (n_req, steps)
+        steps = lp.shape[1]
+        mask = (jnp.arange(steps, dtype=jnp.int32)[None, :]
+                < lengths[:, None]).astype(jnp.int32)
+        seq_logprob = forge.batched_mapreduce(
+            lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD,
+            (lp.astype(jnp.float32), mask))
         self.last_scores = np.asarray(seq_logprob)
 
         self.last_stats = {

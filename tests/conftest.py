@@ -25,3 +25,41 @@ def assert_trees_close(a, b, rtol=1e-5, atol=1e-5, err=""):
 def rng():
     import jax
     return jax.random.PRNGKey(42)
+
+
+def make_operand(op_name: str, nprng, shape, dtype=None):
+    """Random pytree element for the operator named ``op_name``.
+
+    Shared by the property suite (tests/test_properties.py) and the
+    differential fuzz harness (tests/test_conformance.py).  Values are kept
+    in ranges where float products/exps stay well-conditioned, so
+    associativity drift is bounded and kernel-vs-oracle comparisons are
+    meaningful at tight tolerances.
+    """
+    import jax.numpy as jnp
+    dtype = dtype or jnp.float32
+
+    def arr(lo, hi):
+        return jnp.asarray(nprng.uniform(lo, hi, shape), dtype)
+
+    if op_name in ("add", "max", "min"):
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+            return jnp.asarray(nprng.integers(-100, 100, shape), dtype)
+        return arr(-100.0, 100.0)
+    if op_name == "mul":
+        return arr(0.7, 1.3)
+    if op_name == "logsumexp":
+        return arr(-5.0, 5.0)
+    if op_name == "affine":
+        return (arr(0.5, 1.2), arr(-2.0, 2.0))
+    if op_name == "maxplus_affine":
+        return (arr(-1.0, 0.0), arr(-3.0, 3.0))
+    if op_name == "softmax_merge":
+        return (arr(-3.0, 3.0), arr(0.1, 2.0), arr(-2.0, 2.0))
+    if op_name == "quaternion_mul":
+        return (arr(0.7, 1.3), arr(-0.3, 0.3), arr(-0.3, 0.3),
+                arr(-0.3, 0.3))
+    if op_name == "mat2_mul":
+        return (arr(0.7, 1.3), arr(-0.3, 0.3), arr(-0.3, 0.3),
+                arr(0.7, 1.3))
+    raise ValueError(f"no operand generator for operator {op_name!r}")

@@ -1,0 +1,266 @@
+"""Differential fuzz harness: primitives vs. the ref.py oracles.
+
+A seeded random sweep over (primitive x operator x dtype x shape/batch
+bucket x backend) comparing ``pallas-interpret`` (the real TPU kernel bodies
+interpreted on CPU) and ``xla`` (the portable fallback) against the
+independent Python-loop oracles in ``kernels/ref.py``.  Coverage is aimed at
+the places grid-batched kernels actually break:
+
+* batch = 0 and length-0 rows (zero-extent grid dimensions),
+* per-row extents straddling the kernels' block boundary by exactly +-1
+  (computed from the interpret TuningPolicy, not hard-coded),
+* non-commutative pytree operators, which force the order-preserving paths.
+
+``CONFORMANCE_MATRIX`` below is the declared oracle coverage per primitive;
+``tests/test_properties.py`` machine-checks the operator *laws* the same
+matrix relies on and asserts the matrix itself stays complete.  To add a new
+primitive to the conformance suite: give it a Python-loop oracle in
+``kernels/ref.py``, list >= 3 operators here (at least one non-commutative
+pytree operator unless the primitive's algebra forbids it -- then say so in
+``FIXED_OP_PRIMITIVES``), and add a sweep test over its shape grid.
+"""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close, make_operand
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.kernels import ref
+
+BACKENDS = ["pallas-interpret", "xla"]
+
+# Declared oracle coverage: operator names exercised per batched primitive.
+# Non-commutative pytree ops (mat2_mul / quaternion_mul / affine) force the
+# order-preserving kernel paths; the matrix is asserted complete by
+# tests/test_properties.py::test_conformance_matrix_coverage.
+CONFORMANCE_MATRIX = {
+    "batched_scan": ["add", "max", "mat2_mul"],
+    "batched_mapreduce": ["add", "logsumexp", "quaternion_mul"],
+    "batched_matvec": ["add", "min", "mat2_mul"],
+    "batched_vecmat": ["add", "min", "mat2_mul"],
+    "batched_linear_recurrence": ["affine"],
+}
+# Primitives whose operator is fixed by construction (linear_recurrence IS
+# the AFFINE scan -- a non-commutative pytree operator -- so the >=3-ops
+# requirement does not apply to it).
+FIXED_OP_PRIMITIVES = {"batched_linear_recurrence"}
+
+
+def _seed(*parts):
+    """Stable cross-process seed (Python's hash() is process-salted)."""
+    return zlib.crc32("|".join(str(p) for p in parts).encode())
+
+
+def _scan_block(dtype, nitem_field="nitem_scan"):
+    """The interpret-policy block extent the kernels tile rows with."""
+    pol = ki.resolve_tuning("interpret")
+    sub = ki.min_tile(dtype)[0]
+    return getattr(pol, nitem_field) * sub * ki.LANES
+
+
+def _batch_shapes(block):
+    """(B, n) grid: zero extents, tiny rows, block boundary +-1."""
+    return [(0, 5), (3, 0), (1, 1), (3, 7),
+            (2, block - 1), (1, block), (2, block + 1)]
+
+
+# ---------------------------------------------------------------------------
+# batched_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["batched_scan"])
+def test_batched_scan_conformance(op_name, backend):
+    op = alg.STD_OPS[op_name]
+    nprng = np.random.default_rng(_seed(op_name, backend))
+    block = _scan_block(jnp.float32)
+    shapes = _batch_shapes(block)
+    if op_name == "mat2_mul":
+        # Pytree ops are slow under interpret, so trade the three boundary
+        # shapes for the single strongest one: (2, block + 1) crosses the
+        # block boundary AND hands the per-row carry across blocks with a
+        # non-commutative operator -- the order-sensitive case.  Long
+        # non-commutative products re-associate, hence the looser tolerance.
+        shapes = [s for s in shapes if s[1] < block - 1] + [(2, block + 1)]
+    tol = 1e-2 if op_name == "mat2_mul" else 1e-3
+    for B, n in shapes:
+        xs = make_operand(op_name, nprng, (B, n))
+        got = forge.batched_scan(op, xs, backend=backend)
+        want = ref.ref_batched_scan(op, xs)
+        assert_trees_close(got, want, rtol=tol, atol=tol,
+                           err=f"batched_scan {op_name} B={B} n={n}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("reverse", [True, False])
+def test_batched_scan_modes(inclusive, reverse, backend):
+    nprng = np.random.default_rng(7)
+    x = make_operand("add", nprng, (3, 130))
+    got = forge.batched_scan(alg.ADD, x, inclusive=inclusive,
+                             reverse=reverse, backend=backend)
+    want = ref.ref_batched_scan(alg.ADD, x, inclusive=inclusive,
+                                reverse=reverse)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.bfloat16])
+def test_batched_scan_dtypes(dtype, backend):
+    nprng = np.random.default_rng(11)
+    if dtype == jnp.int32:
+        x = make_operand("add", nprng, (2, 300), dtype)
+        got = forge.batched_scan(alg.ADD, x, backend=backend)
+        want = ref.ref_batched_scan(alg.ADD, x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        return
+    # bf16: positive operands keep the prefix sums well-conditioned (a
+    # near-zero partial sum of +-100 terms has no meaningful relative error
+    # at 8 mantissa bits); tolerance covers association-order rounding.
+    x = jnp.asarray(nprng.uniform(0.1, 1.0, (2, 300)), dtype)
+    got = forge.batched_scan(alg.ADD, x, backend=backend)
+    want = ref.ref_batched_scan(alg.ADD, x)
+    assert_trees_close(jax.tree.map(lambda l: l.astype(jnp.float32), got),
+                       jax.tree.map(lambda l: l.astype(jnp.float32), want),
+                       rtol=5e-2, atol=1.0)
+
+
+# ---------------------------------------------------------------------------
+# batched_mapreduce
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["batched_mapreduce"])
+def test_batched_mapreduce_conformance(op_name, backend):
+    op = alg.STD_OPS[op_name]
+    nprng = np.random.default_rng(_seed("mr", op_name, backend))
+    block = _scan_block(jnp.float32, "nitem_reduce")
+    shapes = _batch_shapes(block)
+    if op_name == "quaternion_mul":
+        # As in test_batched_scan_conformance: one multi-block case keeps
+        # the cross-block, order-preserving (scan-route) reduction covered
+        # for a non-commutative pytree op without the full boundary sweep.
+        shapes = [s for s in shapes if s[1] < block - 1] + [(2, block + 1)]
+    tol = 1e-2 if op_name == "quaternion_mul" else 1e-3
+    for B, n in shapes:
+        xs = make_operand(op_name, nprng, (B, n))
+        got = forge.batched_mapreduce(lambda t: t, op, xs, backend=backend)
+        want = ref.ref_batched_mapreduce(lambda t: t, op, xs)
+        assert_trees_close(got, want, rtol=tol, atol=tol,
+                           err=f"batched_mapreduce {op_name} B={B} n={n}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_mapreduce_mapped_dtype(backend):
+    """f changes the element type (uint8 -> f32), per row."""
+    nprng = np.random.default_rng(13)
+    u = jnp.asarray(nprng.integers(0, 256, (3, 500)), jnp.uint8)
+    got = forge.batched_mapreduce(alg.unitfloat8_decode, alg.ADD, u,
+                                  backend=backend)
+    want = ref.ref_batched_mapreduce(alg.unitfloat8_decode, alg.ADD, u)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# batched_matvec / batched_vecmat
+# ---------------------------------------------------------------------------
+
+_MV_CASES = {
+    # name -> (f_matvec, f_vecmat, op): f argument order is (x, a) for
+    # matvec and (a, x) for vecmat, mirroring the flat primitives.
+    "add": (lambda x, a: x * a, lambda a, x: a * x, alg.ADD),
+    "min": (lambda x, a: x + a, lambda a, x: a + x, alg.MIN),
+    # Non-commutative pytree: each (row, col) term becomes a shear matrix;
+    # the reduction composes them in row/column order.
+    "mat2_mul": (
+        lambda x, a: (1.0 + 0 * a, x * a, 0 * a, 1.0 + 0 * a),
+        lambda a, x: (1.0 + 0 * a, a * x, 0 * a, 1.0 + 0 * a),
+        alg.MAT2_MUL),
+}
+
+
+def _mv_shapes():
+    pol = ki.resolve_tuning("interpret")
+    rn = pol.matvec_rows * ki.min_tile(jnp.float32)[0]
+    return [(0, 4, 3), (2, 0, 3), (1, 1, 1), (3, rn - 1, 5), (2, rn, 2),
+            (2, rn + 1, 7), (1, 40, 130)]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case", sorted(_MV_CASES))
+def test_batched_matvec_conformance(case, backend):
+    f, _, op = _MV_CASES[case]
+    nprng = np.random.default_rng(_seed("mv", case, backend))
+    for B, n, p in _mv_shapes():
+        A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(B, n)) * 0.2, jnp.float32)
+        got = forge.batched_matvec(f, op, A, x, backend=backend)
+        want = ref.ref_batched_matvec(f, op, A, x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"batched_matvec {case} {B}x{n}x{p}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case", sorted(_MV_CASES))
+def test_batched_vecmat_conformance(case, backend):
+    _, f, op = _MV_CASES[case]
+    nprng = np.random.default_rng(_seed("vm", case, backend))
+    for B, n, p in _mv_shapes():
+        A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(B, p)) * 0.2, jnp.float32)
+        got = forge.batched_vecmat(f, op, A, x, backend=backend)
+        want = ref.ref_batched_vecmat(f, op, A, x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"batched_vecmat {case} {B}x{n}x{p}")
+
+
+# ---------------------------------------------------------------------------
+# batched_linear_recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_linear_recurrence_conformance(backend):
+    nprng = np.random.default_rng(_seed("lr", backend))
+    for B, T, C in [(1, 1, 1), (2, 5, 3), (2, 33, 130), (3, 64, 128),
+                    (1, 100, 1)]:
+        a = jnp.asarray(nprng.uniform(0.5, 1.0, (B, T, C)), jnp.float32)
+        b = jnp.asarray(nprng.normal(size=(B, T, C)), jnp.float32)
+        h0 = jnp.asarray(nprng.normal(size=(B, C)), jnp.float32)
+        for h in (None, h0):
+            got = forge.batched_linear_recurrence(a, b, h, backend=backend)
+            want = ref.ref_batched_linear_recurrence(a, b, h)
+            assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                               err=f"batched_linrec {B}x{T}x{C} h0={h is not None}")
+    a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, 17, 5)), jnp.float32)
+    b = jnp.asarray(nprng.normal(size=(2, 17, 5)), jnp.float32)
+    got = forge.batched_linear_recurrence(a, b, reverse=True, backend=backend)
+    want = ref.ref_batched_linear_recurrence(a, b, reverse=True)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend agreement: interpret and xla must agree with each other,
+# not merely each be close to the oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_backends_agree_with_each_other():
+    nprng = np.random.default_rng(29)
+    x = make_operand("add", nprng, (3, 515))
+    got_i = forge.batched_scan(alg.ADD, x, backend="pallas-interpret")
+    got_x = forge.batched_scan(alg.ADD, x, backend="xla")
+    assert_trees_close(got_i, got_x, rtol=1e-5, atol=1e-4)
+    m = make_operand("mat2_mul", nprng, (2, 140))
+    got_i = forge.batched_mapreduce(lambda t: t, alg.MAT2_MUL, m,
+                                    backend="pallas-interpret")
+    got_x = forge.batched_mapreduce(lambda t: t, alg.MAT2_MUL, m,
+                                    backend="xla")
+    assert_trees_close(got_i, got_x, rtol=1e-4, atol=1e-4)

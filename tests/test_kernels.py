@@ -203,6 +203,35 @@ def test_matvec_noncommutative_order(rng):
     assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_matvec_tall_narrow_noncommutative_ragged_tail(rng):
+    """Regression: the lane-packed kernel interleaves row groups and folds
+    the ``n % g != 0`` tail out of row order -- correct only for commutative
+    ops.  A tall-narrow shape that *would* take the packed path must, with a
+    non-commutative op, dispatch to the order-preserving kernel and still
+    match the oracle exactly."""
+    n, p = 515, 3                    # p <= 64, n >= 4*128 => packed gate;
+    assert n % (128 // p) != 0       # ragged tail rows exist
+    ks = jax.random.split(rng, 2)
+    A = jax.random.normal(ks[0], (n, p), jnp.float32) * 0.1
+    x = jax.random.normal(ks[1], (n,), jnp.float32) * 0.1
+    f = lambda xv, av: (1.0 + 0 * av, xv * av, 0 * av, 1.0 + 0 * av)
+    got = forge.matvec(f, alg.MAT2_MUL, A, x, backend=B)
+    want = ref.ref_matvec(f, alg.MAT2_MUL, A, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_packed_rejects_noncommutative(rng):
+    """Calling the packed kernel directly with a non-commutative op is a
+    hard error, not a silent reorder."""
+    from repro.kernels import matvec as matvec_k
+    A = jnp.ones((512, 4), jnp.float32)
+    x = jnp.ones((512,), jnp.float32)
+    f = lambda xv, av: (1.0 + 0 * av, xv * av, 0 * av, 1.0 + 0 * av)
+    with pytest.raises(ValueError, match="commutative|row order"):
+        matvec_k.matvec_packed_pallas(f, alg.MAT2_MUL, A, x,
+                                      block_rows=16, interpret=True)
+
+
 @pytest.mark.parametrize("n", [100, 4096, 100000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.uint8])
 def test_copy(n, dtype, rng):

@@ -1,0 +1,191 @@
+"""Property-based conformance suite for the operator algebra.
+
+Every ``AssocOp`` the kernels dispatch on carries three load-bearing claims:
+
+* ``combine`` is **associative** -- the entire scan/reduce substrate
+  (tile scans, grid carries, the Blelloch segmented lift, the batched
+  family) is only correct if it holds;
+* ``identity(like)`` is an **exact** identity -- it is what masked tile
+  tails and carry initialization inject, so ``op(identity, x) == x`` must
+  hold bit-for-bit, not approximately;
+* ``commutative`` is an honest declaration -- kernels take the balanced
+  fold (and the lane-packed matvec) only when it is set, so a false claim
+  silently reorders reductions.
+
+This suite machine-checks all three on random pytree values for every
+operator in ``alg.STD_OPS``, plus the segmented-lift laws the segmented
+kernels build on.  It uses hypothesis when installed and falls back to a
+seeded sample sweep otherwise, so the laws are exercised in every
+environment.  It also pins the oracle bookkeeping: the conformance matrix in
+``tests/test_conformance.py`` (which op is fuzzed against which primitive)
+must stay complete as primitives are added.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close, make_operand
+from repro.core import operators as alg
+from test_conformance import CONFORMANCE_MATRIX, FIXED_OP_PRIMITIVES
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def seeded(test):
+    """Drive ``test(op_name, seed)`` by hypothesis when available, else by a
+    fixed seed sweep -- one decorator, identical test bodies."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=20, deadline=None)(
+            given(seed=st.integers(0, 2**32 - 1))(test))
+    return pytest.mark.parametrize("seed", [31 * i + 1 for i in range(10)])(
+        test)
+
+
+OP_NAMES = sorted(alg.STD_OPS)
+
+
+def _triple(op_name, seed, shape=(4,)):
+    nprng = np.random.default_rng(seed)
+    return tuple(make_operand(op_name, nprng, shape) for _ in range(3))
+
+
+# ---------------------------------------------------------------------------
+# The three AssocOp laws.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op_name", OP_NAMES)
+@seeded
+def test_associativity(op_name, seed):
+    op = alg.STD_OPS[op_name]
+    x, y, z = _triple(op_name, seed)
+    left = op(op(x, y), z)
+    right = op(x, op(y, z))
+    assert_trees_close(left, right, rtol=1e-5, atol=1e-5,
+                       err=f"{op_name} associativity (seed {seed})")
+
+
+@pytest.mark.parametrize("op_name", OP_NAMES)
+@seeded
+def test_identity_exact(op_name, seed):
+    """op(identity, x) == x and op(x, identity) == x, bit-exactly: the
+    identity is injected under tile masks, where approximation would leak
+    padding into real elements."""
+    op = alg.STD_OPS[op_name]
+    x, _, _ = _triple(op_name, seed)
+    ident = op.identity(x)
+    for got in (op(ident, x), op(x, ident)):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(x)):
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(w),
+                err_msg=f"{op_name} identity not exact (seed {seed})")
+
+
+@pytest.mark.parametrize("op_name", OP_NAMES)
+@seeded
+def test_commutativity_where_claimed(op_name, seed):
+    op = alg.STD_OPS[op_name]
+    if not op.commutative:
+        pytest.skip("declared non-commutative; witness checked separately")
+    x, y, _ = _triple(op_name, seed)
+    assert_trees_close(op(x, y), op(y, x), rtol=1e-6, atol=1e-6,
+                       err=f"{op_name} claims commutativity (seed {seed})")
+
+
+@pytest.mark.parametrize("op_name",
+                         [n for n in OP_NAMES
+                          if not alg.STD_OPS[n].commutative])
+def test_noncommutative_claim_has_witness(op_name):
+    """A declared-non-commutative op must actually have a counterexample --
+    otherwise the declaration needlessly forces the slow ordered paths."""
+    op = alg.STD_OPS[op_name]
+    for seed in range(8):
+        x, y, _ = _triple(op_name, seed)
+        lhs = jax.tree.leaves(op(x, y))
+        rhs = jax.tree.leaves(op(y, x))
+        if any(not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(lhs, rhs)):
+            return
+    pytest.fail(f"{op_name}: no non-commutativity witness in 8 samples")
+
+
+# ---------------------------------------------------------------------------
+# Segmented (Blelloch) lift laws: what the segmented kernels rely on.
+# ---------------------------------------------------------------------------
+
+_LIFT_BASES = ["add", "max", "affine", "quaternion_mul"]
+
+
+def _lifted_triple(op_name, seed, shape=(4,)):
+    nprng = np.random.default_rng(seed)
+    return tuple(
+        (jnp.asarray(nprng.integers(0, 2, shape), jnp.int32),
+         make_operand(op_name, nprng, shape))
+        for _ in range(3))
+
+
+@pytest.mark.parametrize("op_name", _LIFT_BASES)
+@seeded
+def test_segmented_lift_associativity(op_name, seed):
+    seg = alg.segmented(alg.STD_OPS[op_name])
+    x, y, z = _lifted_triple(op_name, seed)
+    assert_trees_close(seg(seg(x, y), z), seg(x, seg(y, z)),
+                       rtol=1e-5, atol=1e-5,
+                       err=f"segmented[{op_name}] associativity")
+
+
+@pytest.mark.parametrize("op_name", _LIFT_BASES)
+@seeded
+def test_segmented_lift_reset_and_identity(op_name, seed):
+    """Boundary reset: combining into a flagged element discards the left
+    operand's value entirely.  Identity: the lifted identity is (0, ident)."""
+    op = alg.STD_OPS[op_name]
+    seg = alg.segmented(op)
+    x, y, _ = _lifted_triple(op_name, seed)
+    flagged = (jnp.ones_like(y[0]), y[1])
+    f_out, v_out = seg(x, flagged)
+    for g, w in zip(jax.tree.leaves(v_out), jax.tree.leaves(y[1])):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"segmented[{op_name}] reset")
+    np.testing.assert_array_equal(np.asarray(f_out), 1)
+    ident = seg.identity(x)
+    got = seg(ident, x)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(x)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"segmented[{op_name}] identity")
+    assert not seg.commutative, "the lift is positional, never commutative"
+
+
+# ---------------------------------------------------------------------------
+# Oracle bookkeeping: which ops cover which primitives.
+# ---------------------------------------------------------------------------
+
+_PYTREE_NONCOMMUTATIVE = {"affine", "maxplus_affine", "quaternion_mul",
+                          "mat2_mul"}
+
+
+def test_conformance_matrix_coverage():
+    """Every batched primitive is fuzzed against >= 3 distinct operators,
+    at least one a non-commutative pytree op (forcing the order-preserving
+    kernel paths) -- except primitives whose operator is fixed by
+    construction, which must use a non-commutative pytree op outright."""
+    for prim, ops in CONFORMANCE_MATRIX.items():
+        assert len(set(ops)) == len(ops), f"{prim}: duplicate ops"
+        noncomm = set(ops) & _PYTREE_NONCOMMUTATIVE
+        if prim in FIXED_OP_PRIMITIVES:
+            assert noncomm, f"{prim}: fixed op must be non-commutative pytree"
+            continue
+        assert len(ops) >= 3, f"{prim}: needs >= 3 oracle operators"
+        assert noncomm, f"{prim}: needs a non-commutative pytree operator"
+
+
+def test_conformance_matrix_ops_exist():
+    for prim, ops in CONFORMANCE_MATRIX.items():
+        for name in ops:
+            assert name in alg.STD_OPS, f"{prim} references unknown op {name}"

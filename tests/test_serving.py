@@ -89,3 +89,47 @@ def test_tiny_topp_equals_greedy(setup):
     topp = Engine(cfg, None, params, cache_len=64, batch_size=2,
                   temperature=0.9, top_p=1e-6, seed=7).generate(reqs)
     assert greedy == topp
+
+
+@pytest.fixture
+def dispatch_spy(monkeypatch):
+    """Record every primitive name resolved through the Layer-1 registry."""
+    from repro.core import intrinsics as ki
+    calls = []
+    real = ki.resolve_impl
+
+    def spy(primitive, backend=None):
+        calls.append(primitive)
+        return real(primitive, backend)
+
+    monkeypatch.setattr(ki, "resolve_impl", spy)
+    return calls
+
+
+def test_single_and_full_batch_same_batched_path(setup, dispatch_spy):
+    """Batch-size invariance of the decode hot path: a single request and a
+    max-size batch must dispatch the *same set of primitives* -- no
+    shape-specialized fallback (per-row loop, vmap-of-1-D, scalar special
+    case) may appear at either extreme.  The batched family makes the batch
+    a grid dimension, so the dispatched set is size-independent by
+    construction; this pins that property."""
+    cfg, params, _ = setup
+    B = 4
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=B,
+                 temperature=1.0, top_k=5, top_p=0.9, seed=2)
+    eng.generate([Request(prompt=[1, 2], max_new_tokens=3)])
+    single = set(dispatch_spy)
+    dispatch_spy.clear()
+    eng.generate([Request(prompt=[1 + i, 2], max_new_tokens=3)
+                  for i in range(B)])
+    full = set(dispatch_spy)
+
+    # The decode path runs on the batched family...  (flat scan/mapreduce
+    # still legitimately appear *inside* the radix composition backing
+    # segmented_top_k -- single launches over the whole flat candidate
+    # stream, not per-request calls.)
+    assert "batched_scan" in single          # nucleus cutoff over (B, k)
+    assert "batched_mapreduce" in single     # masked per-request seq scores
+    assert "segmented_top_k" in single       # per-request candidate top-k
+    # ...and hits the identical primitive set at both batch extremes.
+    assert single == full

@@ -128,6 +128,25 @@ def test_concurrent_writers_merge_not_clobber(tmp_path):
     assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
 
 
+def test_batched_keys_carry_batch_bucket(tuner):
+    """Batched-family cache keys bucket the batch separately from the
+    per-row extent, and one race covers the whole batch -- not one per row."""
+    x = jnp.ones((4, 4096), jnp.float32)
+    forge.batched_scan(alg.ADD, x, backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 1          # one race for all 4 rows
+    key = [k for k in tuner._cache if k.startswith("batched_scan|")]
+    assert key and "|n=4096|batch=4|" in key[0]
+    # Same rows, different batch bucket: tunes separately (small batches
+    # and large batches want different block policies).
+    forge.batched_scan(alg.ADD, jnp.ones((32, 4096), jnp.float32),
+                       backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 2
+    # Same batch bucket again: pure cache hit.
+    forge.batched_scan(alg.ADD, x * 3, backend="pallas-interpret")
+    assert tuner.stats["benchmarks"] == 2
+    assert tuner.stats["hits"] >= 1
+
+
 def test_sort_ladder_races_digit_width(tuner):
     """The sort family is tuned over digit width x block policy and stays
     correct under every candidate."""

@@ -39,6 +39,7 @@ from benchmarks import hardware as HW
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Batched, Segmented
 from repro.kernels import ref
 
 POLICY = ki.resolve_tuning("tpu_v5e")
@@ -205,10 +206,11 @@ def bench_batched():
     # correctness spot-check (interpret) at small sizes
     key = jax.random.PRNGKey(10)
     x = jax.random.normal(key, (4, 300), jnp.float32)
-    _check(forge.batched_scan(alg.ADD, x, backend="pallas-interpret"),
+    _check(forge.scan(alg.ADD, x, layout=Batched(),
+                      backend="pallas-interpret"),
            ref.ref_batched_scan(alg.ADD, x), 1e-3)
-    _check(forge.batched_mapreduce(lambda v: v, alg.ADD, x,
-                                   backend="pallas-interpret"),
+    _check(forge.mapreduce(lambda v: v, alg.ADD, x, layout=Batched(),
+                           backend="pallas-interpret"),
            ref.ref_batched_mapreduce(lambda v: v, alg.ADD, x), 1e-3)
     for Bn, n, kind in [(64, 16384, "scan"), (256, 4096, "scan"),
                         (64, 16384, "mapreduce"), (64, 4096, "matvec")]:
@@ -283,42 +285,44 @@ def ci_structural_entries() -> dict:
     N = 10**6
     f32, bf16, u8, u32 = jnp.float32, jnp.bfloat16, jnp.uint8, jnp.uint32
     e = {
-        "copy/float32/n=1e6": AN.copy_bytes(N, f32, POLICY.nitem_copy),
-        "scan/float32/n=1e6": AN.scan_bytes(N, [f32], POLICY),
-        "scan/bfloat16/n=1e6": AN.scan_bytes(N, [bf16], POLICY),
-        "mapreduce/float32/n=1e6": AN.mapreduce_bytes(N, [f32], [f32], POLICY),
-        "mapreduce/uint8/n=1e6": AN.mapreduce_bytes(N, [u8], [f32], POLICY),
-        "segmented_scan/float32/n=1e6":
+        "copy@flat/float32/n=1e6": AN.copy_bytes(N, f32, POLICY.nitem_copy),
+        "scan@flat/float32/n=1e6": AN.scan_bytes(N, [f32], POLICY),
+        "scan@flat/bfloat16/n=1e6": AN.scan_bytes(N, [bf16], POLICY),
+        "mapreduce@flat/float32/n=1e6":
+            AN.mapreduce_bytes(N, [f32], [f32], POLICY),
+        "mapreduce@flat/uint8/n=1e6":
+            AN.mapreduce_bytes(N, [u8], [f32], POLICY),
+        "scan@segmented/float32/n=1e6":
             AN.segmented_scan_bytes(N, [f32], POLICY),
-        "matvec/float32/1e3x1e4": AN.matvec_bytes(10**3, 10**4, f32,
-                                                  policy=POLICY),
-        "vecmat/float32/1e4x1e3": AN.vecmat_bytes(10**4, 10**3, f32,
-                                                  policy=POLICY),
-        "sort/uint8/n=1e6": AN.sort_bytes(N, u8, POLICY),
-        "sort/uint32/n=1e6": AN.sort_bytes(N, u32, POLICY),
-        "sort/float32/n=1e6": AN.sort_bytes(N, f32, POLICY),
-        "sort/bfloat16/n=1e6": AN.sort_bytes(N, bf16, POLICY),
-        "sort/uint32/n=1e6/key_bits=8": AN.sort_bytes(N, u32, POLICY,
-                                                      key_bits=8),
-        "sort_pairs/float32+8B/n=1e6": AN.sort_bytes(N, f32, POLICY,
-                                                     payload_itemsize=8),
-        "argsort/float32/n=1e6": AN.sort_bytes(N, f32, POLICY,
-                                               payload_itemsize=4),
-        "top_k/float32/n=1e6/k=64": AN.top_k_bytes(N, 64, f32, POLICY),
-        "segmented_sort/float32/n=1e6/S=64":
+        "matvec@flat/float32/1e3x1e4": AN.matvec_bytes(10**3, 10**4, f32,
+                                                       policy=POLICY),
+        "vecmat@flat/float32/1e4x1e3": AN.vecmat_bytes(10**4, 10**3, f32,
+                                                       policy=POLICY),
+        "sort@flat/uint8/n=1e6": AN.sort_bytes(N, u8, POLICY),
+        "sort@flat/uint32/n=1e6": AN.sort_bytes(N, u32, POLICY),
+        "sort@flat/float32/n=1e6": AN.sort_bytes(N, f32, POLICY),
+        "sort@flat/bfloat16/n=1e6": AN.sort_bytes(N, bf16, POLICY),
+        "sort@flat/uint32/n=1e6/key_bits=8": AN.sort_bytes(N, u32, POLICY,
+                                                           key_bits=8),
+        "sort_pairs@flat/float32+8B/n=1e6": AN.sort_bytes(
+            N, f32, POLICY, payload_itemsize=8),
+        "argsort@flat/float32/n=1e6": AN.sort_bytes(N, f32, POLICY,
+                                                    payload_itemsize=4),
+        "top_k@flat/float32/n=1e6/k=64": AN.top_k_bytes(N, 64, f32, POLICY),
+        "sort@segmented/float32/n=1e6/S=64":
             AN.sort_bytes(N, f32, POLICY, num_segments=64),
-        "segmented_top_k/float32/n=1e6/S=64/k=8":
+        "top_k@segmented/float32/n=1e6/S=64/k=8":
             AN.top_k_bytes(N, 8, f32, POLICY, num_segments=64),
         # Batched family: <= 2*B*n element movement (scan), single launch.
-        "batched_scan/float32/B=64xn=16384":
+        "scan@batched/float32/B=64xn=16384":
             AN.batched_scan_bytes(64, 16384, [f32], POLICY),
-        "batched_scan/bfloat16/B=128xn=32768":
+        "scan@batched/bfloat16/B=128xn=32768":
             AN.batched_scan_bytes(128, 32768, [bf16], POLICY),
-        "batched_mapreduce/float32/B=64xn=16384":
+        "mapreduce@batched/float32/B=64xn=16384":
             AN.batched_mapreduce_bytes(64, 16384, [f32], [f32], POLICY),
-        "batched_matvec/float32/B=64x4096x128":
+        "matvec@batched/float32/B=64x4096x128":
             AN.batched_matvec_bytes(64, 4096, 128, f32, policy=POLICY),
-        "batched_linear_recurrence/float32/B=64xT=4096xC=256":
+        "linear_recurrence@batched/float32/B=64xT=4096xC=256":
             AN.channel_scan_bytes(64, 4096, 256, 2, 2, f32, POLICY),
     }
     return {k: int(v) for k, v in e.items()}
@@ -335,7 +339,8 @@ def ci_correctness():
     _check(forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u, backend=B),
            ref.ref_mapreduce(alg.unitfloat8_decode, alg.ADD, u), 1e-2)
     offs = jnp.asarray([0, 100, 100, 2500, 3000], jnp.int32)
-    _check(forge.segmented_scan(alg.ADD, x[:3000], offsets=offs, backend=B),
+    _check(forge.scan(alg.ADD, x[:3000], layout=Segmented(offsets=offs),
+                      backend=B),
            ref.ref_segmented_scan(alg.ADD, x[:3000],
                                   offsets=np.asarray(offs)), 1e-3)
     ks = jax.random.normal(jax.random.PRNGKey(2), (140,), jnp.float32)
@@ -344,8 +349,9 @@ def ci_correctness():
     ku = jax.random.randint(jax.random.PRNGKey(3), (300,), 0, 256, jnp.int32
                             ).astype(jnp.uint8)
     _check_exact(forge.sort(ku, backend=B), ref.ref_sort(ku))
-    v, i = forge.segmented_top_k(ks, 4, offsets=jnp.asarray([0, 5, 5, 140]),
-                                 backend=B)
+    v, i = forge.top_k(ks, 4,
+                       layout=Segmented(offsets=jnp.asarray([0, 5, 5, 140])),
+                       backend=B)
     rv, ri = ref.ref_segmented_top_k(ks, 4, offsets=[0, 5, 5, 140])
     for a, b in zip(jax.tree.leaves((v, i)), jax.tree.leaves((rv, ri))):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -353,23 +359,41 @@ def ci_correctness():
     # Batched family: the kernels being budgeted must work, including the
     # non-commutative (order-preserving) route and the block-boundary tail.
     xb = jax.random.normal(jax.random.PRNGKey(4), (3, 2049), jnp.float32)
-    _check(forge.batched_scan(alg.ADD, xb, backend=B),
+    _check(forge.scan(alg.ADD, xb, layout=Batched(), backend=B),
            ref.ref_batched_scan(alg.ADD, xb), 1e-3)
-    _check(forge.batched_mapreduce(lambda v_: v_, alg.ADD, xb, backend=B),
+    _check(forge.mapreduce(lambda v_: v_, alg.ADD, xb, layout=Batched(),
+                           backend=B),
            ref.ref_batched_mapreduce(lambda v_: v_, alg.ADD, xb), 1e-3)
     Ab = jax.random.normal(jax.random.PRNGKey(5), (2, 33, 17), jnp.float32)
     vb = jax.random.normal(jax.random.PRNGKey(6), (2, 33), jnp.float32)
-    _check(forge.batched_matvec(lambda xv, av: xv * av, alg.ADD, Ab, vb,
-                                backend=B),
+    _check(forge.matvec(lambda xv, av: xv * av, alg.ADD, Ab, vb,
+                        layout=Batched(), backend=B),
            ref.ref_batched_matvec(lambda xv, av: xv * av, alg.ADD, Ab, vb),
            1e-3)
     ab = jax.random.uniform(jax.random.PRNGKey(7), (2, 37, 130), jnp.float32,
                             0.5, 1.0)
     bb = jax.random.normal(jax.random.PRNGKey(8), (2, 37, 130), jnp.float32)
-    _check(forge.batched_linear_recurrence(ab, bb, backend=B),
+    _check(forge.linear_recurrence(ab, bb, layout=Batched(), backend=B),
            ref.ref_batched_linear_recurrence(ab, bb), 1e-3)
     print(f"ci correctness (interpret, small sizes): OK "
           f"({time.time()-t0:.1f}s)")
+
+
+def canonical_budget_key(key: str) -> str:
+    """Map a pre-layout budget key to its primitive@layout form.
+
+    budgets.json keys are ``primitive@layout/config`` since the layout
+    redesign; the old family-name spellings (``segmented_scan/...``,
+    ``batched_scan/...``, bare ``scan/...``) are accepted for one release
+    and canonicalized here before comparison.
+    """
+    prim, _, rest = key.partition("/")
+    if "@" in prim:
+        return key
+    for prefix, layout in (("segmented_", "segmented"), ("batched_", "batched")):
+        if prim.startswith(prefix):
+            return f"{prim[len(prefix):]}@{layout}/{rest}"
+    return f"{prim}@flat/{rest}"
 
 
 def run_ci(out_path: str, budgets_path: str | None) -> int:
@@ -382,7 +406,19 @@ def run_ci(out_path: str, budgets_path: str | None) -> int:
     if budgets_path is None:
         return 0
     with open(budgets_path) as f:
-        budgets = json.load(f)["entries"]
+        raw_budgets = json.load(f)["entries"]
+    budgets = {}
+    for key, val in raw_budgets.items():
+        canon = canonical_budget_key(key)
+        if canon != key:
+            print(f"  note: legacy budget key {key!r} -> {canon!r} "
+                  "(accepted for one release; rename it in budgets.json)")
+        if canon in budgets:
+            print(f"BUDGET KEY COLLISION: {key!r} and another entry both "
+                  f"canonicalize to {canon!r} -- remove the stale spelling "
+                  f"from {budgets_path}")
+            return 1
+        budgets[canon] = val
     failures = []
     for key, got in sorted(entries.items()):
         budget = budgets.get(key)

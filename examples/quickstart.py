@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Batched, Segmented
 
 B = "pallas-interpret" if jax.default_backend() != "tpu" else None
 key = jax.random.PRNGKey(0)
@@ -59,15 +60,17 @@ logp = forge.semiring_vecmat(alg.LOG_SEMIRING, logA, logp, backend=B)
 print("updated log-probs (logsumexp accumulation), max:",
       float(jnp.max(logp)))
 
-print("\n== 6. segmented primitives: ragged batches without padding ==")
-# Three "requests" of lengths 3, 5, 2 flattened into one stream.
+print("\n== 6. segmented layout: ragged batches without padding ==")
+# Three "requests" of lengths 3, 5, 2 flattened into one stream -- the same
+# scan/mapreduce entry points, with layout passed as a value.
 vals = jnp.arange(10, dtype=jnp.float32)
 offs = jnp.asarray([0, 3, 8, 10], jnp.int32)
 print("per-request running sums:",
-      np.asarray(forge.segmented_scan(alg.ADD, vals, offsets=offs, backend=B)))
+      np.asarray(forge.scan(alg.ADD, vals,
+                            layout=Segmented(offsets=offs), backend=B)))
 print("per-request totals:      ",
-      np.asarray(forge.segmented_mapreduce(
-          lambda v: v, alg.ADD, vals, offsets=offs, backend=B)))
+      np.asarray(forge.mapreduce(lambda v: v, alg.ADD, vals,
+                                 layout=Segmented(offsets=offs), backend=B)))
 
 print("\n== 7. linear recurrence: the model-stack workhorse ==")
 a = jax.random.uniform(key, (2, 128, 256), jnp.float32, 0.9, 0.99)
@@ -76,17 +79,17 @@ h = forge.linear_recurrence(a, b, backend=B)
 print("h_t = a_t*h_{t-1} + b_t over (B=2, T=128, C=256):",
       "final-state norm =", float(jnp.linalg.norm(h[:, -1])))
 
-print("\n== 7b. batched primitives: one launch per uniform batch ==")
+print("\n== 7b. batched layout: one launch per uniform batch ==")
 probs = jax.nn.softmax(
     jax.random.normal(jax.random.fold_in(key, 12), (4, 8), jnp.float32), -1)
-cum = forge.batched_scan(alg.ADD, probs, inclusive=False, backend=B)
+cum = forge.scan(alg.ADD, probs, inclusive=False, layout=Batched(), backend=B)
 print("per-request exclusive nucleus mass (B=4 rows, one launch):",
       np.round(np.asarray(cum[:, -1]), 3).tolist())
 lens = jnp.asarray([8, 3, 5, 1], jnp.int32)
 msk = (jnp.arange(8, dtype=jnp.int32)[None, :] < lens[:, None]).astype(jnp.int32)
-tot = forge.batched_mapreduce(
+tot = forge.mapreduce(
     lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD, (probs, msk),
-    backend=B)
+    layout=Batched(), backend=B)
 print("masked per-request sums (ragged lengths, no host loop):",
       np.round(np.asarray(tot), 3).tolist())
 
@@ -98,7 +101,8 @@ se, st = forge.sort_pairs(expert, tok, key_bits=2, backend=B)
 print("expert-sorted token stream (stable, 1 digit pass):",
       np.asarray(se)[:12], "...")
 logits = jax.random.normal(jax.random.fold_in(key, 11), (10,), jnp.float32)
-v, i = forge.segmented_top_k(logits, 2, offsets=offs, backend=B)
+v, i = forge.top_k(logits, 2, layout=Segmented(offsets=offs), backend=B)
 print("per-request top-2 logits:", np.round(np.asarray(v), 2).tolist(),
       "ids:", np.asarray(i).tolist())
-print("\n(quickstart done -- same API, three backends, zero code changes)")
+print("\n(quickstart done -- one entry point per primitive, layout as a"
+      " value, three backends, zero code changes)")

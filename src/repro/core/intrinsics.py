@@ -29,6 +29,14 @@ module provides them:
   name a backend; implementations register themselves per backend and the
   dispatcher picks ``pallas-tpu`` on TPU, ``xla`` elsewhere (and
   ``pallas-interpret`` under the validation flag).
+* **The primitive registry** (:class:`PrimitiveDef` / :class:`RouteDef` /
+  :func:`dispatch`): the declarative table behind the layout-polymorphic
+  Layer-2 API.  One row per (primitive, layout) names the registered
+  implementation key (``"scan@batched"``), the validation rules (segment
+  descriptor exclusivity, leaf-rank checks, commutativity requirements),
+  the zero-extent behavior, and the tuning-key recipe -- so the guards,
+  reroutes and cache keys are single data-driven implementations instead
+  of per-family copies.
 """
 from __future__ import annotations
 
@@ -39,6 +47,8 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import layout as lay
 
 Pytree = Any
 
@@ -273,6 +283,11 @@ def register_impl(primitive: str, backend: str):
     return deco
 
 
+def registered_backends(key: str) -> list[str]:
+    """Backends with an implementation registered for ``key`` (sorted)."""
+    return sorted(b for (p, b) in _IMPL_REGISTRY if p == key)
+
+
 def force_backend(backend: str | None):
     """Force a backend globally (used by tests to pin pallas-interpret)."""
     global _FORCED_BACKEND
@@ -300,3 +315,344 @@ def resolve_impl(primitive: str, backend: str | None = None) -> Callable:
         if wrapped is not None:
             return wrapped
     return impl
+
+
+# --------------------------------------------------------------------------
+# The declarative primitive registry: one table drives dispatch, validation,
+# zero-extent guards, non-commutative rerouting, tuning keys and the
+# generated docs/conformance enumerations.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecipe:
+    """How to build a tuning cache key + which policy knobs to race.
+
+    ``dims`` selects the generic key extractor in ``core.tuning``:
+
+    * ``"flat"``   -- ``n`` = total element count over the data's leaves;
+    * ``"row"``    -- ``(B, n)`` leaves: per-row extent + batch bucket;
+    * ``"trail2"`` -- ``(B, d1, d2)`` leading leaf: the two trailing dims
+      bucket *separately* (``"8192x128"``) because block selection branches
+      on the aspect ratio, plus the batch bucket.
+    """
+
+    ladder: tuple  # TuningPolicy field-override dicts to race
+    # Argument indices default to the enclosing RouteDef's data_arg/op_arg
+    # (resolved in core.tuning) -- override only when the key should read a
+    # different operand than dispatch validates.
+    data_arg: int | None = None
+    op_arg: int | None = None      # positional index of the AssocOp, or
+    op_label: str | None = None    # a fixed label when the op is implicit
+    dims: str = "flat"
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDef:
+    """One (primitive, layout) row of the registry.
+
+    ``args`` indices refer to the positional call convention of the public
+    entry point (and of the registered implementations, which share it).
+    """
+
+    primitive: str
+    layout: str
+    data_arg: int = 0
+    op_arg: int | None = None
+    # ((arg index, required leaf rank), ...) -- checked on every leaf.
+    arg_ranks: tuple = ()
+    # ((kwarg name, required value), ...) -- kwargs the layout pins; they are
+    # validated then stripped before the implementation call.
+    fixed_kwargs: tuple = ()
+    commutative_only: bool = False
+    # Registered key to reroute non-commutative ops through (mapreduce ->
+    # order-preserving scan of the mapped values, take-last).
+    noncomm_route: str | None = None
+    # Name of a shared zero-extent guard in _ZERO_GUARDS (None: the
+    # implementation/composition handles zero extents itself).
+    zero_extent: str | None = None
+    needs_descriptor: bool = False    # Segmented: exactly one of flags/offsets
+    needs_num_segments: bool = False  # Segmented flag variant: static extent
+    tuning: TuneRecipe | None = None
+    notes: str = ""                   # surfaced in the generated docs table
+
+    @property
+    def key(self) -> str:
+        return f"{self.primitive}@{self.layout}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimitiveDef:
+    """A public primitive and its layout routes."""
+
+    name: str
+    routes: dict  # layout kind -> RouteDef
+    doc: str = ""
+
+
+PRIMITIVE_DEFS: dict[str, PrimitiveDef] = {}
+
+
+def define_primitive(name: str, *routes: RouteDef, doc: str = ""):
+    PRIMITIVE_DEFS[name] = PrimitiveDef(
+        name=name, routes={r.layout: r for r in routes}, doc=doc)
+
+
+def iter_routes():
+    """Every RouteDef in the registry, in definition order."""
+    for pdef in PRIMITIVE_DEFS.values():
+        yield from pdef.routes.values()
+
+
+def route_keys() -> set[str]:
+    return {r.key for r in iter_routes()}
+
+
+def get_route(primitive: str, kind: str) -> RouteDef:
+    pdef = PRIMITIVE_DEFS.get(primitive)
+    if pdef is None:
+        raise NotImplementedError(f"unknown primitive {primitive!r}")
+    route = pdef.routes.get(kind)
+    if route is None:
+        raise ValueError(
+            f"{primitive}: unsupported layout {kind!r} "
+            f"(supported: {sorted(pdef.routes)})")
+    return route
+
+
+# -- shared zero-extent guards (single implementations, wired by name) ------
+
+
+def _zg_passthrough(route, args, kwargs):
+    """Any zero extent in the data: the input already is the output."""
+    data = args[route.data_arg]
+    lead = jax.tree.leaves(data)[0]
+    if any(d == 0 for d in lead.shape):
+        return True, data
+    return False, None
+
+
+def _zg_batched_reduce_identity(route, args, kwargs):
+    """(B, 0) rows / B == 0: reducing zero elements yields identity rows."""
+    f, op, xs = args[0], args[1], args[2]
+    B, n = jax.tree.leaves(xs)[0].shape
+    if B and n:
+        return False, None
+    one = jax.eval_shape(
+        f, jax.tree.map(lambda l: jax.ShapeDtypeStruct((1, 1), l.dtype), xs))
+    return True, op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((B,), l.dtype), one))
+
+
+def _zg_segmented_reduce_identity(route, args, kwargs):
+    """Zero-length stream: every declared segment reduces to identity."""
+    f, op, xs = args[0], args[1], args[2]
+    if jax.tree.leaves(xs)[0].shape[0] != 0:
+        return False, None
+    offsets = kwargs.get("offsets")
+    ns = (kwargs.get("num_segments") if offsets is None
+          else offsets.shape[0] - 1)
+    vals = jax.eval_shape(f, xs)
+    return True, op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((ns,) + l.shape[1:], l.dtype), vals))
+
+
+def _zg_batched_mv_identity(route, args, kwargs):
+    """(B, n, p) with any zero extent: identity rows of the output extent."""
+    f, op, A, x = args[0], args[1], args[2], args[3]
+    B, n, p = A.shape
+    if B and n and p:
+        return False, None
+    if route.primitive == "matvec":       # y[b, j]: extent p, f(x, a)
+        out_extent, arg_dtypes = p, (x.dtype, A.dtype)
+    else:                                 # z[b, i]: extent n, f(a, x)
+        out_extent, arg_dtypes = n, (A.dtype, x.dtype)
+    one = jax.eval_shape(
+        f, jax.ShapeDtypeStruct((1, 1), arg_dtypes[0]),
+        jax.ShapeDtypeStruct((1, 1), arg_dtypes[1]))
+    return True, op.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((B, out_extent), l.dtype), one))
+
+
+_ZERO_GUARDS = {
+    "passthrough": _zg_passthrough,
+    "batched_reduce_identity": _zg_batched_reduce_identity,
+    "segmented_reduce_identity": _zg_segmented_reduce_identity,
+    "batched_mv_identity": _zg_batched_mv_identity,
+}
+
+
+# -- the dispatch pipeline --------------------------------------------------
+
+
+def _validate(route: RouteDef, layout, args, kwargs):
+    where = route.key
+    for name, required in route.fixed_kwargs:
+        if name in kwargs:
+            got = kwargs.pop(name)
+            if got is not required and got != required:
+                raise ValueError(
+                    f"{where}: {name}= is pinned by the "
+                    f"{layout.describe()} layout -- leave it at its "
+                    f"default ({required!r}); got {got!r}"
+                    + (f". {route.notes}" if route.notes else ""))
+    if route.needs_descriptor:
+        lay.validate_descriptor(layout.flags, layout.offsets, where=where)
+        if (route.needs_num_segments and layout.offsets is None
+                and layout.num_segments is None):
+            raise ValueError(
+                f"{where}: the flags descriptor needs Segmented("
+                f"num_segments=...) -- the output extent is static")
+    for idx, rank in route.arg_ranks:
+        for leaf in jax.tree.leaves(args[idx]):
+            if leaf.ndim != rank:
+                raise ValueError(
+                    f"{where}: argument {idx} expects rank-{rank} leaves "
+                    f"for the {layout.describe()} layout, got shape "
+                    f"{tuple(leaf.shape)}")
+    if route.op_arg is not None and route.commutative_only:
+        op = args[route.op_arg]
+        if not getattr(op, "commutative", False):
+            raise ValueError(
+                f"{where}: requires a commutative operator, got "
+                f"{getattr(op, 'name', op)!r} (non-commutative ops take "
+                f"the order-preserving scan routes)")
+
+
+def dispatch(primitive: str, layout, backend: str | None,
+             args: tuple, kwargs: dict):
+    """Resolve and call one (primitive, layout, backend) route.
+
+    The pipeline -- validation, layout-descriptor injection, zero-extent
+    guard, non-commutative reroute, tuner-wrapped implementation -- is
+    driven entirely by the RouteDef row, so it is written once for every
+    primitive family.
+    """
+    layout = lay.as_layout(layout)
+    route = get_route(primitive, layout.kind)
+    kwargs = dict(kwargs)
+    _validate(route, layout, args, kwargs)
+    if route.needs_descriptor:
+        kwargs["flags"] = layout.flags
+        kwargs["offsets"] = layout.offsets
+        if route.needs_num_segments:
+            kwargs["num_segments"] = layout.num_segments
+    if route.zero_extent is not None:
+        handled, result = _ZERO_GUARDS[route.zero_extent](route, args, kwargs)
+        if handled:
+            return result
+    if route.noncomm_route is not None and not getattr(
+            args[route.op_arg], "commutative", False):
+        # Order-preserving reroute: scan the mapped values with the same
+        # layout, take each problem's last element.  (Registered scans are
+        # order-preserving, so the batched family relaxes mapreduce's
+        # commutativity contract for free.)
+        f, op, xs = args[0], args[1], args[2]
+        incl = resolve_impl(route.noncomm_route, backend)(
+            op, f(xs), inclusive=True)
+        return jax.tree.map(lambda l: l[:, -1], incl)
+    return resolve_impl(route.key, backend)(*args, **kwargs)
+
+
+# -- the table itself -------------------------------------------------------
+
+_NITEM_SCAN = tuple({"nitem_scan": v} for v in (4, 8, 16, 32))
+_NITEM_REDUCE = tuple({"nitem_reduce": v} for v in (4, 8, 16))
+_NITEM_COPY = tuple({"nitem_copy": v} for v in (4, 8, 16))
+# Radix sort races digit width x block policy: wider digits mean fewer
+# scatter passes but a larger per-pass rank scan, and the rank scan's own
+# block size (nitem_scan) interacts with the digit count.
+_SORT_LADDER = tuple({"sort_digit_bits": d, "nitem_scan": m}
+                     for d in (2, 4, 8) for m in (8, 16))
+_MATVEC_ROWS = tuple({"matvec_rows": v} for v in (4, 8, 16))
+_VECMAT_ROWS = tuple({"vecmat_rows": v} for v in (4, 8, 16))
+
+_SORT_TUNE = TuneRecipe(_SORT_LADDER, op_label="keys")
+
+define_primitive(
+    "copy",
+    RouteDef("copy", "flat", zero_extent="passthrough",
+             tuning=TuneRecipe(_NITEM_COPY, op_label="copy")),
+    doc="bandwidth-ceiling tiled copy")
+
+define_primitive(
+    "scan",
+    RouteDef("scan", "flat", data_arg=1, op_arg=0, zero_extent="passthrough",
+             tuning=TuneRecipe(_NITEM_SCAN)),
+    RouteDef("scan", "batched", data_arg=1, op_arg=0, arg_ranks=((1, 2),),
+             fixed_kwargs=(("axis", 0),), zero_extent="passthrough",
+             tuning=TuneRecipe(_NITEM_SCAN, dims="row"),
+             notes="per-row scan along axis 1 of (B, n) leaves"),
+    RouteDef("scan", "segmented", data_arg=1, op_arg=0, arg_ranks=((1, 1),),
+             fixed_kwargs=(("axis", 0), ("reverse", False)),
+             needs_descriptor=True, zero_extent="passthrough",
+             tuning=TuneRecipe(_NITEM_SCAN),
+             notes="restarts at every segment boundary"),
+    doc="prefix scan with any associative operator")
+
+define_primitive(
+    "mapreduce",
+    RouteDef("mapreduce", "flat", data_arg=2, op_arg=1,
+             commutative_only=True,
+             tuning=TuneRecipe(_NITEM_REDUCE)),
+    RouteDef("mapreduce", "batched", data_arg=2, op_arg=1,
+             arg_ranks=((2, 2),), fixed_kwargs=(("axis", None),),
+             noncomm_route="scan@batched",
+             zero_extent="batched_reduce_identity",
+             # Non-commutative ops never reach this tuner: dispatch reroutes
+             # them to scan@batched, whose own ladder races nitem_scan.
+             tuning=TuneRecipe(_NITEM_REDUCE, dims="row"),
+             notes="non-commutative ops reroute via scan@batched"),
+    RouteDef("mapreduce", "segmented", data_arg=2, op_arg=1,
+             arg_ranks=((2, 1),), fixed_kwargs=(("axis", None),),
+             needs_descriptor=True, needs_num_segments=True,
+             zero_extent="segmented_reduce_identity",
+             tuning=TuneRecipe(_NITEM_SCAN),
+             notes="one output element per segment; empties yield identity; "
+                   "order-preserving (segmented scan + gather), so "
+                   "non-commutative ops are valid"),
+    doc="op-reduction of f(x)")
+
+define_primitive(
+    "matvec",
+    RouteDef("matvec", "flat", data_arg=2, op_arg=1,
+             arg_ranks=((2, 2), (3, 1))),
+    RouteDef("matvec", "batched", data_arg=2, op_arg=1,
+             arg_ranks=((2, 3), (3, 2)), zero_extent="batched_mv_identity",
+             tuning=TuneRecipe(_MATVEC_ROWS, dims="trail2")),
+    doc="y[j] = op_i f(x[i], A[i, j]) (generalized semiring matvec)")
+
+define_primitive(
+    "vecmat",
+    RouteDef("vecmat", "flat", data_arg=2, op_arg=1,
+             arg_ranks=((2, 2), (3, 1))),
+    RouteDef("vecmat", "batched", data_arg=2, op_arg=1,
+             arg_ranks=((2, 3), (3, 2)), zero_extent="batched_mv_identity",
+             tuning=TuneRecipe(_VECMAT_ROWS, dims="trail2")),
+    doc="z[i] = op_j f(A[i, j], x[j]) (generalized semiring vecmat)")
+
+define_primitive(
+    "linear_recurrence",
+    RouteDef("linear_recurrence", "flat", arg_ranks=((0, 3), (1, 3))),
+    RouteDef("linear_recurrence", "batched", arg_ranks=((0, 3), (1, 3)),
+             tuning=TuneRecipe(_NITEM_SCAN, op_label="affine",
+                               dims="trail2"),
+             notes="the decode hot path; tuner keys carry a batch bucket"),
+    doc="h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C)")
+
+for _sort_prim, _sort_notes in (
+        ("sort", "stable LSD radix; zero extents short-circuit in the "
+                 "shared composition (kernels/sort.py)"),
+        ("sort_pairs", "payload pytree rides the same permutation"),
+        ("argsort", "segmented variant returns within-segment offsets"),
+        ("top_k", "extreme-first; segmented fills short segments with "
+                  "identity and index -1")):
+    define_primitive(
+        _sort_prim,
+        RouteDef(_sort_prim, "flat", arg_ranks=((0, 1),),
+                 tuning=_SORT_TUNE),
+        RouteDef(_sort_prim, "segmented", arg_ranks=((0, 1),),
+                 needs_descriptor=True,
+                 needs_num_segments=(_sort_prim == "top_k"),
+                 tuning=_SORT_TUNE, notes=_sort_notes),
+        doc=f"radix-sort family: {_sort_prim}")

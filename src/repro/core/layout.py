@@ -1,0 +1,118 @@
+"""Layout descriptors: *where the independent problems live* in the data.
+
+The paper's thesis is that one algorithm expressed over backend-agnostic
+abstractions serves arbitrary types and operators.  The same argument applies
+one level up: one *entry point* per primitive serves arbitrary data layouts,
+provided layout is a **value** the caller passes, not a function name.  The
+three layouts of the current matrix:
+
+* :class:`Flat` -- one problem over the whole (leading axis of the) data.
+  The default; ``forge.scan(op, xs)`` reads exactly as the paper's API.
+* :class:`Batched` -- a uniform grid of ``B`` independent problems riding a
+  parallel kernel grid dimension: ``(B, n)`` rows for scan/mapreduce,
+  ``(B, n, p)`` instances for matvec/vecmat, ``(B, T, C)`` for the linear
+  recurrence.  One launch, one tuning decision, per whole batch.
+* :class:`Segmented` -- a ragged concatenation of problems in one flat
+  stream, boundaries carried as data: either a ``flags`` array (nonzero
+  marks a segment start) or CSR ``offsets`` (``(num_segments + 1,)``
+  monotone starts).  Exactly one descriptor must be given; reductions over
+  the flag variant additionally need a static ``num_segments`` (JAX shapes
+  are static).
+
+Every public primitive in ``core.primitives`` takes ``layout=`` and
+dispatches through the declarative ``PrimitiveDef`` registry in
+``core.intrinsics``; which (primitive, layout) pairs exist, their validation
+rules, zero-extent behavior and tuning recipes all live in that one table.
+Adding a future layout (multi-dim, sharded, async) means adding a descriptor
+here and table rows there -- not a new family of public names.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Base class for layout descriptors.  ``kind`` keys the registry."""
+
+    kind = "abstract"
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+@dataclasses.dataclass(frozen=True)
+class Flat(Layout):
+    """One problem over the whole data (the paper's default layout)."""
+
+    kind = "flat"
+
+
+@dataclasses.dataclass(frozen=True)
+class Batched(Layout):
+    """B independent problems of identical extent, batch on grid axis 0."""
+
+    kind = "batched"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Segmented(Layout):
+    """Contiguous ragged segments of one flat stream.
+
+    Exactly one of ``flags`` (``(n,)`` int/bool, nonzero starts a segment;
+    element 0 always implicitly starts one) or ``offsets``
+    (``(num_segments + 1,)`` CSR monotone starts, ``offsets[0] == 0``,
+    ``offsets[-1] == n``) must be given.  ``num_segments`` is required by
+    per-segment *reductions* (mapreduce, top_k) under the flag variant,
+    where the output extent cannot be read off the descriptor.
+    """
+
+    kind = "segmented"
+    flags: jax.Array | None = None
+    offsets: jax.Array | None = None
+    num_segments: int | None = None
+
+    # eq=False suppresses the generated (field-wise) __eq__, which would
+    # elementwise-compare jax arrays; descriptors compare by *identity* of
+    # the flag/offset arrays instead, so two Segmented values are equal only
+    # when they describe the same segmentation objects -- never a silent
+    # always-True between distinct descriptors.
+    def __eq__(self, other):
+        if not isinstance(other, Segmented):
+            return NotImplemented
+        return (self.flags is other.flags and self.offsets is other.offsets
+                and self.num_segments == other.num_segments)
+
+    def __hash__(self):
+        return hash((id(self.flags), id(self.offsets), self.num_segments))
+
+    def describe(self) -> str:
+        d = "flags" if self.flags is not None else (
+            "offsets" if self.offsets is not None else "<no descriptor>")
+        ns = f", num_segments={self.num_segments}" \
+            if self.num_segments is not None else ""
+        return f"Segmented({d}=...{ns})"
+
+
+FLAT = Flat()
+
+
+def as_layout(layout: Layout | None) -> Layout:
+    """Normalize the public ``layout=`` argument (None means Flat)."""
+    if layout is None:
+        return FLAT
+    if not isinstance(layout, Layout):
+        raise TypeError(
+            f"layout= must be a Layout descriptor (Flat/Batched/Segmented), "
+            f"got {layout!r}")
+    return layout
+
+
+def validate_descriptor(flags, offsets, *, where: str) -> None:
+    """The one segment-descriptor exclusivity check (used by dispatch)."""
+    if (flags is None) == (offsets is None):
+        raise ValueError(
+            f"{where}: pass exactly one of flags= or offsets= in "
+            f"Segmented(...)")

@@ -1,31 +1,49 @@
 """Layer 2 -- the public primitives API (the KernelForge.jl analogue).
 
-``scan``, ``mapreduce``, ``semiring_matvec``/``semiring_vecmat`` and ``copy``
-for arbitrary associative operators and arbitrary (pytree) element types.
-All algorithms are expressed exclusively through the Layer-1 intrinsics and
-the backend registry: no function here names a backend, and adding a backend
-means registering implementations, not touching this file.
+One entry point per primitive, polymorphic over data **layout**: ``scan``,
+``mapreduce``, ``matvec``/``vecmat`` (+ semiring bundles), the sort family
+(``sort``, ``sort_pairs``, ``argsort``, ``top_k``), ``linear_recurrence``
+and ``copy``, each taking ``layout=`` -- :class:`~repro.core.layout.Flat`
+(default), :class:`~repro.core.layout.Batched` (uniform batch on a parallel
+grid dimension) or :class:`~repro.core.layout.Segmented` (ragged contiguous
+segments of one flat stream).  Layout is a *value*, not a function name, so
+new layouts compose with every primitive instead of multiplying the API.
+
+All algorithms are expressed exclusively through the Layer-1 registry
+(``core.intrinsics``): which (primitive, layout) routes exist, their
+validation rules, zero-extent behavior and tuning recipes live in the
+declarative ``PrimitiveDef`` table there; the per-backend implementations
+register themselves from ``kernels/ops.py``.  No function here names a
+backend, and adding a backend -- or a layout -- means adding table rows and
+registrations, not touching call sites.
 
 Usage:
 
     from repro.core import primitives as forge
     from repro.core import operators as alg
+    from repro.core.layout import Batched, Segmented
 
     y = forge.scan(alg.ADD, x)                       # prefix sum
     q = forge.scan(alg.QUATERNION_MUL, (w, i, j, k)) # non-commutative pytree
-    s = forge.mapreduce(lambda v: v.astype(jnp.float32), alg.ADD, u8)
+    c = forge.scan(alg.ADD, probs, layout=Batched()) # (B, n): one launch
+    s = forge.scan(alg.ADD, vals, layout=Segmented(offsets=offs))
     d = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, A, x)  # shortest paths
+
+The pre-layout names (``segmented_scan``, ``batched_mapreduce``, ...) remain
+as deprecation shims that forward to the polymorphic surface; each warns
+once per process.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import tuning as _tuning
+from repro.core.layout import FLAT, Batched, Flat, Layout, Segmented  # noqa: F401  (re-exported)
 from repro.kernels import ops as _ops  # noqa: F401  (registers backends)
 
 _tuning.maybe_enable_from_env()  # REPRO_AUTOTUNE=1 turns on autotuned dispatch
@@ -33,267 +51,313 @@ _tuning.maybe_enable_from_env()  # REPRO_AUTOTUNE=1 turns on autotuned dispatch
 Pytree = Any
 
 
+# ---------------------------------------------------------------------------
+# The layout-polymorphic surface: one entry point per primitive.
+# ---------------------------------------------------------------------------
+
+
 def copy(x: jax.Array, *, nitem: int | None = None,
+         layout: Layout | None = None,
          backend: str | None = None) -> jax.Array:
     """Bandwidth-ceiling tiled copy (paper Fig. 1)."""
-    return ki.resolve_impl("copy", backend)(x, nitem=nitem)
+    return ki.dispatch("copy", layout, backend, (x,), {"nitem": nitem})
 
 
 def scan(op: alg.AssocOp, xs: Pytree, *, axis: int = 0,
          inclusive: bool = True, reverse: bool = False,
+         layout: Layout | None = None,
          backend: str | None = None) -> Pytree:
-    """Single-pass prefix scan with any associative ``op`` (paper §V-B).
+    """Prefix scan with any associative ``op`` (paper §V-B).
 
     ``op`` need not be commutative (quaternions, affine maps, 2x2 matrices);
     element types are arbitrary pytrees of arrays with matching shapes.
+
+    * ``Flat()`` (default): one scan along ``axis`` of the leaves.
+    * ``Batched()``: per-row scan along axis 1 of ``(B, n)`` leaves -- the
+      batch rides a parallel grid dimension, one launch for all rows.
+    * ``Segmented(flags=... | offsets=...)``: per-segment scan over the flat
+      ``(n,)`` stream; the scan restarts at every boundary.
     """
-    return ki.resolve_impl("scan", backend)(
-        op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
+    return ki.dispatch("scan", layout, backend, (op, xs),
+                       {"axis": axis, "inclusive": inclusive,
+                        "reverse": reverse})
 
 
 def mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *, axis=None,
+              layout: Layout | None = None,
               backend: str | None = None) -> Pytree:
-    """``op``-reduction of ``f(x)`` (paper §V-A). ``op`` must be commutative."""
-    return ki.resolve_impl("mapreduce", backend)(f, op, xs, axis=axis)
+    """``op``-reduction of ``f(x)`` (paper §V-A).
+
+    * ``Flat()``: reduce everything (or one axis of a 2-D array).  ``op``
+      must be commutative.
+    * ``Batched()``: per-row reduction of ``(B, n)`` leaves -> ``(B,)``;
+      non-commutative ops reroute through the order-preserving batched
+      scan.  Length-0 rows yield ``op``'s identity.
+    * ``Segmented(...)``: one output element per segment; the flag variant
+      needs ``Segmented(num_segments=...)``; empty segments yield identity.
+      Order-preserving (segmented scan + gather), so ``op`` need not be
+      commutative.
+    """
+    return ki.dispatch("mapreduce", layout, backend, (f, op, xs),
+                       {"axis": axis})
+
+
+def matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
+           layout: Layout | None = None,
+           backend: str | None = None) -> Pytree:
+    """y[j] = op_i f(x[i], A[i, j]) over ``(n, p)`` / ``(n,)`` -- or, under
+    ``Batched()``, ``y[b, j]`` over ``(B, n, p)`` / ``(B, n)`` in one
+    launch (``n == 0`` yields identity rows)."""
+    return ki.dispatch("matvec", layout, backend, (f, op, A, x), {})
+
+
+def vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
+           layout: Layout | None = None,
+           backend: str | None = None) -> Pytree:
+    """z[i] = op_j f(A[i, j], x[j]) -- the row-wise mirror of
+    :func:`matvec`, with the same ``Batched()`` form over ``(B, n, p)`` /
+    ``(B, p)``."""
+    return ki.dispatch("vecmat", layout, backend, (f, op, A, x), {})
+
+
+def semiring_matvec(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
+                    layout: Layout | None = None,
+                    backend: str | None = None) -> Pytree:
+    """Semiring-bundled :func:`matvec` (paper §V-C)."""
+    return matvec(semiring.f, semiring.op, A, x, layout=layout,
+                  backend=backend)
+
+
+def semiring_vecmat(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
+                    layout: Layout | None = None,
+                    backend: str | None = None) -> Pytree:
+    """Semiring-bundled :func:`vecmat` (paper §V-C)."""
+    return vecmat(semiring.f, semiring.op, A, x, layout=layout,
+                  backend=backend)
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array,
+                      h0: jax.Array | None = None, *, reverse: bool = False,
+                      layout: Layout | None = None,
+                      backend: str | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C) inputs.
+
+    The model-facing specialization of ``scan`` with the AFFINE operator --
+    the compute core of RG-LRU (recurrentgemma) and mLSTM inter-chunk state
+    propagation (xlstm).  The ``(B, T, C)`` layout is batch-native already,
+    so ``Flat()`` and ``Batched()`` share implementations; decode-hot-path
+    consumers pass ``Batched()``, which is the route the autotuner keys
+    with a batch bucket.  ``h0`` is an optional per-row ``(B, C)`` initial
+    state.
+    """
+    return ki.dispatch("linear_recurrence", layout, backend, (a, b),
+                       {"h0": h0, "reverse": reverse})
+
+
+def sort(keys: jax.Array, *, descending: bool = False,
+         key_bits: int | None = None, layout: Layout | None = None,
+         backend: str | None = None) -> jax.Array:
+    """Stable LSD radix sort (CUB's flagship derived primitive, composed
+    from mapreduce + exclusive scan + scatter -- see kernels/sort.py).
+
+    Keys may be u8/u16/u32, i8/i16/i32, f32/bf16/f16.  The total order is
+    numeric with ``-0.0 == +0.0`` and all NaNs equal, sorting after ``+inf``
+    (ascending); float outputs are canonicalized accordingly.  ``key_bits``
+    (unsigned keys only) caps the significant bits so small-range keys --
+    e.g. expert ids -- pay proportionally fewer passes.  Under
+    ``Segmented(...)`` every contiguous segment sorts independently, in
+    place in the flat layout.
+    """
+    return ki.dispatch("sort", layout, backend, (keys,),
+                       {"descending": descending, "key_bits": key_bits})
+
+
+def sort_pairs(keys: jax.Array, values: Pytree, *, descending: bool = False,
+               key_bits: int | None = None, layout: Layout | None = None,
+               backend: str | None = None) -> tuple[jax.Array, Pytree]:
+    """Stable key sort carrying an arbitrary pytree payload (leaves of
+    leading extent ``n``) through the same permutation."""
+    return ki.dispatch("sort_pairs", layout, backend, (keys, values),
+                       {"descending": descending, "key_bits": key_bits})
+
+
+def argsort(keys: jax.Array, *, descending: bool = False,
+            key_bits: int | None = None, layout: Layout | None = None,
+            backend: str | None = None) -> jax.Array:
+    """The stable sorting permutation (int32) of ``keys``.  Under
+    ``Segmented(...)``, position ``i`` holds the *offset inside its
+    segment* of the element sorted into slot ``i``."""
+    return ki.dispatch("argsort", layout, backend, (keys,),
+                       {"descending": descending, "key_bits": key_bits})
+
+
+def top_k(keys: jax.Array, k: int, *, largest: bool = True,
+          key_bits: int | None = None, layout: Layout | None = None,
+          backend: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """(values, indices) of the ``k`` extreme elements, extreme-first and
+    tie-stable.  NaNs rank above ``+inf``, so with ``largest=True`` they
+    surface first (the pinned NaN order of :func:`sort`).  Under
+    ``Segmented(...)`` the result is per-segment ``(S, k)`` values and
+    within-segment indices; slots past a segment's length are filled with
+    the reduction identity and index ``-1`` (the flag variant needs
+    ``Segmented(num_segments=...)``)."""
+    return ki.dispatch("top_k", layout, backend, (keys, k),
+                       {"largest": largest, "key_bits": key_bits})
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: the pre-layout names.  Each forwards verbatim to the
+# polymorphic surface and warns once per process.
+# ---------------------------------------------------------------------------
+
+_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str, replacement: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"forge.{name} is deprecated; use {replacement}",
+        DeprecationWarning, stacklevel=3)
 
 
 def batched_scan(op: alg.AssocOp, xs: Pytree, *, inclusive: bool = True,
                  reverse: bool = False, backend: str | None = None) -> Pytree:
-    """Per-row prefix scan over ``(B, n)`` pytree leaves in a single launch.
-
-    Each of the ``B`` rows is scanned independently along axis 1 -- the
-    batch rides a parallel grid dimension instead of paying one kernel
-    launch (and one tuning lookup) per row.  ``op`` may be non-commutative
-    and elements arbitrary pytrees, exactly as for :func:`scan`.  ``B == 0``
-    and ``n == 0`` are valid and return the input unchanged.
-    """
-    return ki.resolve_impl("batched_scan", backend)(
-        op, xs, inclusive=inclusive, reverse=reverse)
+    """Deprecated: use ``scan(op, xs, layout=Batched())``."""
+    _warn_deprecated("batched_scan", "scan(op, xs, layout=Batched())")
+    return scan(op, xs, inclusive=inclusive, reverse=reverse,
+                layout=Batched(), backend=backend)
 
 
 def batched_mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *,
                       backend: str | None = None) -> Pytree:
-    """Per-row ``op``-reduction of ``f(x)`` over ``(B, n)`` leaves -> ``(B,)``.
-
-    One launch for the whole batch.  Unlike the flat :func:`mapreduce`,
-    ``op`` need not be commutative: non-commutative operators take the
-    order-preserving batched-scan route internally.  Rows of length 0 (and
-    ``B == 0`` batches) yield ``op``'s identity per row.
-    """
-    return ki.resolve_impl("batched_mapreduce", backend)(f, op, xs)
+    """Deprecated: use ``mapreduce(f, op, xs, layout=Batched())``."""
+    _warn_deprecated("batched_mapreduce",
+                     "mapreduce(f, op, xs, layout=Batched())")
+    return mapreduce(f, op, xs, layout=Batched(), backend=backend)
 
 
 def batched_matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array,
                    *, backend: str | None = None) -> Pytree:
-    """y[b, j] = op_i f(x[b, i], A[b, i, j]) over ``(B, n, p)`` / ``(B, n)``.
-
-    The generalized matvec of :func:`matvec`, one instance per batch row,
-    single launch.  ``n == 0`` yields identity rows.
-    """
-    return ki.resolve_impl("batched_matvec", backend)(f, op, A, x)
+    """Deprecated: use ``matvec(f, op, A, x, layout=Batched())``."""
+    _warn_deprecated("batched_matvec",
+                     "matvec(f, op, A, x, layout=Batched())")
+    return matvec(f, op, A, x, layout=Batched(), backend=backend)
 
 
 def batched_vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array,
                    *, backend: str | None = None) -> Pytree:
-    """z[b, i] = op_j f(A[b, i, j], x[b, j]) over ``(B, n, p)`` / ``(B, p)``."""
-    return ki.resolve_impl("batched_vecmat", backend)(f, op, A, x)
+    """Deprecated: use ``vecmat(f, op, A, x, layout=Batched())``."""
+    _warn_deprecated("batched_vecmat",
+                     "vecmat(f, op, A, x, layout=Batched())")
+    return vecmat(f, op, A, x, layout=Batched(), backend=backend)
 
 
 def batched_semiring_matvec(semiring: alg.Semiring, A: jax.Array,
                             x: jax.Array, *,
                             backend: str | None = None) -> Pytree:
-    """Semiring-bundled form of :func:`batched_matvec`."""
-    return ki.resolve_impl("batched_matvec", backend)(
-        semiring.f, semiring.op, A, x)
+    """Deprecated: use ``semiring_matvec(..., layout=Batched())``."""
+    _warn_deprecated("batched_semiring_matvec",
+                     "semiring_matvec(semiring, A, x, layout=Batched())")
+    return semiring_matvec(semiring, A, x, layout=Batched(), backend=backend)
 
 
 def batched_semiring_vecmat(semiring: alg.Semiring, A: jax.Array,
                             x: jax.Array, *,
                             backend: str | None = None) -> Pytree:
-    """Semiring-bundled form of :func:`batched_vecmat`."""
-    return ki.resolve_impl("batched_vecmat", backend)(
-        semiring.f, semiring.op, A, x)
+    """Deprecated: use ``semiring_vecmat(..., layout=Batched())``."""
+    _warn_deprecated("batched_semiring_vecmat",
+                     "semiring_vecmat(semiring, A, x, layout=Batched())")
+    return semiring_vecmat(semiring, A, x, layout=Batched(), backend=backend)
 
 
 def batched_linear_recurrence(a: jax.Array, b: jax.Array,
                               h0: jax.Array | None = None, *,
                               reverse: bool = False,
                               backend: str | None = None) -> jax.Array:
-    """h[b]_t = a[b]_t * h[b]_{t-1} + b[b]_t along axis 1 of (B, T, C).
-
-    The explicitly batch-native registration of :func:`linear_recurrence`:
-    the whole ``(B, T, C)`` recurrence is one kernel launch with batch and
-    channel blocks on parallel grid dimensions (channels ride the 128 lanes,
-    so no cross-lane combine is ever emitted).  ``h0`` is an optional
-    per-row ``(B, C)`` initial state.  This is the entry point the serving
-    and recurrent-model decode paths call, and the one the autotuner keys
-    with a batch bucket.
-    """
-    return ki.resolve_impl("batched_linear_recurrence", backend)(
-        a, b, h0=h0, reverse=reverse)
+    """Deprecated: use ``linear_recurrence(a, b, h0, layout=Batched())``."""
+    _warn_deprecated("batched_linear_recurrence",
+                     "linear_recurrence(a, b, h0, layout=Batched())")
+    return linear_recurrence(a, b, h0, reverse=reverse, layout=Batched(),
+                             backend=backend)
 
 
-def segmented_scan(op: alg.AssocOp, xs: Pytree, *, flags: jax.Array = None,
-                   offsets: jax.Array = None, inclusive: bool = True,
+def segmented_scan(op: alg.AssocOp, xs: Pytree, *,
+                   flags: jax.Array | None = None,
+                   offsets: jax.Array | None = None, inclusive: bool = True,
                    backend: str | None = None) -> Pytree:
-    """Per-segment prefix scan over flat ragged data (MoE groups, ragged
-    decode batches).
-
-    Segments are contiguous runs of the flat ``(n,)`` leaves, described by
-    exactly one of:
-
-    * ``flags`` -- ``(n,)`` int/bool array, nonzero marks a segment start
-      (element 0 always implicitly starts a segment);
-    * ``offsets`` -- ``(num_segments + 1,)`` CSR-style monotone starts with
-      ``offsets[0] == 0`` and ``offsets[-1] == n``.
-
-    ``op`` may be non-commutative and elements arbitrary pytrees, exactly as
-    for :func:`scan`; the scan restarts at every boundary.
-    """
-    return ki.resolve_impl("segmented_scan", backend)(
-        op, xs, flags=flags, offsets=offsets, inclusive=inclusive)
+    """Deprecated: use ``scan(op, xs, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_scan",
+                     "scan(op, xs, layout=Segmented(flags=... | offsets=...))")
+    return scan(op, xs, inclusive=inclusive,
+                layout=Segmented(flags=flags, offsets=offsets),
+                backend=backend)
 
 
 def segmented_mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *,
-                        flags: jax.Array = None, offsets: jax.Array = None,
+                        flags: jax.Array | None = None,
+                        offsets: jax.Array | None = None,
                         num_segments: int | None = None,
                         backend: str | None = None) -> Pytree:
-    """Per-segment op-reduction of ``f(x)`` -> one element per segment.
-
-    With ``offsets``, the output length is ``len(offsets) - 1``; with
-    ``flags``, a static ``num_segments`` is required (JAX shapes are static)
-    and segments are numbered in flag order.  Empty segments yield ``op``'s
-    identity.
-    """
-    return ki.resolve_impl("segmented_mapreduce", backend)(
-        f, op, xs, flags=flags, offsets=offsets, num_segments=num_segments)
+    """Deprecated: use ``mapreduce(f, op, xs, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_mapreduce",
+                     "mapreduce(f, op, xs, layout=Segmented(...))")
+    return mapreduce(f, op, xs,
+                     layout=Segmented(flags=flags, offsets=offsets,
+                                      num_segments=num_segments),
+                     backend=backend)
 
 
-def sort(keys: jax.Array, *, descending: bool = False,
-         key_bits: int | None = None, backend: str | None = None) -> jax.Array:
-    """Stable LSD radix sort of a flat key array (paper follow-on: CUB's
-    flagship derived primitive, composed from mapreduce + exclusive scan +
-    scatter -- see kernels/sort.py).
-
-    Keys may be u8/u16/u32, i8/i16/i32, f32/bf16/f16.  The total order is
-    numeric with ``-0.0 == +0.0`` and all NaNs equal, sorting after ``+inf``
-    (ascending); float outputs are canonicalized accordingly.  ``key_bits``
-    (unsigned keys only) caps the significant bits so small-range keys --
-    e.g. expert ids -- pay proportionally fewer passes.
-    """
-    return ki.resolve_impl("sort", backend)(
-        keys, descending=descending, key_bits=key_bits)
-
-
-def sort_pairs(keys: jax.Array, values: Pytree, *, descending: bool = False,
-               key_bits: int | None = None,
-               backend: str | None = None) -> tuple[jax.Array, Pytree]:
-    """Stable key sort carrying an arbitrary pytree payload (leaves of
-    leading extent ``n``) through the same permutation."""
-    return ki.resolve_impl("sort_pairs", backend)(
-        keys, values, descending=descending, key_bits=key_bits)
-
-
-def argsort(keys: jax.Array, *, descending: bool = False,
-            key_bits: int | None = None,
-            backend: str | None = None) -> jax.Array:
-    """The stable sorting permutation (int32) of ``keys``."""
-    return ki.resolve_impl("argsort", backend)(
-        keys, descending=descending, key_bits=key_bits)
-
-
-def top_k(keys: jax.Array, k: int, *, largest: bool = True,
-          key_bits: int | None = None,
-          backend: str | None = None) -> tuple[jax.Array, jax.Array]:
-    """(values, indices) of the ``k`` extreme elements, extreme-first and
-    tie-stable.  NaNs rank above ``+inf``, so with ``largest=True`` they
-    surface first (the pinned NaN order of :func:`sort`)."""
-    return ki.resolve_impl("top_k", backend)(keys, k, largest=largest,
-                                             key_bits=key_bits)
-
-
-def segmented_sort(keys: jax.Array, *, flags: jax.Array = None,
-                   offsets: jax.Array = None, descending: bool = False,
-                   key_bits: int | None = None,
+def segmented_sort(keys: jax.Array, *, flags: jax.Array | None = None,
+                   offsets: jax.Array | None = None,
+                   descending: bool = False, key_bits: int | None = None,
                    backend: str | None = None) -> jax.Array:
-    """Independent stable sort of every contiguous segment, in place in the
-    flat layout.  Segments use the same descriptors as
-    :func:`segmented_scan` (flag array or CSR ``offsets``)."""
-    return ki.resolve_impl("segmented_sort", backend)(
-        keys, flags=flags, offsets=offsets, descending=descending,
-        key_bits=key_bits)
+    """Deprecated: use ``sort(keys, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_sort", "sort(keys, layout=Segmented(...))")
+    return sort(keys, descending=descending, key_bits=key_bits,
+                layout=Segmented(flags=flags, offsets=offsets),
+                backend=backend)
 
 
 def segmented_sort_pairs(keys: jax.Array, values: Pytree, *,
-                         flags: jax.Array = None, offsets: jax.Array = None,
-                         descending: bool = False, key_bits: int | None = None,
+                         flags: jax.Array | None = None,
+                         offsets: jax.Array | None = None,
+                         descending: bool = False,
+                         key_bits: int | None = None,
                          backend: str | None = None
                          ) -> tuple[jax.Array, Pytree]:
-    """Per-segment :func:`sort_pairs` over the flat ragged stream."""
-    return ki.resolve_impl("segmented_sort_pairs", backend)(
-        keys, values, flags=flags, offsets=offsets, descending=descending,
-        key_bits=key_bits)
+    """Deprecated: use ``sort_pairs(keys, values, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_sort_pairs",
+                     "sort_pairs(keys, values, layout=Segmented(...))")
+    return sort_pairs(keys, values, descending=descending, key_bits=key_bits,
+                      layout=Segmented(flags=flags, offsets=offsets),
+                      backend=backend)
 
 
-def segmented_argsort(keys: jax.Array, *, flags: jax.Array = None,
-                      offsets: jax.Array = None, descending: bool = False,
-                      key_bits: int | None = None,
+def segmented_argsort(keys: jax.Array, *, flags: jax.Array | None = None,
+                      offsets: jax.Array | None = None,
+                      descending: bool = False, key_bits: int | None = None,
                       backend: str | None = None) -> jax.Array:
-    """Within-segment sorting permutation: position ``i`` of the output holds
-    the *offset inside its segment* of the element sorted into slot ``i``."""
-    return ki.resolve_impl("segmented_argsort", backend)(
-        keys, flags=flags, offsets=offsets, descending=descending,
-        key_bits=key_bits)
+    """Deprecated: use ``argsort(keys, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_argsort",
+                     "argsort(keys, layout=Segmented(...))")
+    return argsort(keys, descending=descending, key_bits=key_bits,
+                   layout=Segmented(flags=flags, offsets=offsets),
+                   backend=backend)
 
 
-def segmented_top_k(keys: jax.Array, k: int, *, flags: jax.Array = None,
-                    offsets: jax.Array = None, num_segments: int | None = None,
-                    largest: bool = True, key_bits: int | None = None,
+def segmented_top_k(keys: jax.Array, k: int, *,
+                    flags: jax.Array | None = None,
+                    offsets: jax.Array | None = None,
+                    num_segments: int | None = None, largest: bool = True,
+                    key_bits: int | None = None,
                     backend: str | None = None
                     ) -> tuple[jax.Array, jax.Array]:
-    """Per-segment top-k over the flat ragged stream -> ``(S, k)`` values and
-    within-segment indices, extreme-first.  Slots past a segment's length are
-    filled with the reduction identity and index ``-1``; with ``flags`` a
-    static ``num_segments`` is required (as for :func:`segmented_mapreduce`).
-    """
-    return ki.resolve_impl("segmented_top_k", backend)(
-        keys, k, flags=flags, offsets=offsets, num_segments=num_segments,
-        largest=largest, key_bits=key_bits)
-
-
-def semiring_matvec(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
-                    backend: str | None = None) -> Pytree:
-    """y[j] = op_i f(x[i], A[i, j]) for any semiring (paper §V-C)."""
-    return ki.resolve_impl("matvec", backend)(semiring.f, semiring.op, A, x)
-
-
-def semiring_vecmat(semiring: alg.Semiring, A: jax.Array, x: jax.Array, *,
-                    backend: str | None = None) -> Pytree:
-    """z[i] = op_j f(A[i, j], x[j]) for any semiring (paper §V-C)."""
-    return ki.resolve_impl("vecmat", backend)(semiring.f, semiring.op, A, x)
-
-
-def matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
-           backend: str | None = None) -> Pytree:
-    return ki.resolve_impl("matvec", backend)(f, op, A, x)
-
-
-def vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
-           backend: str | None = None) -> Pytree:
-    return ki.resolve_impl("vecmat", backend)(f, op, A, x)
-
-
-def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
-                      *, reverse: bool = False,
-                      backend: str | None = None) -> jax.Array:
-    """h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C) inputs.
-
-    The model-facing specialization of ``scan`` with the AFFINE operator --
-    the compute core of RG-LRU (recurrentgemma) and mLSTM inter-chunk state
-    propagation (xlstm).  Identical implementations to
-    :func:`batched_linear_recurrence` (the layout is batch-native already);
-    consumers on the decode hot path call the ``batched_`` name so the
-    tuner's batch-bucketed keys apply.
-    """
-    return ki.resolve_impl("linear_recurrence", backend)(
-        a, b, h0=h0, reverse=reverse)
+    """Deprecated: use ``top_k(keys, k, layout=Segmented(...))``."""
+    _warn_deprecated("segmented_top_k",
+                     "top_k(keys, k, layout=Segmented(...))")
+    return top_k(keys, k, largest=largest, key_bits=key_bits,
+                 layout=Segmented(flags=flags, offsets=offsets,
+                                  num_segments=num_segments),
+                 backend=backend)

@@ -52,13 +52,16 @@ def shape_bucket(n: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# What is tunable: per-primitive candidate ladders + key extraction.
+# What is tunable: derived from the PrimitiveDef registry.  Each RouteDef
+# carries a TuneRecipe (candidate ladder + key-extraction recipe); one
+# generic keyer below interprets the recipe, so adding a tunable route is a
+# table entry in core/intrinsics.py, not a new keyer function here.
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class TunableSpec:
-    """How to tune one primitive: cache-key fields + candidate overrides.
+    """How to tune one route: cache-key fields + candidate overrides.
 
     ``keyer`` returns ``(op_name, dtype, n)`` or, for the batched family,
     ``(op_name, dtype, n, batch)`` -- the batch rides its own bucket in the
@@ -70,115 +73,43 @@ class TunableSpec:
     candidates: tuple[dict, ...]  # TuningPolicy field overrides to race
 
 
-def _tree_key(xs) -> tuple[str, int]:
-    leaves = jax.tree.leaves(xs)
-    dtype = str(jax.numpy.result_type(leaves[0]))
-    n = sum(int(l.size) for l in leaves)
-    return dtype, n
+def _recipe_keyer(route: "ki.RouteDef") -> Callable:
+    """Generic key extraction driven by a route's TuneRecipe.
 
+    * ``flat``: total element count over the data's leaves.
+    * ``row``: ``(B, n)`` leaves -- per-row extent + batch bucket.
+    * ``trail2``: ``(B, d1, d2)`` leading leaf -- the trailing dims bucket
+      *separately* ("128x8192", not their product) because block selection
+      branches on the aspect ratio, so a tall-narrow winner must never be
+      replayed on a wide-short problem; batch rides its own bucket.
 
-def _scan_keyer(args, kwargs):
-    op, xs = args[0], args[1]
-    dtype, n = _tree_key(xs)
-    return getattr(op, "name", "?"), dtype, n
+    Argument indices default to the route's own ``data_arg``/``op_arg`` --
+    the ones dispatch validates -- so they are declared once per row.
+    """
+    recipe = route.tuning
+    data_arg = recipe.data_arg if recipe.data_arg is not None else route.data_arg
+    op_arg = recipe.op_arg if recipe.op_arg is not None else route.op_arg
 
+    def keyer(args, kwargs):
+        op_name = (recipe.op_label if recipe.op_label is not None
+                   else getattr(args[op_arg], "name", "?"))
+        leaves = jax.tree.leaves(args[data_arg])
+        lead = leaves[0]
+        dtype = str(jax.numpy.result_type(lead))
+        if recipe.dims == "flat":
+            return op_name, dtype, sum(int(l.size) for l in leaves)
+        if recipe.dims == "row":
+            return op_name, dtype, int(lead.shape[1]), int(lead.shape[0])
+        b, d1, d2 = lead.shape
+        return (op_name, dtype,
+                f"{shape_bucket(int(d1))}x{shape_bucket(int(d2))}", int(b))
 
-def _mapreduce_keyer(args, kwargs):
-    op, xs = args[1], args[2]
-    dtype, n = _tree_key(xs)
-    return getattr(op, "name", "?"), dtype, n
+    return keyer
 
-
-def _copy_keyer(args, kwargs):
-    dtype, n = _tree_key(args[0])
-    return "copy", dtype, n
-
-
-def _keys_keyer(args, kwargs):
-    dtype, n = _tree_key(args[0])
-    return "keys", dtype, n
-
-
-def _batched_rowkey(xs) -> tuple[str, int, int]:
-    """(dtype, per-row leading extent, batch) of (B, n) pytree leaves."""
-    leaves = jax.tree.leaves(xs)
-    dtype = str(jax.numpy.result_type(leaves[0]))
-    return dtype, int(leaves[0].shape[1]), int(leaves[0].shape[0])
-
-
-def _batched_scan_keyer(args, kwargs):
-    op, xs = args[0], args[1]
-    dtype, n, batch = _batched_rowkey(xs)
-    return getattr(op, "name", "?"), dtype, n, batch
-
-
-def _batched_mapreduce_keyer(args, kwargs):
-    op, xs = args[1], args[2]
-    dtype, n, batch = _batched_rowkey(xs)
-    return getattr(op, "name", "?"), dtype, n, batch
-
-
-def _batched_matvec_keyer(args, kwargs):
-    # Per-row dims are bucketed *separately* ("128x8192", not their product):
-    # block selection (_pick_blocks_matvec) branches on the aspect ratio, so
-    # a tall-narrow winner must never be replayed on a wide-short problem.
-    A = args[2]
-    B, n, p = A.shape
-    nk = f"{shape_bucket(n)}x{shape_bucket(p)}"
-    return getattr(args[1], "name", "?"), str(A.dtype), nk, int(B)
-
-
-def _batched_linrec_keyer(args, kwargs):
-    a = args[0]
-    B, t, c = a.shape
-    nk = f"{shape_bucket(t)}x{shape_bucket(c)}"   # T tiling != C tiling
-    return "affine", str(a.dtype), nk, int(B)
-
-
-def _ladder(field: str, values) -> tuple[dict, ...]:
-    return tuple({field: v} for v in values)
-
-
-# Radix sort races digit width x block policy: wider digits mean fewer
-# scatter passes but a larger per-pass rank scan, and the rank scan's own
-# block size (nitem_scan) interacts with the digit count.
-_SORT_LADDER = tuple({"sort_digit_bits": d, "nitem_scan": m}
-                     for d in (2, 4, 8) for m in (8, 16))
 
 TUNABLE: dict[str, TunableSpec] = {
-    "scan": TunableSpec(_scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
-    "segmented_scan": TunableSpec(
-        _scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
-    "segmented_mapreduce": TunableSpec(
-        _mapreduce_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
-    "mapreduce": TunableSpec(
-        _mapreduce_keyer, _ladder("nitem_reduce", (4, 8, 16))),
-    "copy": TunableSpec(_copy_keyer, _ladder("nitem_copy", (4, 8, 16))),
-    "sort": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "sort_pairs": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "argsort": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "top_k": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "segmented_sort": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "segmented_sort_pairs": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "segmented_argsort": TunableSpec(_keys_keyer, _SORT_LADDER),
-    "segmented_top_k": TunableSpec(_keys_keyer, _SORT_LADDER),
-    # Batched family: keys carry a batch bucket; one race per whole batch.
-    "batched_scan": TunableSpec(
-        _batched_scan_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
-    # batched_mapreduce has two routes: the accumulate-tile kernel reads
-    # nitem_reduce (commutative ops), the order-preserving scan route reads
-    # nitem_scan (non-commutative ops).  Each candidate overrides both so
-    # whichever route the op takes, the race varies the knob it consumes
-    # (keys carry the op name, so the routes never share a cache entry).
-    "batched_mapreduce": TunableSpec(
-        _batched_mapreduce_keyer,
-        tuple({"nitem_reduce": v, "nitem_scan": v} for v in (4, 8, 16))),
-    "batched_matvec": TunableSpec(
-        _batched_matvec_keyer, _ladder("matvec_rows", (4, 8, 16))),
-    "batched_vecmat": TunableSpec(
-        _batched_matvec_keyer, _ladder("vecmat_rows", (4, 8, 16))),
-    "batched_linear_recurrence": TunableSpec(
-        _batched_linrec_keyer, _ladder("nitem_scan", (4, 8, 16, 32))),
+    route.key: TunableSpec(_recipe_keyer(route), tuple(route.tuning.ladder))
+    for route in ki.iter_routes() if route.tuning is not None
 }
 
 

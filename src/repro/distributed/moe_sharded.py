@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Segmented
 from repro.models import layers as L
 
 
@@ -106,9 +107,9 @@ def moe_forward_sharded(params, cfg, x, mesh):
         # counts/starts scatter, no padded intermediate.
         run_flags = jnp.concatenate(
             [jnp.ones((1,), jnp.int32), (se[1:] != se[:-1]).astype(jnp.int32)])
-        pos = forge.segmented_scan(
-            alg.ADD, jnp.ones_like(se, jnp.int32), flags=run_flags,
-            inclusive=False)
+        pos = forge.scan(
+            alg.ADD, jnp.ones_like(se, jnp.int32), inclusive=False,
+            layout=Segmented(flags=run_flags))
         keep = pos < C
 
         # ---- take only MY experts (zero-collective "all-to-all") ----

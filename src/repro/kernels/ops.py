@@ -1,7 +1,7 @@
 """jit-ready wrappers + backend registration for every kernel.
 
 This module is the "package extension" of the two-layer design: it registers
-each primitive's implementations with the Layer-1 dispatch registry
+each (primitive, layout) route's implementations with the Layer-1 registry
 (``core.intrinsics``) under three backends:
 
 * ``pallas-tpu``       -- the Pallas kernels, compiled by Mosaic (TARGET);
@@ -10,6 +10,15 @@ each primitive's implementations with the Layer-1 dispatch registry
 * ``xla``              -- portable pure-XLA fallbacks (used by the CPU
                           dry-run; also the baseline the benchmarks compare
                           bytes-moved against).
+
+Registration is table-driven: ``IMPLS`` below maps every route key
+(``"scan@batched"``) to its per-backend implementations, and the module
+asserts at import time that the table covers exactly the routes declared in
+the ``PrimitiveDef`` registry -- adding a route without implementations (or
+an implementation without a registry row) is an import error, not a latent
+dispatch failure.  Validation, zero-extent guards and non-commutative
+rerouting live in the registry's dispatch pipeline, so the wrappers here
+only ever see well-formed, non-empty problems through the public API.
 
 The algorithmic layer (``core.primitives``) never names a backend.
 """
@@ -39,19 +48,13 @@ Pytree = Any
 # copy
 # ---------------------------------------------------------------------------
 
-ki.register_impl("copy", "pallas-tpu")(
-    functools.partial(copy_k.copy_pallas, interpret=False))
-ki.register_impl("copy", "pallas-interpret")(
-    functools.partial(copy_k.copy_pallas, interpret=True))
 
-
-@ki.register_impl("copy", "xla")
 def _copy_xla(x, *, nitem=None, policy=None):
     return jnp.copy(x)
 
 
 # ---------------------------------------------------------------------------
-# scan
+# scan@flat
 # ---------------------------------------------------------------------------
 
 
@@ -104,26 +107,18 @@ def np_prod(t):
     return r
 
 
-ki.register_impl("scan", "pallas-tpu")(
-    functools.partial(_scan_pallas, interpret=False))
-ki.register_impl("scan", "pallas-interpret")(
-    functools.partial(_scan_pallas, interpret=True))
-
-
-@ki.register_impl("scan", "xla")
 def _scan_xla(op, xs, *, axis=0, inclusive=True, reverse=False, policy=None):
     return ref.ref_scan(op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
 
 
 # ---------------------------------------------------------------------------
-# segmented scan / mapreduce (ragged workloads)
+# scan@segmented / mapreduce@segmented (ragged workloads)
 # ---------------------------------------------------------------------------
 
 
 def _segment_flags(xs, flags, offsets):
-    """Normalize either segment descriptor to a flag array."""
-    if (flags is None) == (offsets is None):
-        raise ValueError("pass exactly one of flags= or offsets=")
+    """Normalize either segment descriptor to a flag array (the dispatch
+    layer has already validated that exactly one is present)."""
     n = jax.tree.leaves(xs)[0].shape[0]
     if offsets is not None:
         return seg_k.offsets_to_flags(offsets, n)
@@ -133,25 +128,14 @@ def _segment_flags(xs, flags, offsets):
 def _segmented_scan_pallas(op, xs, *, flags=None, offsets=None, inclusive=True,
                            interpret=False, policy=None):
     f = _segment_flags(xs, flags, offsets)
-    if f.shape[0] == 0:                    # zero-length stream: nothing to do
-        return xs
     return seg_k.segmented_scan_1d_pallas(
         op, xs, f, inclusive=inclusive, policy=policy, interpret=interpret)
 
 
-ki.register_impl("segmented_scan", "pallas-tpu")(
-    functools.partial(_segmented_scan_pallas, interpret=False))
-ki.register_impl("segmented_scan", "pallas-interpret")(
-    functools.partial(_segmented_scan_pallas, interpret=True))
-
-
-@ki.register_impl("segmented_scan", "xla")
 def _segmented_scan_xla(op, xs, *, flags=None, offsets=None, inclusive=True,
                         policy=None):
     """Portable path: associative_scan of the lifted (flag, value) operator."""
     f = _segment_flags(xs, flags, offsets)
-    if f.shape[0] == 0:
-        return xs
     seg = alg.segmented(op)
     _, incl = jax.lax.associative_scan(seg.combine, (f, xs), axis=0)
     if inclusive:
@@ -164,22 +148,10 @@ def _segmented_scan_xla(op, xs, *, flags=None, offsets=None, inclusive=True,
         lambda s, i: jnp.where(f != 0, i, s), shifted, ident_full)
 
 
-def _empty_segmented_mapreduce(f, op, xs, offsets, num_segments):
-    """num_segments identity rows for a zero-length input stream."""
-    ns = num_segments if offsets is None else offsets.shape[0] - 1
-    if ns is None:
-        raise ValueError("flag-variant segmented mapreduce needs num_segments")
-    vals = jax.eval_shape(f, xs)
-    return op.identity(jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((ns,) + l.shape[1:], l.dtype), vals))
-
-
 def _segmented_mapreduce_pallas(f, op, xs, *, flags=None, offsets=None,
                                 num_segments=None, interpret=False,
                                 policy=None):
     fl = _segment_flags(xs, flags, offsets)
-    if fl.shape[0] == 0:
-        return _empty_segmented_mapreduce(f, op, xs, offsets, num_segments)
     vals = f(xs)
     incl = seg_k.segmented_scan_1d_pallas(
         op, vals, fl, inclusive=True, policy=policy, interpret=interpret)
@@ -188,18 +160,9 @@ def _segmented_mapreduce_pallas(f, op, xs, *, flags=None, offsets=None,
         num_segments=num_segments)
 
 
-ki.register_impl("segmented_mapreduce", "pallas-tpu")(
-    functools.partial(_segmented_mapreduce_pallas, interpret=False))
-ki.register_impl("segmented_mapreduce", "pallas-interpret")(
-    functools.partial(_segmented_mapreduce_pallas, interpret=True))
-
-
-@ki.register_impl("segmented_mapreduce", "xla")
 def _segmented_mapreduce_xla(f, op, xs, *, flags=None, offsets=None,
                              num_segments=None, policy=None):
     fl = _segment_flags(xs, flags, offsets)
-    if fl.shape[0] == 0:
-        return _empty_segmented_mapreduce(f, op, xs, offsets, num_segments)
     vals = f(xs)
     # Fast path: the standard algebra over plain arrays maps onto XLA's
     # native segment reductions.
@@ -219,7 +182,7 @@ def _segmented_mapreduce_xla(f, op, xs, *, flags=None, offsets=None,
 
 
 # ---------------------------------------------------------------------------
-# mapreduce
+# mapreduce@flat
 # ---------------------------------------------------------------------------
 
 
@@ -252,13 +215,6 @@ def _mapreduce_pallas(f, op, xs, *, axis=None, interpret=False, policy=None):
     raise NotImplementedError("mapreduce: pallas path supports axis=None or 2D")
 
 
-ki.register_impl("mapreduce", "pallas-tpu")(
-    functools.partial(_mapreduce_pallas, interpret=False))
-ki.register_impl("mapreduce", "pallas-interpret")(
-    functools.partial(_mapreduce_pallas, interpret=True))
-
-
-@ki.register_impl("mapreduce", "xla")
 def _mapreduce_xla(f, op, xs, *, axis=None, policy=None):
     # Fast paths for the standard algebra (XLA reductions); generic fallback
     # via associative_scan otherwise.
@@ -272,7 +228,7 @@ def _mapreduce_xla(f, op, xs, *, axis=None, policy=None):
 
 
 # ---------------------------------------------------------------------------
-# semiring matvec / vecmat
+# matvec@flat / vecmat@flat (semiring generalized forms)
 # ---------------------------------------------------------------------------
 
 
@@ -326,17 +282,6 @@ def _vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
                                   interpret=interpret)
 
 
-ki.register_impl("matvec", "pallas-tpu")(
-    functools.partial(_matvec_pallas, interpret=False))
-ki.register_impl("matvec", "pallas-interpret")(
-    functools.partial(_matvec_pallas, interpret=True))
-ki.register_impl("vecmat", "pallas-tpu")(
-    functools.partial(_vecmat_pallas, interpret=False))
-ki.register_impl("vecmat", "pallas-interpret")(
-    functools.partial(_vecmat_pallas, interpret=True))
-
-
-@ki.register_impl("matvec", "xla")
 def _matvec_xla(f, op, A, x, *, policy=None):
     if op.name == "add" and _is_arithmetic(f, x, A):
         # Standard semiring -> MXU-friendly contraction.
@@ -344,7 +289,6 @@ def _matvec_xla(f, op, A, x, *, policy=None):
     return ref.ref_matvec(f, op, A, x)
 
 
-@ki.register_impl("vecmat", "xla")
 def _vecmat_xla(f, op, A, x, *, policy=None):
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("np,p->n", A, x)
@@ -363,6 +307,12 @@ def _is_arithmetic(f, x, A):
 
 # ---------------------------------------------------------------------------
 # linear recurrence  h_t = a_t * h_{t-1} + b_t  on (B, T, C)
+#
+# The (B, T, C) channelwise scan IS the grid-batched layout (batch and
+# channel blocks ride parallel grid dimensions), so the same implementations
+# serve the flat and batched routes; the batched route is the one consumers
+# (serving, recurrent models) call and the one the tuner keys with a batch
+# bucket.
 # ---------------------------------------------------------------------------
 
 
@@ -376,38 +326,21 @@ def _linrec_pallas(a, b, h0=None, *, reverse=False, interpret=False,
     return A * h0[:, None, :] + B
 
 
-ki.register_impl("linear_recurrence", "pallas-tpu")(
-    functools.partial(_linrec_pallas, interpret=False))
-ki.register_impl("linear_recurrence", "pallas-interpret")(
-    functools.partial(_linrec_pallas, interpret=True))
-
-
-@ki.register_impl("linear_recurrence", "xla")
 def _linrec_xla(a, b, h0=None, *, reverse=False, policy=None):
     return ref.ref_linear_recurrence(a, b, h0=h0, axis=1, reverse=reverse)
 
 
 # ---------------------------------------------------------------------------
 # Batched family: one launch per uniform batch of independent rows
-# (kernels/batched.py).  Zero-extent edges (B == 0, n == 0, p == 0) are
-# resolved here so the kernels only ever see grids of extent >= 1.
+# (kernels/batched.py).  Zero-extent edges (B == 0, n == 0, p == 0) and the
+# non-commutative mapreduce reroute are resolved by the registry's dispatch
+# pipeline, so these wrappers only see grids of extent >= 1 and commutative
+# reductions.
 # ---------------------------------------------------------------------------
-
-
-def _batched_mapreduce_identity(f, op, xs, B):
-    """Per-row identity output: what reducing zero elements must yield."""
-    one = jax.eval_shape(
-        f, jax.tree.map(lambda l: jax.ShapeDtypeStruct((1, 1), l.dtype), xs))
-    return op.identity(jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((B,), l.dtype), one))
 
 
 def _batched_scan_pallas(op, xs, *, inclusive=True, reverse=False,
                          interpret=False, policy=None):
-    leaves = jax.tree.leaves(xs)
-    B, n = leaves[0].shape
-    if B == 0 or n == 0:
-        return xs
     if reverse:
         xs = jax.tree.map(lambda l: jnp.flip(l, 1), xs)
     out = batched_k.batched_scan_pallas(op, xs, inclusive=inclusive,
@@ -417,50 +350,16 @@ def _batched_scan_pallas(op, xs, *, inclusive=True, reverse=False,
     return out
 
 
-ki.register_impl("batched_scan", "pallas-tpu")(
-    functools.partial(_batched_scan_pallas, interpret=False))
-ki.register_impl("batched_scan", "pallas-interpret")(
-    functools.partial(_batched_scan_pallas, interpret=True))
-
-
-@ki.register_impl("batched_scan", "xla")
 def _batched_scan_xla(op, xs, *, inclusive=True, reverse=False, policy=None):
-    leaves = jax.tree.leaves(xs)
-    if 0 in leaves[0].shape:
-        return xs
     return ref.ref_scan(op, xs, axis=1, inclusive=inclusive, reverse=reverse)
 
 
 def _batched_mapreduce_pallas(f, op, xs, *, interpret=False, policy=None):
-    leaves = jax.tree.leaves(xs)
-    B, n = leaves[0].shape
-    if B == 0 or n == 0:
-        return _batched_mapreduce_identity(f, op, xs, B)
-    if not getattr(op, "commutative", False):
-        # Order-preserving route: batched inclusive scan of the mapped
-        # values, take each row's last element.  (The flat mapreduce keeps
-        # its commutative contract; the batched family relaxes it the same
-        # way scan does, because the scan substrate is order-preserving.)
-        vals = f(xs)
-        incl = batched_k.batched_scan_pallas(
-            op, vals, inclusive=True, policy=policy, interpret=interpret)
-        return jax.tree.map(lambda l: l[:, -1], incl)
     return batched_k.batched_mapreduce_pallas(
         f, op, xs, policy=policy, interpret=interpret)
 
 
-ki.register_impl("batched_mapreduce", "pallas-tpu")(
-    functools.partial(_batched_mapreduce_pallas, interpret=False))
-ki.register_impl("batched_mapreduce", "pallas-interpret")(
-    functools.partial(_batched_mapreduce_pallas, interpret=True))
-
-
-@ki.register_impl("batched_mapreduce", "xla")
 def _batched_mapreduce_xla(f, op, xs, *, policy=None):
-    leaves = jax.tree.leaves(xs)
-    B, n = leaves[0].shape
-    if B == 0 or n == 0:
-        return _batched_mapreduce_identity(f, op, xs, B)
     direct = {"add": jnp.sum, "mul": jnp.prod, "max": jnp.max, "min": jnp.min}
     vals = f(xs)
     if op.name in direct and isinstance(vals, jax.Array):
@@ -473,48 +372,19 @@ def _batched_mapreduce_xla(f, op, xs, *, policy=None):
 
 def _batched_matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
-    B, n, p = A.shape
-    if B == 0 or n == 0 or p == 0:
-        return _batched_mv_empty(f, op, (x.dtype, A.dtype), B, p)
-    rn, cp = _pick_blocks_matvec(policy, A, n, p)
+    rn, cp = _pick_blocks_matvec(policy, A, A.shape[1], A.shape[2])
     return batched_k.batched_matvec_pallas(
         f, op, A, x, block_rows=rn, block_cols=cp, interpret=interpret)
 
 
 def _batched_vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
-    B, n, p = A.shape
-    if B == 0 or n == 0 or p == 0:
-        return _batched_mv_empty(f, op, (A.dtype, x.dtype), B, n)
-    ri, cj = _pick_blocks_vecmat(policy, A, n, p)
+    ri, cj = _pick_blocks_vecmat(policy, A, A.shape[1], A.shape[2])
     return batched_k.batched_vecmat_pallas(
         f, op, A, x, block_rows=ri, block_cols=cj, interpret=interpret)
 
 
-def _batched_mv_empty(f, op, arg_dtypes, B, out_extent):
-    """(B, out_extent) identity rows: reducing zero terms yields identity."""
-    one = jax.eval_shape(
-        f, jax.ShapeDtypeStruct((1, 1), arg_dtypes[0]),
-        jax.ShapeDtypeStruct((1, 1), arg_dtypes[1]))
-    return op.identity(jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((B, out_extent), l.dtype), one))
-
-
-ki.register_impl("batched_matvec", "pallas-tpu")(
-    functools.partial(_batched_matvec_pallas, interpret=False))
-ki.register_impl("batched_matvec", "pallas-interpret")(
-    functools.partial(_batched_matvec_pallas, interpret=True))
-ki.register_impl("batched_vecmat", "pallas-tpu")(
-    functools.partial(_batched_vecmat_pallas, interpret=False))
-ki.register_impl("batched_vecmat", "pallas-interpret")(
-    functools.partial(_batched_vecmat_pallas, interpret=True))
-
-
-@ki.register_impl("batched_matvec", "xla")
 def _batched_matvec_xla(f, op, A, x, *, policy=None):
-    B, n, p = A.shape
-    if B == 0 or n == 0 or p == 0:
-        return _batched_mv_empty(f, op, (x.dtype, A.dtype), B, p)
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("bn,bnp->bp", x, A)
     vals = f(x[:, :, None], A)
@@ -522,11 +392,7 @@ def _batched_matvec_xla(f, op, A, x, *, policy=None):
     return jax.tree.map(lambda l: l[:, -1], scanned)
 
 
-@ki.register_impl("batched_vecmat", "xla")
 def _batched_vecmat_xla(f, op, A, x, *, policy=None):
-    B, n, p = A.shape
-    if B == 0 or n == 0 or p == 0:
-        return _batched_mv_empty(f, op, (A.dtype, x.dtype), B, n)
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("bnp,bp->bn", A, x)
     vals = f(A, x[:, None, :])
@@ -534,33 +400,68 @@ def _batched_vecmat_xla(f, op, A, x, *, policy=None):
     return jax.tree.map(lambda l: l[:, :, -1], scanned)
 
 
-# Batched linear recurrence: the (B, T, C) channelwise scan IS the
-# grid-batched layout (batch and channel blocks ride parallel grid
-# dimensions), so the same implementations serve both names; the explicit
-# ``batched_`` registration is the one consumers (serving, recurrent models)
-# call and the one the tuner keys with a batch bucket.
-ki.register_impl("batched_linear_recurrence", "pallas-tpu")(
-    functools.partial(_linrec_pallas, interpret=False))
-ki.register_impl("batched_linear_recurrence", "pallas-interpret")(
-    functools.partial(_linrec_pallas, interpret=True))
-ki.register_impl("batched_linear_recurrence", "xla")(_linrec_xla)
-
-
 # ---------------------------------------------------------------------------
-# Radix sort family.  One composition (kernels/sort.py) serves every backend:
-# each histogram / offset / rank step dispatches to that backend's
-# scan/mapreduce kernels, so ``pallas-interpret`` runs the real kernel bodies
-# and ``xla`` stays a pure portable fallback -- no backend-specific sort code.
+# The registration table.  ``_pallas_pair`` expands one kernel body into the
+# compiled and interpreted backends; the radix-sort family is one shared
+# composition (kernels/sort.py) whose scan/mapreduce steps dispatch to the
+# named sub-backend, so ``pallas-interpret`` runs the real kernel bodies and
+# ``xla`` stays a pure portable fallback -- no backend-specific sort code.
 # ---------------------------------------------------------------------------
 
-for _prim, _fn in [("sort", sort_k.sort_radix),
-                   ("sort_pairs", sort_k.sort_pairs_radix),
-                   ("argsort", sort_k.argsort_radix),
-                   ("top_k", sort_k.top_k_radix),
-                   ("segmented_sort", sort_k.segmented_sort_radix),
-                   ("segmented_sort_pairs", sort_k.segmented_sort_pairs_radix),
-                   ("segmented_argsort", sort_k.segmented_argsort_radix),
-                   ("segmented_top_k", sort_k.segmented_top_k_radix)]:
-    for _backend in ("pallas-tpu", "pallas-interpret", "xla"):
-        ki.register_impl(_prim, _backend)(
-            functools.partial(_fn, sub_backend=_backend))
+
+def _pallas_pair(fn):
+    return {"pallas-tpu": functools.partial(fn, interpret=False),
+            "pallas-interpret": functools.partial(fn, interpret=True)}
+
+
+def _per_backend(fn):
+    return {b: functools.partial(fn, sub_backend=b)
+            for b in ("pallas-tpu", "pallas-interpret", "xla")}
+
+
+IMPLS: dict[str, dict[str, Any]] = {
+    "copy@flat": {**_pallas_pair(copy_k.copy_pallas), "xla": _copy_xla},
+    "scan@flat": {**_pallas_pair(_scan_pallas), "xla": _scan_xla},
+    "scan@batched": {**_pallas_pair(_batched_scan_pallas),
+                     "xla": _batched_scan_xla},
+    "scan@segmented": {**_pallas_pair(_segmented_scan_pallas),
+                       "xla": _segmented_scan_xla},
+    "mapreduce@flat": {**_pallas_pair(_mapreduce_pallas),
+                       "xla": _mapreduce_xla},
+    "mapreduce@batched": {**_pallas_pair(_batched_mapreduce_pallas),
+                          "xla": _batched_mapreduce_xla},
+    "mapreduce@segmented": {**_pallas_pair(_segmented_mapreduce_pallas),
+                            "xla": _segmented_mapreduce_xla},
+    "matvec@flat": {**_pallas_pair(_matvec_pallas), "xla": _matvec_xla},
+    "matvec@batched": {**_pallas_pair(_batched_matvec_pallas),
+                       "xla": _batched_matvec_xla},
+    "vecmat@flat": {**_pallas_pair(_vecmat_pallas), "xla": _vecmat_xla},
+    "vecmat@batched": {**_pallas_pair(_batched_vecmat_pallas),
+                       "xla": _batched_vecmat_xla},
+    "linear_recurrence@flat": {**_pallas_pair(_linrec_pallas),
+                               "xla": _linrec_xla},
+    "linear_recurrence@batched": {**_pallas_pair(_linrec_pallas),
+                                  "xla": _linrec_xla},
+    "sort@flat": _per_backend(sort_k.sort_radix),
+    "sort@segmented": _per_backend(sort_k.segmented_sort_radix),
+    "sort_pairs@flat": _per_backend(sort_k.sort_pairs_radix),
+    "sort_pairs@segmented": _per_backend(sort_k.segmented_sort_pairs_radix),
+    "argsort@flat": _per_backend(sort_k.argsort_radix),
+    "argsort@segmented": _per_backend(sort_k.segmented_argsort_radix),
+    "top_k@flat": _per_backend(sort_k.top_k_radix),
+    "top_k@segmented": _per_backend(sort_k.segmented_top_k_radix),
+}
+
+# The registration table and the declarative PrimitiveDef registry must
+# enumerate exactly the same routes, and every route must keep a portable
+# fallback.  Raised (not assert) so the check survives python -O.
+if set(IMPLS) != ki.route_keys():
+    raise RuntimeError(
+        "kernels/ops.py IMPLS out of sync with the PrimitiveDef registry: "
+        f"missing={sorted(ki.route_keys() - set(IMPLS))} "
+        f"extra={sorted(set(IMPLS) - ki.route_keys())}")
+for _key, _impls in IMPLS.items():
+    if "xla" not in _impls:
+        raise RuntimeError(f"{_key}: every route needs an xla fallback")
+    for _backend, _fn in _impls.items():
+        ki.register_impl(_key, _backend)(_fn)

@@ -199,7 +199,9 @@ def flags_to_segment_ids(flags: jax.Array) -> jax.Array:
     return jnp.cumsum(f) - 1
 
 
-def gather_segment_lasts(op, incl: Pytree, *, offsets=None, flags=None,
+def gather_segment_lasts(op, incl: Pytree, *,
+                         offsets: jax.Array | None = None,
+                         flags: jax.Array | None = None,
                          num_segments: int | None = None) -> Pytree:
     """Pick each segment's last inclusive-scan element; identity for empties.
 

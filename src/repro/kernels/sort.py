@@ -83,8 +83,8 @@ def _key_bits_for(keys, key_bits):
 def _radix_pass(bits, payloads, shift, digit_bits, backend, policy):
     n = bits.shape[0]
     n_buckets = 1 << digit_bits
-    scan = ki.resolve_impl("scan", backend)
-    mapreduce = ki.resolve_impl("mapreduce", backend)
+    scan = ki.resolve_impl("scan@flat", backend)
+    mapreduce = ki.resolve_impl("mapreduce@flat", backend)
 
     digit = jnp.right_shift(bits, jnp.asarray(shift, bits.dtype))
     digit = (digit & _full_mask(digit_bits, bits.dtype)).astype(jnp.int32)
@@ -203,13 +203,11 @@ def top_k_radix(keys, k, *, largest=True, key_bits=None, sub_backend="xla",
 
 
 # ---------------------------------------------------------------------------
-# Segmented variants (PR 1 descriptors: flag array / CSR offsets).
+# Segmented variants (PR 1 descriptors: flag array / CSR offsets).  The
+# descriptor-exclusivity and num_segments checks live in the registry's
+# dispatch pipeline (core/intrinsics.py), which is the only caller of these
+# registered compositions.
 # ---------------------------------------------------------------------------
-
-
-def _check_descriptor(flags, offsets):
-    if (flags is None) == (offsets is None):
-        raise ValueError("pass exactly one of flags= or offsets=")
 
 
 def _segment_ids_and_starts(n, flags, offsets, backend, policy):
@@ -221,7 +219,7 @@ def _segment_ids_and_starts(n, flags, offsets, backend, policy):
     computed as a running MAX scan of flagged positions -- primitive reuse,
     not a parallel codepath.
     """
-    scan = ki.resolve_impl("scan", backend)
+    scan = ki.resolve_impl("scan@flat", backend)
     if offsets is not None:
         f = seg_k.offsets_to_flags(offsets, n)
         s_bound = int(offsets.shape[0]) - 1
@@ -244,7 +242,6 @@ def _segmented_sort_core(keys, payload_leaves, *, flags, offsets, descending,
     extra int32 payload (argsort / top_k need it to localize indices).
     """
     policy = _resolve_policy(policy, sub_backend)
-    _check_descriptor(flags, offsets)
     kb = _key_bits_for(keys, key_bits)
     n = keys.shape[0]
     if n == 0:
@@ -322,18 +319,14 @@ def segmented_top_k_radix(keys, k, *, flags=None, offsets=None,
     (trailing never-started segments come back entirely filled).
     """
     policy = _resolve_policy(policy, sub_backend)
-    _check_descriptor(flags, offsets)
     if k < 0:
         raise ValueError(f"top_k: k must be >= 0, got {k}")
     n = keys.shape[0]
-    scan = ki.resolve_impl("scan", sub_backend)
+    scan = ki.resolve_impl("scan@flat", sub_backend)
     if offsets is not None:
         num_segments = int(offsets.shape[0]) - 1
         offs = offsets.astype(jnp.int32)
     else:
-        if num_segments is None:
-            raise ValueError(
-                "flag-variant segmented top_k needs num_segments")
         seg_ids = seg_k.flags_to_segment_ids(flags.astype(jnp.int32))
         counts = jnp.zeros((num_segments,), jnp.int32).at[seg_ids].add(
             1, mode="drop")

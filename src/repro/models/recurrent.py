@@ -3,7 +3,7 @@
 These are where the paper's scan primitive is load-bearing:
 
 * RG-LRU's diagonal recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t x_t)
-  runs on ``core.primitives.batched_linear_recurrence`` -- the
+  runs on ``core.primitives.linear_recurrence(layout=Batched())`` -- the
   AFFINE-operator scan in the (B, T, C) channel layout, one launch for the
   whole batch (Pallas kernel on TPU, associative_scan on XLA backends).
 * mLSTM's exponential-gating stabilizer m_t = max(log f_t + m_{t-1}, log i_t)
@@ -13,7 +13,7 @@ These are where the paper's scan primitive is load-bearing:
   chunkwise: intra-chunk = masked decay attention, parallel over chunks;
   inter-chunk = the per-chunk decay is a *scalar per head*, so the chunk
   states follow a diagonal linear recurrence along the chunk axis and run on
-  ``batched_linear_recurrence`` (one launch), replacing the former
+  ``linear_recurrence(layout=Batched())`` (one launch), replacing the former
   sequential lax.scan of chunk steps.  The trade: chunk-start states
   (NC x H x d_head^2) are materialized instead of streamed -- comparable to
   the (T x H x d_head) activations already produced, and what buys decode
@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Batched
 from repro.models import layers as L
 
 
@@ -149,7 +150,7 @@ def rglru_forward(params, cfg, x, *, return_cache=False):
     u = L.shard(u, "batch", "seq_sp", "rnn")
     a, i, mult = _rglru_gates(params, u)
     b = (mult * i * u.astype(jnp.float32))
-    h = forge.batched_linear_recurrence(a, b)            # (B, T, w) fp32
+    h = forge.linear_recurrence(a, b, layout=Batched())  # (B, T, w) fp32
     h = h.astype(dtype)
     y = jnp.einsum("btw,wd->btd", h * jax.nn.gelu(gate_branch),
                    params["wo"].astype(dtype))
@@ -236,7 +237,7 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
     Fully chunk-parallel: the inter-chunk state recurrence
     ``S_c = exp(G_L,c) * S_{c-1} + U_c`` has a *scalar per-head* decay, so
     it is a diagonal linear recurrence along the chunk axis -- one
-    ``batched_linear_recurrence`` launch over channels = the flattened
+    batched ``linear_recurrence`` launch over channels = the flattened
     (H, dh, dh) state, instead of a sequential lax.scan of NC chunk steps.
     Everything else (masked decay attention intra-chunk, the state-feeding
     einsums) is chunk-independent and vectorizes over NC.
@@ -282,10 +283,11 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
     def chunk_states(contrib, init, chan):
         a_full = jnp.broadcast_to(
             eg[..., None], (Bb, NC, H, chan)).reshape(Bb, NC, H * chan)
-        S = forge.batched_linear_recurrence(
+        S = forge.linear_recurrence(
             a_full.astype(state_dtype),
             contrib.reshape(Bb, NC, H * chan).astype(state_dtype),
-            init.reshape(Bb, H * chan).astype(state_dtype))
+            init.reshape(Bb, H * chan).astype(state_dtype),
+            layout=Batched())
         # Chunk-START states: shift right, seed with the initial state.
         start = jnp.concatenate(
             [init.reshape(Bb, 1, H * chan).astype(S.dtype), S[:, :-1]], axis=1)

@@ -13,16 +13,16 @@ per-request Python loop.
 
 Per-request sequence scores: the batch is *ragged* -- requests finish at
 different lengths -- so the per-step chosen-token log-probs are reduced with
-``batched_mapreduce`` over a (requests, steps) grid with a per-request
-length mask (``last_scores`` / ``last_stats["seq_logprob"]``): one launch,
-one row per request, masked steps contribute the identity.
+``mapreduce(..., layout=Batched())`` over a (requests, steps) grid with a
+per-request length mask (``last_scores`` / ``last_stats["seq_logprob"]``):
+one launch, one row per request, masked steps contribute the identity.
 
 Sampling: ``temperature > 0`` with ``top_k``/``top_p`` set filters each
-step's logits through ``segmented_top_k`` over the flat per-request vocab
-stream (uniform V-sized segments -- the batched layout in segment clothing)
-plus a ``batched_scan`` nucleus cutoff over the (B, k) candidate grid -- the
-serving-side consumers of the sort family (kernels/sort.py) and the batched
-family (kernels/batched.py).
+step's logits through ``top_k(..., layout=Segmented(offsets=...))`` over
+the flat per-request vocab stream (uniform V-sized segments -- the batched
+layout in segment clothing) plus a ``scan(..., layout=Batched())`` nucleus
+cutoff over the (B, k) candidate grid -- the serving-side consumers of the
+sort family (kernels/sort.py) and the batched family (kernels/batched.py).
 """
 from __future__ import annotations
 
@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Batched, Segmented
 from repro.models import lm
 from repro.training import train_step as TS
 
@@ -107,14 +108,14 @@ class Engine:
         k = min(self.top_k if self.top_k else self.top_p_candidates, V)
         flat = logits.astype(jnp.float32).reshape(-1)
         offsets = jnp.arange(B + 1, dtype=jnp.int32) * V
-        vals, idx = forge.segmented_top_k(flat, k, offsets=offsets)
+        vals, idx = forge.top_k(flat, k, layout=Segmented(offsets=offsets))
         scaled = vals / self.temperature                   # (B, k) descending
         # Keep the shortest prefix whose mass reaches top_p (the first
         # candidate always survives: its exclusive prefix mass is 0).  The
         # (B, k) candidate grid is exactly the batched-scan layout: one
         # launch scans every request's row, whatever the batch size.
         probs = jax.nn.softmax(scaled, axis=-1)
-        cum = forge.batched_scan(alg.ADD, probs, inclusive=False)
+        cum = forge.scan(alg.ADD, probs, inclusive=False, layout=Batched())
         filtered = jnp.where(cum < self.top_p, scaled, -jnp.inf)
         choice = jax.random.categorical(key, filtered, axis=-1)
         return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0]
@@ -183,9 +184,9 @@ class Engine:
         steps = lp.shape[1]
         mask = (jnp.arange(steps, dtype=jnp.int32)[None, :]
                 < lengths[:, None]).astype(jnp.int32)
-        seq_logprob = forge.batched_mapreduce(
+        seq_logprob = forge.mapreduce(
             lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD,
-            (lp.astype(jnp.float32), mask))
+            (lp.astype(jnp.float32), mask), layout=Batched())
         self.last_scores = np.asarray(seq_logprob)
 
         self.last_stats = {

@@ -30,25 +30,37 @@ from conftest import assert_trees_close, make_operand
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Batched
 from repro.kernels import ref
 
 BACKENDS = ["pallas-interpret", "xla"]
 
-# Declared oracle coverage: operator names exercised per batched primitive.
-# Non-commutative pytree ops (mat2_mul / quaternion_mul / affine) force the
-# order-preserving kernel paths; the matrix is asserted complete by
-# tests/test_properties.py::test_conformance_matrix_coverage.
+# Declared oracle coverage, keyed by registry route (primitive@layout):
+# operator names exercised per batched route.  Non-commutative pytree ops
+# (mat2_mul / quaternion_mul / affine) force the order-preserving kernel
+# paths; test_matrix_enumerates_batched_registry below asserts the matrix
+# covers *exactly* the @batched routes of the PrimitiveDef registry, and
+# tests/test_properties.py::test_conformance_matrix_coverage checks the
+# per-route operator requirements.
 CONFORMANCE_MATRIX = {
-    "batched_scan": ["add", "max", "mat2_mul"],
-    "batched_mapreduce": ["add", "logsumexp", "quaternion_mul"],
-    "batched_matvec": ["add", "min", "mat2_mul"],
-    "batched_vecmat": ["add", "min", "mat2_mul"],
-    "batched_linear_recurrence": ["affine"],
+    "scan@batched": ["add", "max", "mat2_mul"],
+    "mapreduce@batched": ["add", "logsumexp", "quaternion_mul"],
+    "matvec@batched": ["add", "min", "mat2_mul"],
+    "vecmat@batched": ["add", "min", "mat2_mul"],
+    "linear_recurrence@batched": ["affine"],
 }
-# Primitives whose operator is fixed by construction (linear_recurrence IS
+# Routes whose operator is fixed by construction (linear_recurrence IS
 # the AFFINE scan -- a non-commutative pytree operator -- so the >=3-ops
 # requirement does not apply to it).
-FIXED_OP_PRIMITIVES = {"batched_linear_recurrence"}
+FIXED_OP_PRIMITIVES = {"linear_recurrence@batched"}
+
+
+def test_matrix_enumerates_batched_registry():
+    """The declared coverage is derived from the PrimitiveDef registry:
+    every @batched route must be fuzzed here, and nothing else may claim
+    coverage -- adding a batched route without an oracle sweep fails CI."""
+    batched = {k for k in ki.route_keys() if k.endswith("@batched")}
+    assert set(CONFORMANCE_MATRIX) == batched
 
 
 def _seed(*parts):
@@ -75,7 +87,7 @@ def _batch_shapes(block):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["batched_scan"])
+@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["scan@batched"])
 def test_batched_scan_conformance(op_name, backend):
     op = alg.STD_OPS[op_name]
     nprng = np.random.default_rng(_seed(op_name, backend))
@@ -91,7 +103,7 @@ def test_batched_scan_conformance(op_name, backend):
     tol = 1e-2 if op_name == "mat2_mul" else 1e-3
     for B, n in shapes:
         xs = make_operand(op_name, nprng, (B, n))
-        got = forge.batched_scan(op, xs, backend=backend)
+        got = forge.scan(op, xs, layout=Batched(), backend=backend)
         want = ref.ref_batched_scan(op, xs)
         assert_trees_close(got, want, rtol=tol, atol=tol,
                            err=f"batched_scan {op_name} B={B} n={n}")
@@ -103,8 +115,8 @@ def test_batched_scan_conformance(op_name, backend):
 def test_batched_scan_modes(inclusive, reverse, backend):
     nprng = np.random.default_rng(7)
     x = make_operand("add", nprng, (3, 130))
-    got = forge.batched_scan(alg.ADD, x, inclusive=inclusive,
-                             reverse=reverse, backend=backend)
+    got = forge.scan(alg.ADD, x, inclusive=inclusive,
+                     reverse=reverse, layout=Batched(), backend=backend)
     want = ref.ref_batched_scan(alg.ADD, x, inclusive=inclusive,
                                 reverse=reverse)
     assert_trees_close(got, want, rtol=1e-4, atol=1e-3)
@@ -116,7 +128,7 @@ def test_batched_scan_dtypes(dtype, backend):
     nprng = np.random.default_rng(11)
     if dtype == jnp.int32:
         x = make_operand("add", nprng, (2, 300), dtype)
-        got = forge.batched_scan(alg.ADD, x, backend=backend)
+        got = forge.scan(alg.ADD, x, layout=Batched(), backend=backend)
         want = ref.ref_batched_scan(alg.ADD, x)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
         return
@@ -124,7 +136,7 @@ def test_batched_scan_dtypes(dtype, backend):
     # near-zero partial sum of +-100 terms has no meaningful relative error
     # at 8 mantissa bits); tolerance covers association-order rounding.
     x = jnp.asarray(nprng.uniform(0.1, 1.0, (2, 300)), dtype)
-    got = forge.batched_scan(alg.ADD, x, backend=backend)
+    got = forge.scan(alg.ADD, x, layout=Batched(), backend=backend)
     want = ref.ref_batched_scan(alg.ADD, x)
     assert_trees_close(jax.tree.map(lambda l: l.astype(jnp.float32), got),
                        jax.tree.map(lambda l: l.astype(jnp.float32), want),
@@ -137,7 +149,7 @@ def test_batched_scan_dtypes(dtype, backend):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["batched_mapreduce"])
+@pytest.mark.parametrize("op_name", CONFORMANCE_MATRIX["mapreduce@batched"])
 def test_batched_mapreduce_conformance(op_name, backend):
     op = alg.STD_OPS[op_name]
     nprng = np.random.default_rng(_seed("mr", op_name, backend))
@@ -151,7 +163,7 @@ def test_batched_mapreduce_conformance(op_name, backend):
     tol = 1e-2 if op_name == "quaternion_mul" else 1e-3
     for B, n in shapes:
         xs = make_operand(op_name, nprng, (B, n))
-        got = forge.batched_mapreduce(lambda t: t, op, xs, backend=backend)
+        got = forge.mapreduce(lambda t: t, op, xs, layout=Batched(), backend=backend)
         want = ref.ref_batched_mapreduce(lambda t: t, op, xs)
         assert_trees_close(got, want, rtol=tol, atol=tol,
                            err=f"batched_mapreduce {op_name} B={B} n={n}")
@@ -162,8 +174,8 @@ def test_batched_mapreduce_mapped_dtype(backend):
     """f changes the element type (uint8 -> f32), per row."""
     nprng = np.random.default_rng(13)
     u = jnp.asarray(nprng.integers(0, 256, (3, 500)), jnp.uint8)
-    got = forge.batched_mapreduce(alg.unitfloat8_decode, alg.ADD, u,
-                                  backend=backend)
+    got = forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u,
+                          layout=Batched(), backend=backend)
     want = ref.ref_batched_mapreduce(alg.unitfloat8_decode, alg.ADD, u)
     assert_trees_close(got, want, rtol=1e-3, atol=1e-2)
 
@@ -201,7 +213,7 @@ def test_batched_matvec_conformance(case, backend):
     for B, n, p in _mv_shapes():
         A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
         x = jnp.asarray(nprng.normal(size=(B, n)) * 0.2, jnp.float32)
-        got = forge.batched_matvec(f, op, A, x, backend=backend)
+        got = forge.matvec(f, op, A, x, layout=Batched(), backend=backend)
         want = ref.ref_batched_matvec(f, op, A, x)
         assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
                            err=f"batched_matvec {case} {B}x{n}x{p}")
@@ -215,7 +227,7 @@ def test_batched_vecmat_conformance(case, backend):
     for B, n, p in _mv_shapes():
         A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
         x = jnp.asarray(nprng.normal(size=(B, p)) * 0.2, jnp.float32)
-        got = forge.batched_vecmat(f, op, A, x, backend=backend)
+        got = forge.vecmat(f, op, A, x, layout=Batched(), backend=backend)
         want = ref.ref_batched_vecmat(f, op, A, x)
         assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
                            err=f"batched_vecmat {case} {B}x{n}x{p}")
@@ -235,13 +247,14 @@ def test_batched_linear_recurrence_conformance(backend):
         b = jnp.asarray(nprng.normal(size=(B, T, C)), jnp.float32)
         h0 = jnp.asarray(nprng.normal(size=(B, C)), jnp.float32)
         for h in (None, h0):
-            got = forge.batched_linear_recurrence(a, b, h, backend=backend)
+            got = forge.linear_recurrence(a, b, h, layout=Batched(), backend=backend)
             want = ref.ref_batched_linear_recurrence(a, b, h)
             assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
                                err=f"batched_linrec {B}x{T}x{C} h0={h is not None}")
     a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, 17, 5)), jnp.float32)
     b = jnp.asarray(nprng.normal(size=(2, 17, 5)), jnp.float32)
-    got = forge.batched_linear_recurrence(a, b, reverse=True, backend=backend)
+    got = forge.linear_recurrence(a, b, reverse=True, layout=Batched(),
+                                  backend=backend)
     want = ref.ref_batched_linear_recurrence(a, b, reverse=True)
     assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
 
@@ -255,12 +268,12 @@ def test_batched_linear_recurrence_conformance(backend):
 def test_backends_agree_with_each_other():
     nprng = np.random.default_rng(29)
     x = make_operand("add", nprng, (3, 515))
-    got_i = forge.batched_scan(alg.ADD, x, backend="pallas-interpret")
-    got_x = forge.batched_scan(alg.ADD, x, backend="xla")
+    got_i = forge.scan(alg.ADD, x, layout=Batched(), backend="pallas-interpret")
+    got_x = forge.scan(alg.ADD, x, layout=Batched(), backend="xla")
     assert_trees_close(got_i, got_x, rtol=1e-5, atol=1e-4)
     m = make_operand("mat2_mul", nprng, (2, 140))
-    got_i = forge.batched_mapreduce(lambda t: t, alg.MAT2_MUL, m,
-                                    backend="pallas-interpret")
-    got_x = forge.batched_mapreduce(lambda t: t, alg.MAT2_MUL, m,
-                                    backend="xla")
+    got_i = forge.mapreduce(lambda t: t, alg.MAT2_MUL, m, layout=Batched(),
+                            backend="pallas-interpret")
+    got_x = forge.mapreduce(lambda t: t, alg.MAT2_MUL, m, layout=Batched(),
+                            backend="xla")
     assert_trees_close(got_i, got_x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,182 @@
+"""The legacy (pre-layout) names: warn-once shims over the new surface.
+
+Every ``segmented_*`` / ``batched_*`` name must (1) emit exactly one
+``DeprecationWarning`` per process -- on the first call, never again --
+(2) forward its kwargs faithfully, and (3) produce bit-identical results to
+the layout-polymorphic call it wraps.  This file is intentionally the only
+in-repo caller of the legacy names.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_operand
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Batched, Segmented
+
+OFFSETS = jnp.asarray([0, 7, 7, 40, 64], jnp.int32)
+N = 64
+
+
+def _nprng(name):
+    return np.random.default_rng(abs(hash(name)) % (2**31))
+
+
+def _keys(n=N, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=n), jnp.float32)
+
+
+# (legacy name, legacy call, equivalent new-surface call).  Operands come
+# from the conformance suite's make_operand fixtures so the shims are
+# checked on the same element types the kernels are fuzzed with.
+def _cases():
+    x2 = make_operand("add", _nprng("bs"), (3, 33))
+    m2 = make_operand("mat2_mul", _nprng("bsm"), (2, 17))
+    x1 = make_operand("add", _nprng("ss"), (N,))
+    A3 = jnp.asarray(_nprng("mv").normal(size=(2, 9, 5)), jnp.float32)
+    v2 = jnp.asarray(_nprng("mvx").normal(size=(2, 9)), jnp.float32)
+    p2 = jnp.asarray(_nprng("vmx").normal(size=(2, 5)), jnp.float32)
+    a3 = jnp.asarray(_nprng("lr").uniform(0.5, 1.0, (2, 11, 6)), jnp.float32)
+    b3 = jnp.asarray(_nprng("lrb").normal(size=(2, 11, 6)), jnp.float32)
+    h0 = jnp.asarray(_nprng("lrh").normal(size=(2, 6)), jnp.float32)
+    flags = jnp.zeros((N,), jnp.int32).at[jnp.asarray([0, 7, 40])].set(1)
+    keys = _keys()
+    vals = jnp.arange(N, dtype=jnp.int32)
+    seg = Segmented(offsets=OFFSETS)
+    mvf = lambda x, a: x * a
+    vmf = lambda a, x: a * x
+    return [
+        ("batched_scan",
+         lambda: forge.batched_scan(alg.ADD, x2, inclusive=False,
+                                    reverse=True, backend="xla"),
+         lambda: forge.scan(alg.ADD, x2, inclusive=False, reverse=True,
+                            layout=Batched(), backend="xla")),
+        ("batched_mapreduce",
+         lambda: forge.batched_mapreduce(lambda t: t, alg.MAT2_MUL, m2,
+                                         backend="xla"),
+         lambda: forge.mapreduce(lambda t: t, alg.MAT2_MUL, m2,
+                                 layout=Batched(), backend="xla")),
+        ("batched_matvec",
+         lambda: forge.batched_matvec(mvf, alg.ADD, A3, v2, backend="xla"),
+         lambda: forge.matvec(mvf, alg.ADD, A3, v2, layout=Batched(),
+                              backend="xla")),
+        ("batched_vecmat",
+         lambda: forge.batched_vecmat(vmf, alg.MIN, A3, p2, backend="xla"),
+         lambda: forge.vecmat(vmf, alg.MIN, A3, p2, layout=Batched(),
+                              backend="xla")),
+        ("batched_semiring_matvec",
+         lambda: forge.batched_semiring_matvec(alg.ARITHMETIC, A3, v2,
+                                               backend="xla"),
+         lambda: forge.semiring_matvec(alg.ARITHMETIC, A3, v2,
+                                       layout=Batched(), backend="xla")),
+        ("batched_semiring_vecmat",
+         lambda: forge.batched_semiring_vecmat(alg.ARITHMETIC, A3, p2,
+                                               backend="xla"),
+         lambda: forge.semiring_vecmat(alg.ARITHMETIC, A3, p2,
+                                       layout=Batched(), backend="xla")),
+        ("batched_linear_recurrence",
+         lambda: forge.batched_linear_recurrence(a3, b3, h0, reverse=True,
+                                                 backend="xla"),
+         lambda: forge.linear_recurrence(a3, b3, h0, reverse=True,
+                                         layout=Batched(), backend="xla")),
+        ("segmented_scan",
+         lambda: forge.segmented_scan(alg.ADD, x1, offsets=OFFSETS,
+                                      inclusive=False, backend="xla"),
+         lambda: forge.scan(alg.ADD, x1, inclusive=False, layout=seg,
+                            backend="xla")),
+        ("segmented_mapreduce",
+         lambda: forge.segmented_mapreduce(lambda v: v, alg.MAX, x1,
+                                           flags=flags, num_segments=5,
+                                           backend="xla"),
+         lambda: forge.mapreduce(lambda v: v, alg.MAX, x1, backend="xla",
+                                 layout=Segmented(flags=flags,
+                                                  num_segments=5))),
+        ("segmented_sort",
+         lambda: forge.segmented_sort(keys, offsets=OFFSETS,
+                                      descending=True, backend="xla"),
+         lambda: forge.sort(keys, descending=True, layout=seg,
+                            backend="xla")),
+        ("segmented_sort_pairs",
+         lambda: forge.segmented_sort_pairs(keys, vals, offsets=OFFSETS,
+                                            backend="xla"),
+         lambda: forge.sort_pairs(keys, vals, layout=seg, backend="xla")),
+        ("segmented_argsort",
+         lambda: forge.segmented_argsort(keys, offsets=OFFSETS,
+                                         backend="xla"),
+         lambda: forge.argsort(keys, layout=seg, backend="xla")),
+        ("segmented_top_k",
+         lambda: forge.segmented_top_k(keys, 9, offsets=OFFSETS,
+                                       largest=False, backend="xla"),
+         lambda: forge.top_k(keys, 9, largest=False, layout=seg,
+                             backend="xla")),
+    ]
+
+
+_CASES = {name: (legacy, new) for name, legacy, new in _cases()}
+
+
+@pytest.fixture
+def fresh_warn_state():
+    """Reset the warn-once bookkeeping so each test observes a first call."""
+    saved = set(forge._WARNED)
+    forge._WARNED.clear()
+    yield
+    forge._WARNED.clear()
+    forge._WARNED.update(saved)
+
+
+@pytest.mark.parametrize("name", sorted(_CASES))
+def test_legacy_name_warns_once_and_matches_new_surface(name,
+                                                        fresh_warn_state):
+    legacy, new = _CASES[name]
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        got = legacy()
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, f"{name}: expected exactly one DeprecationWarning"
+    assert name in str(deps[0].message)
+    assert "layout" in str(deps[0].message) or "Segmented" in str(
+        deps[0].message) or "Batched" in str(deps[0].message)
+
+    # Second call: silent (once per process, not once per call site).
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        got2 = legacy()
+    assert not [w for w in second
+                if issubclass(w.category, DeprecationWarning)], (
+        f"{name}: legacy shim warned twice")
+
+    # Kwargs forwarded faithfully: bit-identical to the new surface (and to
+    # its own second call -- the shim is stateless beyond the warning).
+    want = new()
+    for g, g2, w in zip(jax.tree.leaves(got), jax.tree.leaves(got2),
+                        jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g2),
+                                      err_msg=name)
+
+
+def test_every_legacy_name_is_covered():
+    """The shim list in core/primitives.py and the cases here must not
+    drift: any public segmented_*/batched_* callable gets a case."""
+    legacy = sorted(
+        n for n in dir(forge)
+        if (n.startswith("segmented_") or n.startswith("batched_"))
+        and callable(getattr(forge, n)))
+    assert legacy == sorted(_CASES), (
+        f"uncovered legacy shims: {sorted(set(legacy) ^ set(_CASES))}")
+
+
+def test_new_surface_does_not_warn():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        forge.scan(alg.ADD, jnp.arange(8, dtype=jnp.float32), backend="xla")
+        forge.mapreduce(lambda t: t, alg.ADD, jnp.ones((2, 4)),
+                        layout=Batched(), backend="xla")
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]

@@ -13,6 +13,7 @@ import pytest
 from conftest import assert_trees_close
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Segmented
 from repro.kernels import ref
 
 BACKENDS = ["xla", "pallas-interpret"]
@@ -44,8 +45,8 @@ def test_segmented_scan_add(backend, inclusive, variant):
     offs = jnp.asarray(OFFSETS, jnp.int32)
     kw = ({"offsets": offs} if variant == "offsets"
           else {"flags": _flags_from_offsets(OFFSETS, n)})
-    got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
-                               backend=backend, **kw)
+    got = forge.scan(alg.ADD, x, inclusive=inclusive,
+                     backend=backend, layout=Segmented(**kw))
     want = ref.ref_segmented_scan(alg.ADD, x, offsets=OFFSETS,
                                   inclusive=inclusive)
     assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
@@ -64,14 +65,16 @@ def test_segmented_scan_noncommutative_pytree(backend, variant):
     offs = jnp.asarray(OFFSETS, jnp.int32)
     kw = ({"offsets": offs} if variant == "offsets"
           else {"flags": _flags_from_offsets(OFFSETS, n)})
-    got = forge.segmented_scan(alg.AFFINE, (a, b), backend=backend, **kw)
+    got = forge.scan(alg.AFFINE, (a, b), backend=backend,
+                     layout=Segmented(**kw))
     want = ref.ref_segmented_scan(alg.AFFINE, (a, b), offsets=OFFSETS)
     assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
                        err=f"affine/{backend}/{variant}")
 
     q = tuple(jnp.asarray(rng.normal(size=n) * 0.1 + (1.0 if i == 0 else 0.0),
                           jnp.float32) for i in range(4))
-    got = forge.segmented_scan(alg.QUATERNION_MUL, q, backend=backend, **kw)
+    got = forge.scan(alg.QUATERNION_MUL, q, backend=backend,
+                     layout=Segmented(**kw))
     want = ref.ref_segmented_scan(alg.QUATERNION_MUL, q, offsets=OFFSETS)
     assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
                        err=f"quat/{backend}/{variant}")
@@ -83,9 +86,9 @@ def test_segmented_scan_exclusive_noncommutative(backend):
     rng = np.random.default_rng(2)
     a = jnp.asarray(rng.uniform(0.5, 1.0, n), jnp.float32)
     b = jnp.asarray(rng.normal(size=n), jnp.float32)
-    got = forge.segmented_scan(alg.AFFINE, (a, b), inclusive=False,
-                               offsets=jnp.asarray(OFFSETS, jnp.int32),
-                               backend=backend)
+    got = forge.scan(alg.AFFINE, (a, b), inclusive=False,
+                     layout=Segmented(offsets=jnp.asarray(OFFSETS, jnp.int32)),
+                     backend=backend)
     want = ref.ref_segmented_scan(alg.AFFINE, (a, b), offsets=OFFSETS,
                                   inclusive=False)
     assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=backend)
@@ -97,8 +100,9 @@ def test_segmented_mapreduce_offsets(backend, op_name):
     n = OFFSETS[-1]
     x = _ragged(3, n)
     op = alg.STD_OPS[op_name]
-    got = forge.segmented_mapreduce(
-        lambda v: v, op, x, offsets=jnp.asarray(OFFSETS, jnp.int32),
+    got = forge.mapreduce(
+        lambda v: v, op, x,
+        layout=Segmented(offsets=jnp.asarray(OFFSETS, jnp.int32)),
         backend=backend)
     want = ref.ref_segmented_mapreduce(lambda v: v, op, x, offsets=OFFSETS)
     assert got.shape == (len(OFFSETS) - 1,)
@@ -112,8 +116,8 @@ def test_segmented_mapreduce_flags_num_segments(backend):
     n = OFFSETS[-1]
     x = _ragged(4, n)
     flags = _flags_from_offsets(OFFSETS, n)   # empty segment leaves no flag
-    got = forge.segmented_mapreduce(lambda v: v, alg.MAX, x, flags=flags,
-                                    num_segments=8, backend=backend)
+    got = forge.mapreduce(lambda v: v, alg.MAX, x, backend=backend,
+                          layout=Segmented(flags=flags, num_segments=8))
     want = ref.ref_segmented_mapreduce(lambda v: v, alg.MAX, x, flags=flags,
                                        num_segments=8)
     assert got.shape == (8,)
@@ -128,8 +132,8 @@ def test_segmented_mapreduce_type_changing_map(backend):
     n = OFFSETS[-1]
     u8 = jnp.asarray(rng.integers(0, 256, n), jnp.uint8)
     offs = jnp.asarray(OFFSETS, jnp.int32)
-    got = forge.segmented_mapreduce(alg.unitfloat8_decode, alg.ADD, u8,
-                                    offsets=offs, backend=backend)
+    got = forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u8,
+                          layout=Segmented(offsets=offs), backend=backend)
     want = ref.ref_segmented_mapreduce(alg.unitfloat8_decode, alg.ADD, u8,
                                        offsets=OFFSETS)
     assert got.dtype == jnp.float32
@@ -145,8 +149,8 @@ def test_segmented_scan_multiblock(backend, inclusive):
     n = 4500   # interpret-policy block is 2048 elements -> 3 grid steps
     x = _ragged(6, n)
     offsets = jnp.asarray([0, 1, 2047, 2048, 2050, 4096, 4500], jnp.int32)
-    got = forge.segmented_scan(alg.ADD, x, offsets=offsets,
-                               inclusive=inclusive, backend=backend)
+    got = forge.scan(alg.ADD, x, layout=Segmented(offsets=offsets),
+                     inclusive=inclusive, backend=backend)
     want = ref.ref_segmented_scan(alg.ADD, x, offsets=np.asarray(offsets),
                                   inclusive=inclusive)
     assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err=backend)
@@ -156,9 +160,9 @@ def test_segmented_scan_multiblock(backend, inclusive):
 def test_single_segment_matches_flat_scan(backend):
     n = 257
     x = _ragged(7, n)
-    got = forge.segmented_scan(alg.ADD, x,
-                               offsets=jnp.asarray([0, n], jnp.int32),
-                               backend=backend)
+    got = forge.scan(alg.ADD, x,
+                     layout=Segmented(offsets=jnp.asarray([0, n], jnp.int32)),
+                     backend=backend)
     want = forge.scan(alg.ADD, x, backend=backend)
     assert_trees_close(got, want, rtol=1e-5, atol=1e-5, err=backend)
 
@@ -172,13 +176,14 @@ def test_single_segment_spanning_all_blocks(backend, inclusive):
     x = _ragged(8, n)
     for kw in ({"offsets": jnp.asarray([0, n], jnp.int32)},
                {"flags": jnp.zeros((n,), jnp.int32).at[0].set(1)}):
-        got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
-                                   backend=backend, **kw)
+        got = forge.scan(alg.ADD, x, inclusive=inclusive,
+                         backend=backend, layout=Segmented(**kw))
         want = forge.scan(alg.ADD, x, inclusive=inclusive, backend=backend)
         assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
                            err=f"{backend}/{list(kw)}")
-    got = forge.segmented_mapreduce(
-        lambda v: v, alg.ADD, x, offsets=jnp.asarray([0, n], jnp.int32),
+    got = forge.mapreduce(
+        lambda v: v, alg.ADD, x,
+        layout=Segmented(offsets=jnp.asarray([0, n], jnp.int32)),
         backend=backend)
     assert got.shape == (1,)
     np.testing.assert_allclose(np.asarray(got)[0], np.asarray(x).sum(),
@@ -195,12 +200,12 @@ def test_zero_length_input(backend, variant):
           if variant == "offsets"
           else {"flags": jnp.zeros((0,), jnp.int32)})
     for inclusive in (True, False):
-        got = forge.segmented_scan(alg.ADD, x, inclusive=inclusive,
-                                   backend=backend, **kw)
+        got = forge.scan(alg.ADD, x, inclusive=inclusive,
+                         backend=backend, layout=Segmented(**kw))
         assert jax.tree.leaves(got)[0].shape == (0,)
     mr_kw = dict(kw) if variant == "offsets" else {**kw, "num_segments": 2}
-    got = forge.segmented_mapreduce(lambda v: v, alg.MAX, x, backend=backend,
-                                    **mr_kw)
+    got = forge.mapreduce(lambda v: v, alg.MAX, x, backend=backend,
+                          layout=Segmented(**mr_kw))
     assert got.shape == (2,)
     assert np.isneginf(np.asarray(got)).all()   # identity fill
     want = ref.ref_segmented_mapreduce(lambda v: v, alg.MAX, x,
@@ -212,16 +217,17 @@ def test_zero_length_input(backend, variant):
 def test_zero_length_pytree_input(backend):
     """Zero-length non-commutative pytree elements survive the guards too."""
     a = jnp.zeros((0,), jnp.float32)
-    got = forge.segmented_scan(alg.AFFINE, (a, a),
-                               offsets=jnp.asarray([0, 0], jnp.int32),
-                               backend=backend)
+    got = forge.scan(alg.AFFINE, (a, a),
+                     layout=Segmented(offsets=jnp.asarray([0, 0], jnp.int32)),
+                     backend=backend)
     assert all(l.shape == (0,) for l in jax.tree.leaves(got))
 
 
 def test_descriptor_validation():
     x = jnp.arange(8, dtype=jnp.float32)
     with pytest.raises(ValueError):
-        forge.segmented_scan(alg.ADD, x, backend="xla")
+        forge.scan(alg.ADD, x, layout=Segmented(), backend="xla")
     with pytest.raises(ValueError):
-        forge.segmented_scan(alg.ADD, x, flags=jnp.ones(8, jnp.int32),
-                             offsets=jnp.asarray([0, 8]), backend="xla")
+        forge.scan(alg.ADD, x, backend="xla",
+                   layout=Segmented(flags=jnp.ones(8, jnp.int32),
+                                    offsets=jnp.asarray([0, 8])))

@@ -126,10 +126,10 @@ def test_single_and_full_batch_same_batched_path(setup, dispatch_spy):
 
     # The decode path runs on the batched family...  (flat scan/mapreduce
     # still legitimately appear *inside* the radix composition backing
-    # segmented_top_k -- single launches over the whole flat candidate
+    # top_k@segmented -- single launches over the whole flat candidate
     # stream, not per-request calls.)
-    assert "batched_scan" in single          # nucleus cutoff over (B, k)
-    assert "batched_mapreduce" in single     # masked per-request seq scores
-    assert "segmented_top_k" in single       # per-request candidate top-k
+    assert "scan@batched" in single          # nucleus cutoff over (B, k)
+    assert "mapreduce@batched" in single     # masked per-request seq scores
+    assert "top_k@segmented" in single       # per-request candidate top-k
     # ...and hits the identical primitive set at both batch extremes.
     assert single == full

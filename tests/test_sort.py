@@ -14,6 +14,7 @@ import pytest
 from conftest import assert_trees_close
 from repro.core import operators as alg
 from repro.core import primitives as forge
+from repro.core.layout import Segmented
 from repro.kernels import ref
 
 BACKENDS = ["xla", "pallas-interpret"]
@@ -195,11 +196,11 @@ def test_segmented_sort_and_argsort(backend, variant):
     kw = ({"offsets": jnp.asarray(OFFSETS, jnp.int32)}
           if variant == "offsets"
           else {"flags": _flags_from_offsets(OFFSETS, n)})
-    got = forge.segmented_sort(k, backend=backend, **kw)
+    got = forge.sort(k, backend=backend, layout=Segmented(**kw))
     np.testing.assert_array_equal(
         np.asarray(got), np.asarray(ref.ref_segmented_sort(k, offsets=OFFSETS)),
         err_msg=f"{backend}/{variant}")
-    ga = forge.segmented_argsort(k, backend=backend, **kw)
+    ga = forge.argsort(k, backend=backend, layout=Segmented(**kw))
     np.testing.assert_array_equal(
         np.asarray(ga),
         np.asarray(ref.ref_segmented_argsort(k, offsets=OFFSETS)),
@@ -212,8 +213,9 @@ def test_segmented_sort_pairs_floats_with_specials(backend):
     offsets = OFFSETS if backend == "xla" else [0, 7, 7, 40, 41, 170]
     k = _keys("float32", n, seed=10)
     vals = jnp.arange(n, dtype=jnp.int32)
-    ks, vs = forge.segmented_sort_pairs(
-        k, vals, offsets=jnp.asarray(offsets, jnp.int32), backend=backend)
+    ks, vs = forge.sort_pairs(
+        k, vals, layout=Segmented(offsets=jnp.asarray(offsets, jnp.int32)),
+        backend=backend)
     rk, rv = ref.ref_segmented_sort_pairs(k, vals, offsets=offsets)
     _equal_with_nans(ks, rk, err=backend)
     np.testing.assert_array_equal(np.asarray(vs), np.asarray(rv))
@@ -238,7 +240,7 @@ def test_segmented_top_k_ragged(backend, variant):
         ns = 8
         rv, ri = ref.ref_segmented_top_k(
             k, 9, flags=np.asarray(kw["flags"]), num_segments=8)
-    v, i = forge.segmented_top_k(k, 9, backend=backend, **kw)
+    v, i = forge.top_k(k, 9, backend=backend, layout=Segmented(**kw))
     assert v.shape == (ns, 9) and i.shape == (ns, 9)
     _equal_with_nans(v, rv, err=f"{backend}/{variant}")
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
@@ -257,13 +259,13 @@ def test_segmented_sort_multiblock(backend):
     n = 2600
     k = jnp.asarray(rng.integers(0, 256, n), jnp.uint8)
     offsets = jnp.asarray([0, 1, 2047, 2050, 2600], jnp.int32)
-    got = forge.segmented_sort(k, offsets=offsets, backend=backend)
+    got = forge.sort(k, layout=Segmented(offsets=offsets), backend=backend)
     np.testing.assert_array_equal(
         np.asarray(got),
         np.asarray(ref.ref_segmented_sort(k, offsets=np.asarray(offsets))))
     # one segment spanning everything == the flat sort
-    got = forge.segmented_sort(k, offsets=jnp.asarray([0, n], jnp.int32),
-                               backend=backend)
+    got = forge.sort(k, layout=Segmented(offsets=jnp.asarray([0, n], jnp.int32)),
+                     backend=backend)
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(forge.sort(k, backend=backend)))
 
@@ -271,11 +273,11 @@ def test_segmented_sort_multiblock(backend):
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_segmented_zero_length(backend):
     empty = jnp.zeros((0,), jnp.float32)
-    got = forge.segmented_sort(empty, offsets=jnp.asarray([0, 0, 0]),
-                               backend=backend)
+    got = forge.sort(empty, layout=Segmented(offsets=jnp.asarray([0, 0, 0])),
+                     backend=backend)
     assert got.shape == (0,)
-    v, i = forge.segmented_top_k(empty, 3, offsets=jnp.asarray([0, 0, 0]),
-                                 backend=backend)
+    v, i = forge.top_k(empty, 3, layout=Segmented(offsets=jnp.asarray([0, 0, 0])),
+                       backend=backend)
     assert v.shape == (2, 3) and np.isneginf(np.asarray(v)).all()
     assert (np.asarray(i) == -1).all()
 
@@ -283,10 +285,10 @@ def test_segmented_zero_length(backend):
 def test_segmented_descriptor_validation():
     k = jnp.arange(8, dtype=jnp.float32)
     with pytest.raises(ValueError):
-        forge.segmented_sort(k, backend="xla")
+        forge.sort(k, layout=Segmented(), backend="xla")
     with pytest.raises(ValueError):
-        forge.segmented_top_k(k, 2, flags=jnp.ones(8, jnp.int32),
-                              backend="xla")   # flags need num_segments
+        forge.top_k(k, 2, layout=Segmented(flags=jnp.ones(8, jnp.int32)),
+                    backend="xla")   # flags need num_segments
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import pytest
 from repro.core import operators as alg
 from repro.core import primitives as forge
 from repro.core import tuning
+from repro.core.layout import Batched, Segmented
 
 
 @pytest.fixture
@@ -24,7 +25,8 @@ def test_first_call_benchmarks_second_call_hits(tuner):
     np.testing.assert_allclose(np.asarray(y), np.cumsum(np.arange(4096)),
                                rtol=1e-5)
     assert tuner.stats["benchmarks"] == 1
-    assert tuner.stats["bench_calls"] == len(tuning.TUNABLE["scan"].candidates)
+    assert tuner.stats["bench_calls"] == len(
+        tuning.TUNABLE["scan@flat"].candidates)
 
     # Identical key (same primitive/op/dtype/shape-bucket): no re-benchmark.
     y2 = forge.scan(alg.ADD, x * 2, backend="pallas-interpret")
@@ -41,7 +43,7 @@ def test_cache_round_trips_across_tuner_instances(tuner, tmp_path):
     entry = json.load(open(path))
     assert len(entry) == 1
     (key, val), = entry.items()
-    assert key.startswith("scan|op=add|dtype=float32|n=4096|")
+    assert key.startswith("scan@flat|op=add|dtype=float32|n=4096|")
     assert "overrides" in val
 
     # A fresh tuner reading the same file performs no re-benchmarking.
@@ -63,8 +65,8 @@ def test_distinct_keys_tune_separately(tuner):
 def test_segmented_scan_is_tuned_and_correct(tuner):
     x = jnp.arange(3000, dtype=jnp.float32)
     offs = jnp.asarray([0, 100, 2500, 3000], jnp.int32)
-    got = forge.segmented_scan(alg.ADD, x, offsets=offs,
-                               backend="pallas-interpret")
+    got = forge.scan(alg.ADD, x, layout=Segmented(offsets=offs),
+                     backend="pallas-interpret")
     assert tuner.stats["benchmarks"] == 1
     want = np.concatenate([np.cumsum(np.asarray(x)[s:e])
                            for s, e in zip([0, 100, 2500], [100, 2500, 3000])])
@@ -74,7 +76,7 @@ def test_segmented_scan_is_tuned_and_correct(tuner):
 def test_explicit_policy_bypasses_tuner(tuner):
     from repro.core import intrinsics as ki
     x = jnp.arange(1024, dtype=jnp.float32)
-    impl = ki.resolve_impl("scan", "pallas-interpret")
+    impl = ki.resolve_impl("scan@flat", "pallas-interpret")
     impl(alg.ADD, x, policy=ki.resolve_tuning("interpret"))
     assert tuner.stats["benchmarks"] == 0
 
@@ -98,7 +100,7 @@ def test_corrupt_cache_re_tunes_instead_of_raising(tmp_path):
     never raise: the tuner starts empty, re-benchmarks, and the next save
     rewrites a valid file."""
     path = tmp_path / "tuning.json"
-    path.write_text('{"scan|op=add|dtype=float32|n=4096"')   # truncated
+    path.write_text('{"scan@flat|op=add|dtype=float32|n=4096"')   # truncated
     t = tuning.enable(str(path))
     try:
         x = jnp.arange(4096, dtype=jnp.float32)
@@ -132,17 +134,17 @@ def test_batched_keys_carry_batch_bucket(tuner):
     """Batched-family cache keys bucket the batch separately from the
     per-row extent, and one race covers the whole batch -- not one per row."""
     x = jnp.ones((4, 4096), jnp.float32)
-    forge.batched_scan(alg.ADD, x, backend="pallas-interpret")
+    forge.scan(alg.ADD, x, layout=Batched(), backend="pallas-interpret")
     assert tuner.stats["benchmarks"] == 1          # one race for all 4 rows
-    key = [k for k in tuner._cache if k.startswith("batched_scan|")]
+    key = [k for k in tuner._cache if k.startswith("scan@batched|")]
     assert key and "|n=4096|batch=4|" in key[0]
     # Same rows, different batch bucket: tunes separately (small batches
     # and large batches want different block policies).
-    forge.batched_scan(alg.ADD, jnp.ones((32, 4096), jnp.float32),
-                       backend="pallas-interpret")
+    forge.scan(alg.ADD, jnp.ones((32, 4096), jnp.float32),
+               layout=Batched(), backend="pallas-interpret")
     assert tuner.stats["benchmarks"] == 2
     # Same batch bucket again: pure cache hit.
-    forge.batched_scan(alg.ADD, x * 3, backend="pallas-interpret")
+    forge.scan(alg.ADD, x * 3, layout=Batched(), backend="pallas-interpret")
     assert tuner.stats["benchmarks"] == 2
     assert tuner.stats["hits"] >= 1
 
@@ -154,7 +156,7 @@ def test_sort_ladder_races_digit_width(tuner):
     k = jnp.asarray(rng.integers(0, 256, 256), jnp.uint8)
     got = forge.sort(k, backend="pallas-interpret")
     assert tuner.stats["benchmarks"] >= 1
-    key = [c for c in tuner._cache if c.startswith("sort|")]
+    key = [c for c in tuner._cache if c.startswith("sort@flat|")]
     assert key and "overrides" in tuner._cache[key[0]]
     assert set(tuner._cache[key[0]]["overrides"]) <= {"sort_digit_bits",
                                                       "nitem_scan"}

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Regenerate the primitive-registry tables in docs/primitives.md.
+
+The tables enumerate the ``PrimitiveDef`` registry (``core/intrinsics.py``):
+every (primitive, layout) route with its registered backends, validation
+rules, zero-extent behavior and tuned knobs.  The registry is the single
+source of truth -- this tool writes the markdown between the BEGIN/END
+markers, and the CI drift check (``--check``) fails when the docs and the
+registry disagree.
+
+Usage:
+    PYTHONPATH=.:src python tools/gen_primitives_doc.py           # rewrite
+    PYTHONPATH=.:src python tools/gen_primitives_doc.py --check   # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+DOC = pathlib.Path(__file__).resolve().parent.parent / "docs" / "primitives.md"
+BEGIN = ("<!-- BEGIN GENERATED: primitive registry "
+         "(tools/gen_primitives_doc.py; do not edit by hand) -->")
+END = "<!-- END GENERATED: primitive registry -->"
+
+
+def _route_validation(route) -> str:
+    rules = []
+    if route.needs_descriptor:
+        rules.append("exactly one of `flags`/`offsets`")
+    if route.needs_num_segments:
+        rules.append("`num_segments` with `flags`")
+    if route.arg_ranks:
+        rules.append("rank " + "/".join(
+            str(rank) for _, rank in route.arg_ranks))
+    if route.commutative_only:
+        rules.append("commutative op only")
+    if route.noncomm_route:
+        rules.append(f"non-commutative op reroutes via `{route.noncomm_route}`")
+    return "; ".join(rules) if rules else "—"
+
+
+def _route_zero(route) -> str:
+    if route.zero_extent is None:
+        return "composition-internal"
+    return route.zero_extent.replace("_", " ")
+
+
+def _route_knobs(route) -> str:
+    if route.tuning is None:
+        return "—"
+    knobs = sorted({k for cand in route.tuning.ladder for k in cand})
+    batch = route.tuning.dims in ("row", "trail2")
+    return "`" + "`, `".join(knobs) + "`" + (" (+batch bucket)" if batch else "")
+
+
+def generate() -> str:
+    from repro.core import intrinsics as ki
+    from repro.core import primitives as forge  # noqa: F401 (registers impls)
+
+    lines = [
+        BEGIN,
+        "",
+        "### The primitive × layout registry",
+        "",
+        "Enumerated from the `PrimitiveDef` table in `core/intrinsics.py` —",
+        "the same rows that drive dispatch, validation, zero-extent guards,",
+        "tuning keys and the conformance-matrix completeness check.",
+        "",
+        "| primitive | layout | registered backends | validation | "
+        "zero-extent | tuned knobs |",
+        "|---|---|---|---|---|---|",
+    ]
+    for pdef in ki.PRIMITIVE_DEFS.values():
+        for route in pdef.routes.values():
+            backends = ", ".join(
+                f"`{b}`" for b in ki.registered_backends(route.key))
+            lines.append(
+                f"| `{pdef.name}` | `{route.layout}` | {backends} | "
+                f"{_route_validation(route)} | {_route_zero(route)} | "
+                f"{_route_knobs(route)} |")
+    lines += [
+        "",
+        "Notes (from the registry rows):",
+        "",
+    ]
+    for pdef in ki.PRIMITIVE_DEFS.values():
+        for route in pdef.routes.values():
+            if route.notes:
+                lines.append(f"- `{route.key}` — {route.notes}.")
+    lines += ["", END]
+    return "\n".join(lines)
+
+
+def splice(text: str, block: str) -> str:
+    try:
+        head, rest = text.split(BEGIN, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(
+            f"{DOC}: BEGIN/END markers not found -- re-add\n{BEGIN}\n{END}")
+    return head + block + tail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs drift from the registry")
+    args = ap.parse_args(argv)
+    current = DOC.read_text()
+    updated = splice(current, generate())
+    if args.check:
+        if current != updated:
+            print(f"DRIFT: {DOC} is out of date with the PrimitiveDef "
+                  "registry.\nRun: PYTHONPATH=.:src python "
+                  "tools/gen_primitives_doc.py")
+            return 1
+        print(f"{DOC}: in sync with the registry")
+        return 0
+    if current == updated:
+        print(f"{DOC}: already up to date")
+    else:
+        DOC.write_text(updated)
+        print(f"{DOC}: regenerated registry tables")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+    sys.exit(main())

@@ -379,21 +379,29 @@ def ci_correctness():
           f"({time.time()-t0:.1f}s)")
 
 
-def canonical_budget_key(key: str) -> str:
-    """Map a pre-layout budget key to its primitive@layout form.
-
-    budgets.json keys are ``primitive@layout/config`` since the layout
-    redesign; the old family-name spellings (``segmented_scan/...``,
-    ``batched_scan/...``, bare ``scan/...``) are accepted for one release
-    and canonicalized here before comparison.
+def validate_budget_keys(budgets: dict, budgets_path: str) -> list[str]:
+    """Budget keys must be ``primitive@layout/config`` naming a registry
+    route.  The pre-layout spellings (``segmented_scan/...``, bare
+    ``scan/...``) were canonicalized "for one release" after the layout
+    redesign; that release has shipped, so an unknown or legacy-format key
+    is now a **hard CI error** -- a silently tolerated spelling is a budget
+    entry that silently stops being enforced.
     """
-    prim, _, rest = key.partition("/")
-    if "@" in prim:
-        return key
-    for prefix, layout in (("segmented_", "segmented"), ("batched_", "batched")):
-        if prim.startswith(prefix):
-            return f"{prim[len(prefix):]}@{layout}/{rest}"
-    return f"{prim}@flat/{rest}"
+    errors = []
+    routes = ki.route_keys()
+    for key in budgets:
+        prim, sep, rest = key.partition("/")
+        if "@" not in prim:
+            errors.append(
+                f"{key!r}: legacy pre-layout key format -- rename it to its "
+                f"primitive@layout spelling in {budgets_path}")
+        elif prim not in routes:
+            errors.append(
+                f"{key!r}: {prim!r} names no PrimitiveDef registry route "
+                f"(known: {', '.join(sorted(routes))})")
+        elif not sep or not rest:
+            errors.append(f"{key!r}: missing the /config suffix")
+    return errors
 
 
 def run_ci(out_path: str, budgets_path: str | None) -> int:
@@ -406,19 +414,13 @@ def run_ci(out_path: str, budgets_path: str | None) -> int:
     if budgets_path is None:
         return 0
     with open(budgets_path) as f:
-        raw_budgets = json.load(f)["entries"]
-    budgets = {}
-    for key, val in raw_budgets.items():
-        canon = canonical_budget_key(key)
-        if canon != key:
-            print(f"  note: legacy budget key {key!r} -> {canon!r} "
-                  "(accepted for one release; rename it in budgets.json)")
-        if canon in budgets:
-            print(f"BUDGET KEY COLLISION: {key!r} and another entry both "
-                  f"canonicalize to {canon!r} -- remove the stale spelling "
-                  f"from {budgets_path}")
-            return 1
-        budgets[canon] = val
+        budgets = json.load(f)["entries"]
+    key_errors = validate_budget_keys(budgets, budgets_path)
+    if key_errors:
+        print("\nBUDGET KEY FORMAT ERRORS:")
+        for line in key_errors:
+            print(f"  FAIL {line}")
+        return 1
     failures = []
     for key, got in sorted(entries.items()):
         budget = budgets.get(key)

@@ -373,6 +373,9 @@ class RouteDef:
     zero_extent: str | None = None
     needs_descriptor: bool = False    # Segmented: exactly one of flags/offsets
     needs_num_segments: bool = False  # Segmented flag variant: static extent
+    # Sharded: validate the mesh/axis pair and inject them as kwargs
+    # (axis_name=, mesh=) before the implementation call.
+    needs_mesh: bool = False
     tuning: TuneRecipe | None = None
     notes: str = ""                   # surfaced in the generated docs table
 
@@ -503,6 +506,17 @@ def _validate(route: RouteDef, layout, args, kwargs):
             raise ValueError(
                 f"{where}: the flags descriptor needs Segmented("
                 f"num_segments=...) -- the output extent is static")
+    if route.needs_mesh:
+        if not isinstance(layout.axis, str) or not layout.axis:
+            raise ValueError(
+                f"{where}: Sharded(axis=...) must name a mesh axis, got "
+                f"{layout.axis!r}")
+        if layout.mesh is not None:
+            names = tuple(getattr(layout.mesh, "axis_names", ()))
+            if layout.axis not in names:
+                raise ValueError(
+                    f"{where}: axis {layout.axis!r} is not an axis of the "
+                    f"mesh (axes: {names})")
     for idx, rank in route.arg_ranks:
         for leaf in jax.tree.leaves(args[idx]):
             if leaf.ndim != rank:
@@ -537,6 +551,9 @@ def dispatch(primitive: str, layout, backend: str | None,
         kwargs["offsets"] = layout.offsets
         if route.needs_num_segments:
             kwargs["num_segments"] = layout.num_segments
+    if route.needs_mesh:
+        kwargs["axis_name"] = layout.axis
+        kwargs["mesh"] = layout.mesh
     if route.zero_extent is not None:
         handled, result = _ZERO_GUARDS[route.zero_extent](route, args, kwargs)
         if handled:
@@ -588,6 +605,13 @@ define_primitive(
              needs_descriptor=True, zero_extent="passthrough",
              tuning=TuneRecipe(_NITEM_SCAN),
              notes="restarts at every segment boundary"),
+    RouteDef("scan", "sharded", data_arg=1, op_arg=0, arg_ranks=((1, 1),),
+             fixed_kwargs=(("axis", 0), ("reverse", False)),
+             needs_mesh=True, zero_extent="passthrough",
+             tuning=TuneRecipe(_NITEM_SCAN),
+             notes="local scan per shard + exclusive cross-device scan of "
+                   "per-shard carries; order-preserving, so non-commutative "
+                   "ops are valid"),
     doc="prefix scan with any associative operator")
 
 define_primitive(
@@ -611,6 +635,13 @@ define_primitive(
              notes="one output element per segment; empties yield identity; "
                    "order-preserving (segmented scan + gather), so "
                    "non-commutative ops are valid"),
+    RouteDef("mapreduce", "sharded", data_arg=2, op_arg=1,
+             commutative_only=True, fixed_kwargs=(("axis", None),),
+             needs_mesh=True, tuning=TuneRecipe(_NITEM_REDUCE),
+             notes="local reduce along leaf axis 0 + the operator's "
+                   "collective fold (psum/pmax/pmin rewrite when the monoid "
+                   "allows, all_gather fold otherwise); the cross-device "
+                   "fold requires commutativity"),
     doc="op-reduction of f(x)")
 
 define_primitive(
@@ -640,6 +671,14 @@ define_primitive(
              notes="the decode hot path; tuner keys carry a batch bucket"),
     doc="h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C)")
 
+_SHARDED_SORT_NOTES = {
+    "sort_pairs": "shard-local sort, then a splitter exchange in portable "
+                  "form (gathered sorted runs merged by cross-run rank); "
+                  "each shard keeps its slice of the global order",
+    "top_k": "per-shard top-k candidates + a k-way partial merge; result "
+             "replicated across the axis",
+}
+
 for _sort_prim, _sort_notes in (
         ("sort", "stable LSD radix; zero extents short-circuit in the "
                  "shared composition (kernels/sort.py)"),
@@ -647,12 +686,18 @@ for _sort_prim, _sort_notes in (
         ("argsort", "segmented variant returns within-segment offsets"),
         ("top_k", "extreme-first; segmented fills short segments with "
                   "identity and index -1")):
-    define_primitive(
-        _sort_prim,
+    _sort_routes = [
         RouteDef(_sort_prim, "flat", arg_ranks=((0, 1),),
                  tuning=_SORT_TUNE),
         RouteDef(_sort_prim, "segmented", arg_ranks=((0, 1),),
                  needs_descriptor=True,
                  needs_num_segments=(_sort_prim == "top_k"),
                  tuning=_SORT_TUNE, notes=_sort_notes),
-        doc=f"radix-sort family: {_sort_prim}")
+    ]
+    if _sort_prim in _SHARDED_SORT_NOTES:
+        _sort_routes.append(
+            RouteDef(_sort_prim, "sharded", arg_ranks=((0, 1),),
+                     needs_mesh=True, tuning=_SORT_TUNE,
+                     notes=_SHARDED_SORT_NOTES[_sort_prim]))
+    define_primitive(_sort_prim, *_sort_routes,
+                     doc=f"radix-sort family: {_sort_prim}")

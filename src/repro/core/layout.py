@@ -4,7 +4,7 @@ The paper's thesis is that one algorithm expressed over backend-agnostic
 abstractions serves arbitrary types and operators.  The same argument applies
 one level up: one *entry point* per primitive serves arbitrary data layouts,
 provided layout is a **value** the caller passes, not a function name.  The
-three layouts of the current matrix:
+four layouts of the current matrix:
 
 * :class:`Flat` -- one problem over the whole (leading axis of the) data.
   The default; ``forge.scan(op, xs)`` reads exactly as the paper's API.
@@ -18,13 +18,20 @@ three layouts of the current matrix:
   monotone starts).  Exactly one descriptor must be given; reductions over
   the flag variant additionally need a static ``num_segments`` (JAX shapes
   are static).
+* :class:`Sharded` -- one problem whose leading axis spans the devices of a
+  mesh axis.  The multi-device analogue of a warp shuffle is a mesh
+  collective, so the sharded routes lower to the corresponding *local*
+  route per shard plus a collective fold derived from the operator algebra
+  (``core.operators.collective_fold``).  With ``mesh=`` given the route
+  wraps itself in ``shard_map``; with ``mesh=None`` the caller is already
+  inside a ``shard_map`` over ``axis`` and passes its local shard.
 
 Every public primitive in ``core.primitives`` takes ``layout=`` and
 dispatches through the declarative ``PrimitiveDef`` registry in
 ``core.intrinsics``; which (primitive, layout) pairs exist, their validation
 rules, zero-extent behavior and tuning recipes all live in that one table.
-Adding a future layout (multi-dim, sharded, async) means adding a descriptor
-here and table rows there -- not a new family of public names.
+Adding a future layout (multi-dim, async) means adding a descriptor here
+and table rows there -- not a new family of public names.
 """
 from __future__ import annotations
 
@@ -96,6 +103,44 @@ class Segmented(Layout):
         return f"Segmented({d}=...{ns})"
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class Sharded(Layout):
+    """One problem whose leading axis is sharded over a mesh axis.
+
+    ``axis`` names the mesh axis the data's leading dimension spans.  Two
+    calling forms:
+
+    * ``Sharded(axis, mesh=mesh)`` -- the *global* form: arguments are
+      global arrays; the route shards the leading data axis over ``axis``
+      of ``mesh`` via ``shard_map`` (padding uneven remainders with the
+      operator's identity / an order sentinel, sliced back off), runs the
+      local route per shard, and composes shards with the collective fold.
+    * ``Sharded(axis)`` (``mesh=None``) -- the *in-mesh* form: the caller
+      is already inside a ``shard_map`` over ``axis`` and passes its local
+      shard; only the local compute + collective fold are emitted.  This is
+      the form consumers like ``distributed/collectives.py`` use.
+    """
+
+    kind = "sharded"
+    axis: str = "model"
+    mesh: object | None = None  # jax.sharding.Mesh in the global form
+
+    # Mesh equality is well-defined but descriptors follow the Segmented
+    # convention: compare the mesh by identity (two Sharded values are equal
+    # only when they name the same axis of the same mesh object).
+    def __eq__(self, other):
+        if not isinstance(other, Sharded):
+            return NotImplemented
+        return self.axis == other.axis and self.mesh is other.mesh
+
+    def __hash__(self):
+        return hash((self.axis, id(self.mesh)))
+
+    def describe(self) -> str:
+        m = "in-mesh" if self.mesh is None else "mesh=..."
+        return f"Sharded(axis={self.axis!r}, {m})"
+
+
 FLAT = Flat()
 
 
@@ -105,8 +150,8 @@ def as_layout(layout: Layout | None) -> Layout:
         return FLAT
     if not isinstance(layout, Layout):
         raise TypeError(
-            f"layout= must be a Layout descriptor (Flat/Batched/Segmented), "
-            f"got {layout!r}")
+            f"layout= must be a Layout descriptor "
+            f"(Flat/Batched/Segmented/Sharded), got {layout!r}")
     return layout
 
 

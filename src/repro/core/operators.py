@@ -342,6 +342,137 @@ def segmented(op: AssocOp) -> AssocOp:
 
 
 # --------------------------------------------------------------------------
+# Collective folds: the multi-device analogue of the in-tile shuffle combine.
+# A mesh axis is the device-level lane dimension, and folding an AssocOp
+# across it is the same algebraic object as tile_reduce -- so, exactly as the
+# kernels rewrite tile combines into VPU shifts, the distributed layer
+# rewrites operator folds into the native collectives (psum/pmax/pmin) when
+# the monoid structure allows, and falls back to an order-preserving
+# all_gather + local fold otherwise.  ``distributed/primitives.py`` builds
+# every @sharded route's cross-device step from this one function.
+# --------------------------------------------------------------------------
+
+_COLLECTIVE_FOLDS: dict[str, Callable[[str], Callable]] = {}
+
+
+def register_collective_fold(op_name: str):
+    """Register a collective-form rewrite for the operator named ``op_name``.
+
+    The decorated builder takes the mesh ``axis_name`` and returns a function
+    mapping one *local* element (a pytree) to the fold of all devices'
+    elements along that axis.  Rewrites must be algebraically equivalent to
+    ``functools.reduce(op, shards-in-axis-order)``.
+    """
+
+    def deco(builder):
+        _COLLECTIVE_FOLDS[op_name] = builder
+        return builder
+
+    return deco
+
+
+def has_collective_rewrite(op: AssocOp) -> bool:
+    """True when ``op`` folds via native collectives (no all_gather)."""
+    return op.name in _COLLECTIVE_FOLDS
+
+
+def _gather_fold(op: AssocOp, axis_name: str) -> Callable:
+    """Portable fallback: gather every shard's element, fold in axis order.
+
+    ``all_gather`` stacks shards along a new leading axis in axis-index
+    order, so the Python fold (static extent: the mesh axis size) preserves
+    device order -- non-commutative operators are safe here, exactly like
+    the order-preserving scan path inside the kernels.
+    """
+
+    def fold(x):
+        g = jax.tree.map(
+            lambda l: jax.lax.all_gather(l, axis_name, axis=0), x)
+        extent = jax.tree.leaves(g)[0].shape[0]
+        out = jax.tree.map(lambda l: l[0], g)
+        for i in range(1, extent):
+            out = op(out, jax.tree.map(lambda l: l[i], g))
+        return out
+
+    return fold
+
+
+def collective_fold(op: AssocOp, axis_name: str) -> Callable:
+    """Fold ``op`` across mesh axis ``axis_name``: local element -> total.
+
+    Rewrites the fold into pmax/psum/pmin collective form when the
+    operator's monoid structure allows (registered via
+    :func:`register_collective_fold`); otherwise an ``all_gather`` plus an
+    order-preserving local fold -- always algebraically the same reduction,
+    so callers never branch on the operator.
+    """
+    builder = _COLLECTIVE_FOLDS.get(op.name)
+    if builder is not None:
+        return builder(axis_name)
+    return _gather_fold(op, axis_name)
+
+
+@register_collective_fold("add")
+def _add_collective(axis_name):
+    return lambda x: jax.tree.map(
+        lambda l: jax.lax.psum(l, axis_name), x)
+
+
+@register_collective_fold("max")
+def _max_collective(axis_name):
+    return lambda x: jax.tree.map(
+        lambda l: jax.lax.pmax(l, axis_name), x)
+
+
+@register_collective_fold("min")
+def _min_collective(axis_name):
+    return lambda x: jax.tree.map(
+        lambda l: jax.lax.pmin(l, axis_name), x)
+
+
+@register_collective_fold("logsumexp")
+def _logsumexp_collective(axis_name):
+    """log(psum(exp(x - pmax x))) + pmax x, guarded for all--inf shards."""
+
+    def fold(x):
+        def one(l):
+            m = jax.lax.pmax(l, axis_name)
+            w = jnp.where(jnp.isneginf(l), 0.0, jnp.exp(l - m)).astype(l.dtype)
+            s = jax.lax.psum(w, axis_name)
+            return jnp.where(jnp.isneginf(m), m, m + jnp.log(s))
+
+        return jax.tree.map(one, x)
+
+    return fold
+
+
+@register_collective_fold("softmax_merge")
+def _softmax_merge_collective(axis_name):
+    """The distributed flash-decoding merge: m* = pmax m; w = exp(m - m*);
+    l* = psum(w l); o* = psum(w o) -- SOFTMAX_MERGE's fold in collective
+    form (``tests/test_sharded.py`` pins the equivalence to the operator
+    fold).  The ``isneginf`` guard matches the operator's combine; finite
+    mask sentinels (e.g. -1e30 with a finite m*) underflow ``exp`` to the
+    same exact zero.
+    """
+
+    def fold(part):
+        m, l, o = part
+        m_g = jax.lax.pmax(m, axis_name)
+        w = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_g)).astype(l.dtype)
+        wo = w[..., None] if o.ndim == l.ndim + 1 else w
+        # A zero-weight shard contributes exactly zero even when its o is
+        # poisoned (NaN/inf from masked garbage rows): 0 * NaN is NaN, so the
+        # product alone would leak the garbage into the psum.
+        o_w = jnp.where(wo > 0, o * wo, jnp.zeros_like(o))
+        l_g = jax.lax.psum(l * w, axis_name)
+        o_g = jax.lax.psum(o_w, axis_name)
+        return (m_g, l_g, o_g)
+
+    return fold
+
+
+# --------------------------------------------------------------------------
 # Radix-sortable key transforms: order-preserving bijections from every
 # supported key dtype onto unsigned integers of the same width, so the LSD
 # radix sort (kernels/sort.py) only ever manipulates unsigned bit patterns.

@@ -5,9 +5,12 @@ One entry point per primitive, polymorphic over data **layout**: ``scan``,
 (``sort``, ``sort_pairs``, ``argsort``, ``top_k``), ``linear_recurrence``
 and ``copy``, each taking ``layout=`` -- :class:`~repro.core.layout.Flat`
 (default), :class:`~repro.core.layout.Batched` (uniform batch on a parallel
-grid dimension) or :class:`~repro.core.layout.Segmented` (ragged contiguous
-segments of one flat stream).  Layout is a *value*, not a function name, so
-new layouts compose with every primitive instead of multiplying the API.
+grid dimension), :class:`~repro.core.layout.Segmented` (ragged contiguous
+segments of one flat stream) or :class:`~repro.core.layout.Sharded` (one
+problem whose leading axis spans the devices of a mesh axis; the route
+lowers to the local route per shard plus a collective fold derived from the
+operator algebra).  Layout is a *value*, not a function name, so new
+layouts compose with every primitive instead of multiplying the API.
 
 All algorithms are expressed exclusively through the Layer-1 registry
 (``core.intrinsics``): which (primitive, layout) routes exist, their
@@ -43,7 +46,8 @@ import jax
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import tuning as _tuning
-from repro.core.layout import FLAT, Batched, Flat, Layout, Segmented  # noqa: F401  (re-exported)
+from repro.core.layout import (  # noqa: F401  (re-exported)
+    FLAT, Batched, Flat, Layout, Segmented, Sharded)
 from repro.kernels import ops as _ops  # noqa: F401  (registers backends)
 
 _tuning.maybe_enable_from_env()  # REPRO_AUTOTUNE=1 turns on autotuned dispatch
@@ -77,6 +81,11 @@ def scan(op: alg.AssocOp, xs: Pytree, *, axis: int = 0,
       batch rides a parallel grid dimension, one launch for all rows.
     * ``Segmented(flags=... | offsets=...)``: per-segment scan over the flat
       ``(n,)`` stream; the scan restarts at every boundary.
+    * ``Sharded(axis, mesh=...)``: one scan whose stream spans the devices
+      of a mesh axis -- local scan per shard + an exclusive cross-device
+      scan of per-shard carries (order-preserving, so ``op`` need not be
+      commutative).  ``mesh=None`` means the caller is already inside a
+      ``shard_map`` over ``axis`` and passes its local shard.
     """
     return ki.dispatch("scan", layout, backend, (op, xs),
                        {"axis": axis, "inclusive": inclusive,
@@ -97,6 +106,11 @@ def mapreduce(f: Callable, op: alg.AssocOp, xs: Pytree, *, axis=None,
       needs ``Segmented(num_segments=...)``; empty segments yield identity.
       Order-preserving (segmented scan + gather), so ``op`` need not be
       commutative.
+    * ``Sharded(axis, mesh=...)``: the reduction spans the devices of a
+      mesh axis (local reduce along leaf axis 0, then the operator's
+      collective fold -- psum/pmax/pmin or the pmax+psum rewrites where the
+      monoid allows).  The cross-device fold requires a commutative ``op``;
+      the result is replicated across the axis.
     """
     return ki.dispatch("mapreduce", layout, backend, (f, op, xs),
                        {"axis": axis})
@@ -176,7 +190,11 @@ def sort_pairs(keys: jax.Array, values: Pytree, *, descending: bool = False,
                key_bits: int | None = None, layout: Layout | None = None,
                backend: str | None = None) -> tuple[jax.Array, Pytree]:
     """Stable key sort carrying an arbitrary pytree payload (leaves of
-    leading extent ``n``) through the same permutation."""
+    leading extent ``n``) through the same permutation.  Under
+    ``Sharded(axis, mesh=...)`` the stream spans a mesh axis: shard-local
+    sort, then a portable splitter exchange (gathered runs merged by
+    cross-run rank) leaves each shard holding its slice of the global
+    stable order."""
     return ki.dispatch("sort_pairs", layout, backend, (keys, values),
                        {"descending": descending, "key_bits": key_bits})
 
@@ -200,7 +218,10 @@ def top_k(keys: jax.Array, k: int, *, largest: bool = True,
     ``Segmented(...)`` the result is per-segment ``(S, k)`` values and
     within-segment indices; slots past a segment's length are filled with
     the reduction identity and index ``-1`` (the flag variant needs
-    ``Segmented(num_segments=...)``)."""
+    ``Segmented(num_segments=...)``).  Under ``Sharded(axis, mesh=...)``
+    the stream spans a mesh axis: per-shard candidates + a k-way partial
+    merge yield the global (values, global indices), replicated across the
+    axis."""
     return ki.dispatch("top_k", layout, backend, (keys, k),
                        {"largest": largest, "key_bits": key_bits})
 

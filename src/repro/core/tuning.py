@@ -83,12 +83,18 @@ def _recipe_keyer(route: "ki.RouteDef") -> Callable:
       branches on the aspect ratio, so a tall-narrow winner must never be
       replayed on a wide-short problem; batch rides its own bucket.
 
+    ``@sharded`` routes additionally key the **mesh topology** (axis name,
+    axis extent, total device count): a block policy raced on one device
+    must never be replayed as the winner for an 8-way mesh, where the
+    local extent and the collective/compute overlap are different problems.
+
     Argument indices default to the route's own ``data_arg``/``op_arg`` --
     the ones dispatch validates -- so they are declared once per row.
     """
     recipe = route.tuning
     data_arg = recipe.data_arg if recipe.data_arg is not None else route.data_arg
     op_arg = recipe.op_arg if recipe.op_arg is not None else route.op_arg
+    sharded = route.layout == "sharded"
 
     def keyer(args, kwargs):
         op_name = (recipe.op_label if recipe.op_label is not None
@@ -96,15 +102,35 @@ def _recipe_keyer(route: "ki.RouteDef") -> Callable:
         leaves = jax.tree.leaves(args[data_arg])
         lead = leaves[0]
         dtype = str(jax.numpy.result_type(lead))
+        topo = _mesh_topology(kwargs) if sharded else None
         if recipe.dims == "flat":
-            return op_name, dtype, sum(int(l.size) for l in leaves)
+            return (op_name, dtype, sum(int(l.size) for l in leaves),
+                    None, topo)
         if recipe.dims == "row":
-            return op_name, dtype, int(lead.shape[1]), int(lead.shape[0])
+            return (op_name, dtype, int(lead.shape[1]), int(lead.shape[0]),
+                    topo)
         b, d1, d2 = lead.shape
         return (op_name, dtype,
-                f"{shape_bucket(int(d1))}x{shape_bucket(int(d2))}", int(b))
+                f"{shape_bucket(int(d1))}x{shape_bucket(int(d2))}", int(b),
+                topo)
 
     return keyer
+
+
+def _mesh_topology(kwargs) -> str:
+    """Topology cache-key component for an @sharded route call.
+
+    With a mesh in hand: the sharded axis name + extent and the full mesh
+    shape.  In the in-mesh form (already inside a shard_map) the mesh object
+    is unavailable, so the key degrades to the axis name + process-wide
+    device count -- still enough to keep 1-device winners off N-device runs.
+    """
+    axis = kwargs.get("axis_name")
+    mesh = kwargs.get("mesh")
+    if mesh is not None:
+        shape = "x".join(str(s) for s in mesh.devices.shape)
+        return f"{axis}={mesh.shape[axis]}:{shape}"
+    return f"{axis}=?:d{jax.device_count()}"
 
 
 TUNABLE: dict[str, TunableSpec] = {
@@ -183,17 +209,23 @@ class Autotuner:
     # -- keys ---------------------------------------------------------------
 
     def make_key(self, primitive: str, backend: str, op_name: str,
-                 dtype: str, n, batch: int | None = None) -> str:
+                 dtype: str, n, batch: int | None = None,
+                 topo: str | None = None) -> str:
         """Cache key; ``batch`` (batched family only) gets its own bucket so
         a B=4 decode batch and a B=256 one tune independently while keeping
         one entry -- one race -- per whole batch.  ``n`` is a flat extent to
         bucket, or a pre-bucketed string for multi-dim rows (e.g.
-        ``"8192x128"``) whose aspect ratio drives block selection."""
-        platform = f"{jax.default_backend()}/{ki.detect_chip()}"
+        ``"8192x128"``) whose aspect ratio drives block selection.
+        ``topo`` (@sharded routes) pins the mesh topology, and the platform
+        component always carries the process device count -- a 1-device
+        winner must never be silently replayed on an N-device run."""
+        platform = (f"{jax.default_backend()}/{ki.detect_chip()}"
+                    f"/d{jax.device_count()}")
         batch_part = "" if batch is None else f"|batch={shape_bucket(batch)}"
+        topo_part = "" if topo is None else f"|mesh={topo}"
         n_part = n if isinstance(n, str) else shape_bucket(n)
         return (f"{primitive}|op={op_name}|dtype={dtype}"
-                f"|n={n_part}{batch_part}"
+                f"|n={n_part}{batch_part}{topo_part}"
                 f"|backend={backend}|platform={platform}")
 
     def lookup(self, key: str) -> dict | None:

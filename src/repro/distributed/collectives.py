@@ -9,9 +9,12 @@ parameter gathers piled onto that (collective term).
 Fix: shard the cache along the *sequence* axis over ``model`` and give each
 chip a partial softmax over its slice; the partials (m, l, o) form the
 ``SOFTMAX_MERGE`` monoid from the core operator algebra -- the distributed
-combine is algebraically ``mapreduce(SOFTMAX_MERGE)`` across the axis,
-implemented with one pmax + two psums (the operator's fold rewritten in
-collective form; ``tests/test_flash_decode.py`` asserts the equivalence).
+combine IS ``mapreduce(SOFTMAX_MERGE, layout=Sharded("model"))``, whose
+registered collective fold lowers to one pmax + two psums
+(``core.operators.register_collective_fold``; ``tests/test_sharded.py``
+pins the equivalence to the operator fold).  No hand-rolled collective
+remains here: the merge dispatches through the same registry route every
+other consumer uses.
 
 Per-chip traffic drops from O(L) to O(L/16) cache reads plus O(B*H*hd)
 collective bytes -- a ~16x cut of the decode memory term at the cost of a
@@ -26,6 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Sharded
 
 NEG_INF = -1e30
 
@@ -43,16 +50,25 @@ def _partial_softmax(s, v):
 
 
 def merge_partials(m, l, o, axis_name):
-    """SOFTMAX_MERGE across ``axis_name`` in collective form.
+    """SOFTMAX_MERGE folded across ``axis_name``, via the @sharded route.
 
-    Equivalent to folding operators.SOFTMAX_MERGE over the axis's shards:
+    Dispatches ``mapreduce(SOFTMAX_MERGE, layout=Sharded(axis_name))`` in
+    its in-mesh form: each device contributes its one partial (a length-1
+    stream along leaf axis 0) and the registered collective fold lowers to
     m* = pmax m; w = exp(m - m*); l* = psum(w l); o* = psum(w o).
+
+    Rows masked on **every** shard (batch-padding rows during decode) have
+    l* == 0 and an o* that may carry masked garbage (0 * NaN from poisoned
+    cache slots); dividing by the 1e-30 clamp would amplify it, so such
+    rows return explicit zeros instead.
     """
-    m_g = jax.lax.pmax(m, axis_name)
-    w = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_g))
-    l_g = jax.lax.psum(l * w, axis_name)
-    o_g = jax.lax.psum(o * w[..., None], axis_name)
-    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+    m_g, l_g, o_g = forge.mapreduce(
+        lambda t: t, alg.SOFTMAX_MERGE,
+        jax.tree.map(lambda t: t[None], (m, l, o)),
+        layout=Sharded(axis_name))
+    out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+    all_masked = m_g <= NEG_INF / 2
+    return jnp.where(all_masked[..., None], jnp.zeros_like(out), out)
 
 
 def _local_ring_update(cache_loc, new_row, slot, axis_name="model"):

@@ -28,7 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
-from repro.core.layout import Segmented
+from repro.core.layout import Segmented, Sharded
 from repro.models import layers as L
 
 
@@ -55,6 +55,15 @@ def moe_forward_sharded(params, cfg, x, mesh):
     dp_total = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
     E_loc = E // m
     T_loc = (B // dp_total) * S if B % dp_total == 0 else B * S
+    # Per-expert capacity.  The denominator is the *global* expert count on
+    # purpose: C bounds tokens **per expert id** (the `pos < C` cap below
+    # counts within one expert's run of the sorted stream), and the dispatch
+    # buffer allocates C slots for each of the E_loc local experts -- so
+    # under expert parallelism (E_loc < E) every local expert still holds up
+    # to its full even-share x capacity_factor.  Dividing by E_loc instead
+    # would inflate capacity m-fold, not fix a drop.  tests/test_sharded.py
+    # pins the E_loc != E no-drop parity at capacity_factor=1.0 with
+    # exactly-even routing.
     C = int(np.ceil(T_loc * k * cfg.capacity_factor / E))
     C = max(8, ((C + 7) // 8) * 8)
     gated = "w_gate" in params
@@ -83,11 +92,23 @@ def moe_forward_sharded(params, cfg, x, mesh):
             gates, idx = jax.lax.top_k(probs, k)
             gates = gates / jnp.maximum(jnp.sum(gates, 1, keepdims=True), 1e-9)
 
-        frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (
-            idx.size)
-        lb_loss = E * jnp.sum(frac * jnp.mean(probs, axis=0))
-        router_z = jnp.mean(jnp.square(
-            jax.scipy.special.logsumexp(logits, axis=-1)))
+        # ---- router statistics: global across the data axes, through the
+        # mapreduce@sharded route (in-mesh form).  The ADD fold lowers to
+        # the psum this replaces, but the expert-count reduction now rides
+        # the same registry route as every other consumer; global counts /
+        # mean-probs make lb_loss the whole-batch statistic rather than a
+        # mean of per-shard products.
+        def dp_mean(v):
+            for a in dp_axes:
+                v = forge.mapreduce(lambda t: t, alg.ADD, v[None],
+                                    layout=Sharded(a)) / sizes[a]
+            return v
+
+        counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+        frac = dp_mean(counts / idx.size)
+        lb_loss = E * jnp.sum(frac * dp_mean(jnp.mean(probs, axis=0)))
+        router_z = dp_mean(jnp.mean(jnp.square(
+            jax.scipy.special.logsumexp(logits, axis=-1))))
 
         # ---- local dispatch (identical math on every model rank) ----
         flat_e = idx.reshape(-1)
@@ -151,9 +172,6 @@ def moe_forward_sharded(params, cfg, x, mesh):
             out = out + jnp.einsum("tf,fd->td", hs, s_out.astype(dtype))
 
         out = jax.lax.psum(out, "model")
-        for a in dp_axes:   # aux losses: average over data shards too
-            lb_loss = jax.lax.pmean(lb_loss, a)
-            router_z = jax.lax.pmean(router_z, a)
         return (out.reshape(-1, S, D), lb_loss, router_z)
 
     dp = dp_axes if (B % dp_total == 0 and dp_total > 1) else None

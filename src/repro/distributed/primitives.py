@@ -1,0 +1,371 @@
+"""Device-spanning primitive lowerings: the ``@sharded`` routes.
+
+The paper's thesis is that a thin layer of backend-agnostic intrinsics
+(shuffles, ordered access, vectorized loads) is enough to build
+vendor-competitive primitives portably.  The multi-device analogue of a warp
+shuffle is a mesh collective, and this module is the analogue of
+``kernels/*.py`` one level up: every ``primitive@sharded`` route lowers to
+
+    the existing **local** route per shard  +  a **collective fold** derived
+    from the operator algebra (``core.operators.collective_fold``)
+
+with no new algorithmic code -- the cross-device step is the same monoid the
+in-tile combines already implement:
+
+* ``scan@sharded``      -- local scan per shard, then an exclusive
+  cross-device scan of the per-shard carries (gathered totals folded in
+  axis order, so non-commutative operators stay valid).
+* ``mapreduce@sharded`` -- local reduce along leaf axis 0, then the
+  operator's collective fold: psum/pmax/pmin (or the pmax+psum softmax /
+  logsumexp rewrites) when the monoid allows, ``all_gather`` + fold
+  otherwise.
+* ``top_k@sharded``     -- per-shard top-k candidates, then a k-way partial
+  merge of the gathered (value, global-index) candidates; tie-stability by
+  global index is preserved because shards gather in axis order.
+* ``sort_pairs@sharded`` -- shard-local sort, then a splitter exchange in
+  portable form: gathered sorted runs are merged by cross-run rank
+  (``searchsorted`` per run with the left/right side chosen by run order,
+  the collision-free merge-path tie-break), and each shard keeps its slice
+  of the global order.  The *compute* (local sort, ranking) is
+  distributed; the portable merge step gathers the full stream per device,
+  so per-device memory on that step is O(n) -- a backend with true
+  splitter exchange (ppermute of run slices between ranked splitters)
+  would replace the gather without touching the route's contract.
+
+Two calling forms, selected by the layout descriptor
+(``core.layout.Sharded``):
+
+* ``mesh=`` given -- the global form: arguments are global arrays; the
+  route wraps itself in ``shard_map`` over the named axis, padding uneven
+  leading extents with the operator's identity (scan/mapreduce) or an
+  order sentinel (sort family) and slicing the result back to size.
+* ``mesh=None`` -- the in-mesh form: the caller is already inside a
+  ``shard_map`` over the axis and passes its local shard; only the local
+  compute and the collective fold are emitted.  This is how
+  ``distributed/collectives.py`` dispatches the flash-decoding merge.
+
+Registered for all three backends in ``kernels/ops.py``; ``sub_backend``
+names the backend the *local* routes dispatch to, so ``pallas-interpret``
+exercises the real kernel bodies under the collective composition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+
+Pytree = object
+
+
+def _axis_extent(mesh, axis_name: str) -> int:
+    return int(mesh.shape[axis_name])
+
+
+def _lead(xs) -> int:
+    return jax.tree.leaves(xs)[0].shape[0]
+
+
+def _pad_with(xs: Pytree, pad: int, fill: Pytree) -> Pytree:
+    """Append ``pad`` copies of the (1,)-leading ``fill`` element."""
+    return jax.tree.map(
+        lambda l, f: jnp.concatenate(
+            [l, jnp.broadcast_to(f, (pad,) + l.shape[1:])], axis=0),
+        xs, fill)
+
+
+def _order_sentinel(dtype, key_bits, extreme: str):
+    """A key that sorts past every real key under the pinned total order.
+
+    ``max``: canonical NaN for floats (NaN ranks above +inf), the integer
+    max (capped to ``key_bits`` for unsigned small-range keys); ``min``:
+    -inf / the integer min / 0.  Ties against real extremes resolve
+    real-first because padding is appended after the stream.
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.nan if extreme == "max" else -jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    if extreme == "min":
+        return jnp.asarray(info.min, dtype)
+    if key_bits is not None and jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return jnp.asarray((1 << int(key_bits)) - 1, dtype)
+    return jnp.asarray(info.max, dtype)
+
+
+# ---------------------------------------------------------------------------
+# scan@sharded
+# ---------------------------------------------------------------------------
+
+
+def _exclusive_carry(op: alg.AssocOp, total: Pytree, axis_name: str) -> Pytree:
+    """Exclusive cross-device scan of per-shard totals, in axis order.
+
+    ``all_gather`` stacks the (1,)-leading totals in axis-index order; the
+    fold below combines exactly the shards *before* this one (a masked
+    ordered fold over the static axis extent), so the carry is correct for
+    non-commutative operators -- the distributed twin of the grid-carry
+    protocol in kernels/scan.py.
+    """
+    g = jax.tree.map(lambda l: jax.lax.all_gather(l, axis_name, axis=0),
+                     total)
+    extent = jax.tree.leaves(g)[0].shape[0]
+    rank = jax.lax.axis_index(axis_name)
+    carry = op.identity(total)
+    for i in range(extent):
+        step = op(carry, jax.tree.map(lambda l: l[i], g))
+        carry = jax.tree.map(
+            lambda s, c: jnp.where(i < rank, s, c), step, carry)
+    return carry
+
+
+def _scan_local(op, xs_loc, *, axis_name, inclusive, sub_backend, policy):
+    incl = ki.dispatch("scan", None, sub_backend, (op, xs_loc),
+                       {"axis": 0, "inclusive": True, "reverse": False,
+                        "policy": policy})
+    total = jax.tree.map(lambda l: l[-1:], incl)
+    carry = _exclusive_carry(op, total, axis_name)
+    out = op(carry, incl)
+    if not inclusive:
+        # Shift right within the shard; slot 0 is exactly the carry (the
+        # exclusive prefix of this shard's first element).
+        out = jax.tree.map(
+            lambda o, c: jnp.concatenate([c, o[:-1]], axis=0), out, carry)
+    return out
+
+
+def sharded_scan(op, xs, *, axis_name, mesh, inclusive=True,
+                 sub_backend="xla", policy=None):
+    if mesh is None:
+        return _scan_local(op, xs, axis_name=axis_name, inclusive=inclusive,
+                           sub_backend=sub_backend, policy=policy)
+    shards = _axis_extent(mesh, axis_name)
+    n = _lead(xs)
+    n_pad = -(-n // shards) * shards
+    if n_pad != n:
+        ident = op.identity(jax.tree.map(lambda l: l[:1], xs))
+        xs = _pad_with(xs, n_pad - n, ident)
+
+    def local(xs_loc):
+        return _scan_local(op, xs_loc, axis_name=axis_name,
+                           inclusive=inclusive, sub_backend=sub_backend,
+                           policy=policy)
+
+    out = shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
+                    out_specs=P(axis_name), check_rep=False)(xs)
+    if n_pad != n:
+        out = jax.tree.map(lambda l: l[:n], out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mapreduce@sharded
+# ---------------------------------------------------------------------------
+
+
+def _fold_axis0(op, vals):
+    """Balanced order-preserving fold of leaf axis 0 (any leaf ranks).
+
+    Pairs adjacent elements each round -- a re-association, never a
+    reordering, so it is exact for every associative operator including
+    mixed-rank pytree elements (e.g. SOFTMAX_MERGE's (m, l, o)) that the
+    uniform-shape tile combines cannot carry.
+    """
+    n = _lead(vals)
+    while n > 1:
+        even = n - (n % 2)
+        lo = jax.tree.map(lambda l: l[0:even:2], vals)
+        hi = jax.tree.map(lambda l: l[1:even:2], vals)
+        merged = op(lo, hi)
+        if n % 2:
+            merged = jax.tree.map(
+                lambda m, l: jnp.concatenate([m, l[even:]], axis=0),
+                merged, vals)
+        vals, n = merged, (n + 1) // 2
+    return jax.tree.map(lambda l: l[0], vals)
+
+
+def _reduce_local(op, vals_loc, *, sub_backend, policy):
+    """Reduce leaf axis 0 of the local shard, elementwise over the rest."""
+    if all(l.ndim == 1 for l in jax.tree.leaves(vals_loc)):
+        return ki.dispatch("mapreduce", None, sub_backend,
+                           (lambda v: v, op, vals_loc),
+                           {"axis": None, "policy": policy})
+    return _fold_axis0(op, vals_loc)
+
+
+def sharded_mapreduce(f, op, xs, *, axis_name, mesh, sub_backend="xla",
+                      policy=None):
+    if mesh is None:
+        part = _reduce_local(op, f(xs), sub_backend=sub_backend,
+                             policy=policy)
+        return alg.collective_fold(op, axis_name)(part)
+    shards = _axis_extent(mesh, axis_name)
+    n = _lead(xs)
+    if n == 0:
+        one = jax.eval_shape(f, jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((1,) + l.shape[1:], l.dtype), xs))
+        return op.identity(jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), one))
+    vals = f(xs)
+    n_pad = -(-n // shards) * shards
+    if n_pad != n:
+        ident = op.identity(jax.tree.map(lambda l: l[:1], vals))
+        vals = _pad_with(vals, n_pad - n, ident)
+
+    def local(vals_loc):
+        part = _reduce_local(op, vals_loc, sub_backend=sub_backend,
+                             policy=policy)
+        return alg.collective_fold(op, axis_name)(part)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
+                     out_specs=P(), check_rep=False)(vals)
+
+
+# ---------------------------------------------------------------------------
+# top_k@sharded
+# ---------------------------------------------------------------------------
+
+
+def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, sub_backend,
+                 policy):
+    n_loc = keys_loc.shape[0]
+    kk = min(k, n_loc)
+    v, i = ki.dispatch("top_k", None, sub_backend, (keys_loc, kk),
+                       {"largest": largest, "key_bits": key_bits,
+                        "policy": policy})
+    gi = i + (jax.lax.axis_index(axis_name) * n_loc).astype(i.dtype)
+    gv = jax.lax.all_gather(v, axis_name, axis=0)        # (S, kk), axis order
+    ggi = jax.lax.all_gather(gi, axis_name, axis=0)
+    shards = gv.shape[0]
+    if k > shards * n_loc:
+        raise ValueError(
+            f"top_k@sharded: need 0 <= k <= n, got k={k}, "
+            f"n={shards * n_loc}")
+    # k-way partial merge: per-shard candidates are extreme-first and
+    # tie-stable by local index; gathering in axis order makes the stable
+    # merge sort tie-stable by *global* index -- identical to the flat
+    # oracle's order.
+    mv, mi = ki.dispatch("sort_pairs", None, sub_backend,
+                         (gv.reshape(-1), ggi.reshape(-1)),
+                         {"descending": largest, "key_bits": key_bits,
+                          "policy": policy})
+    return mv[:k], mi[:k]
+
+
+def sharded_top_k(keys, k, *, axis_name, mesh, largest=True, key_bits=None,
+                  sub_backend="xla", policy=None):
+    if k == 0:
+        return keys[:0], jnp.zeros((0,), jnp.int32)
+    if mesh is None:
+        return _top_k_local(keys, k, axis_name=axis_name, largest=largest,
+                            key_bits=key_bits, sub_backend=sub_backend,
+                            policy=policy)
+    n = keys.shape[0]
+    if not 0 <= k <= n:
+        raise ValueError(f"top_k@sharded: need 0 <= k <= n, got k={k}, n={n}")
+    shards = _axis_extent(mesh, axis_name)
+    n_pad = -(-n // shards) * shards
+    if n_pad != n:
+        # Pad with the key that *loses* every comparison, so padding can
+        # only surface once all real candidates are taken (k <= n forbids
+        # that); real extremes win ties because padding is appended last.
+        sent = _order_sentinel(keys.dtype, key_bits,
+                               "min" if largest else "max")
+        keys = _pad_with(keys, n_pad - n, sent[None])
+
+    def local(keys_loc):
+        return _top_k_local(keys_loc, k, axis_name=axis_name,
+                            largest=largest, key_bits=key_bits,
+                            sub_backend=sub_backend, policy=policy)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
+                     out_specs=(P(), P()), check_rep=False)(keys)
+
+
+# ---------------------------------------------------------------------------
+# sort_pairs@sharded
+# ---------------------------------------------------------------------------
+
+
+def _sort_pairs_local(keys_loc, values_loc, *, axis_name, descending,
+                      key_bits, sub_backend, policy):
+    n_loc = keys_loc.shape[0]
+    ks, vs = ki.dispatch("sort_pairs", None, sub_backend,
+                         (keys_loc, values_loc),
+                         {"descending": descending, "key_bits": key_bits,
+                          "policy": policy})
+    # Splitter exchange, portable form.  Ranks are computed on the pinned
+    # radix bit order (descending = complemented bits); the side choice per
+    # run pair is the collision-free merge-path tie-break: equal keys in an
+    # earlier run precede equal keys in a later run, and local order breaks
+    # ties within a run -- i.e. global stability.  One gather of the sorted
+    # key runs (+ payload) crosses the wire; the rank bits are a pure local
+    # function of the gathered keys, recomputed rather than re-gathered.
+    gk = jax.lax.all_gather(ks, axis_name, axis=0)         # (S, n_loc)
+    gv = jax.tree.map(lambda l: jax.lax.all_gather(l, axis_name, axis=0), vs)
+    gb = alg.key_to_radix_bits(gk)
+    if descending:
+        gb = ~gb
+    shards = gb.shape[0]
+    rank_self = jax.lax.axis_index(axis_name)
+
+    bits_all = gb.reshape(-1)
+    run_id = jnp.repeat(jnp.arange(shards, dtype=jnp.int32), n_loc)
+    rank_all = jnp.tile(jnp.arange(n_loc, dtype=jnp.int32), shards)
+    for t in range(shards):
+        right = jnp.searchsorted(gb[t], bits_all, side="right")
+        left = jnp.searchsorted(gb[t], bits_all, side="left")
+        cnt = jnp.where(run_id > t, right, left).astype(jnp.int32)
+        rank_all = rank_all + jnp.where(run_id == t, 0, cnt)
+
+    # My output slice of the merged order: global positions
+    # [rank_self * n_loc, (rank_self + 1) * n_loc).
+    pos = rank_all - rank_self * n_loc
+    pos = jnp.where((pos >= 0) & (pos < n_loc), pos, n_loc)   # OOB -> drop
+    out_k = jnp.zeros((n_loc,), gk.dtype).at[pos].set(
+        gk.reshape(-1), mode="drop")
+    out_v = jax.tree.map(
+        lambda l: jnp.zeros((n_loc,) + l.shape[2:], l.dtype).at[pos].set(
+            l.reshape((-1,) + l.shape[2:]), mode="drop"),
+        gv)
+    return out_k, out_v
+
+
+def sharded_sort_pairs(keys, values, *, axis_name, mesh, descending=False,
+                       key_bits=None, sub_backend="xla", policy=None):
+    if mesh is None:
+        return _sort_pairs_local(keys, values, axis_name=axis_name,
+                                 descending=descending, key_bits=key_bits,
+                                 sub_backend=sub_backend, policy=policy)
+    n = keys.shape[0]
+    if n == 0:
+        return keys, values
+    shards = _axis_extent(mesh, axis_name)
+    n_pad = -(-n // shards) * shards
+    if n_pad != n:
+        # Padding sorts past every real key (ties resolve real-first), so
+        # the [:n] slice of the merged stream is exactly the real sort.
+        sent = _order_sentinel(keys.dtype, key_bits,
+                               "min" if descending else "max")
+        keys = _pad_with(keys, n_pad - n, sent[None])
+        values = jax.tree.map(
+            lambda l: jnp.concatenate(
+                [l, jnp.zeros((n_pad - n,) + l.shape[1:], l.dtype)], axis=0),
+            values)
+
+    def local(keys_loc, values_loc):
+        return _sort_pairs_local(keys_loc, values_loc, axis_name=axis_name,
+                                 descending=descending, key_bits=key_bits,
+                                 sub_backend=sub_backend, policy=policy)
+
+    out_k, out_v = shard_map(
+        local, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name), P(axis_name)), check_rep=False)(keys, values)
+    if n_pad != n:
+        out_k = out_k[:n]
+        out_v = jax.tree.map(lambda l: l[:n], out_v)
+    return out_k, out_v

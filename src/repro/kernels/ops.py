@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
+from repro.distributed import primitives as dist_k
 from repro.kernels import batched as batched_k
 from repro.kernels import copy as copy_k
 from repro.kernels import mapreduce as mapreduce_k
@@ -450,6 +451,14 @@ IMPLS: dict[str, dict[str, Any]] = {
     "argsort@segmented": _per_backend(sort_k.segmented_argsort_radix),
     "top_k@flat": _per_backend(sort_k.top_k_radix),
     "top_k@segmented": _per_backend(sort_k.segmented_top_k_radix),
+    # Device-spanning routes (distributed/primitives.py): the local route
+    # plus the operator's collective fold.  ``sub_backend`` names the
+    # backend the shard-local compute dispatches to, so pallas-interpret
+    # runs the real kernel bodies under the collective composition.
+    "scan@sharded": _per_backend(dist_k.sharded_scan),
+    "mapreduce@sharded": _per_backend(dist_k.sharded_mapreduce),
+    "sort_pairs@sharded": _per_backend(dist_k.sharded_sort_pairs),
+    "top_k@sharded": _per_backend(dist_k.sharded_top_k),
 }
 
 # The registration table and the declarative PrimitiveDef registry must

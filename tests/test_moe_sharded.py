@@ -34,10 +34,11 @@ with mesh:
         params, x)
 np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                            rtol=2e-3, atol=2e-3)
-# Aux load-balance loss is the standard per-shard estimator (mean of local
-# frac x mean-prob products), not the exact global statistic.
+# Aux load-balance loss is the whole-batch statistic (global expert counts
+# and mean-probs folded across the data axes via mapreduce@sharded), so it
+# tracks the unsharded reference closely.
 np.testing.assert_allclose(float(aux["lb_loss"]), float(ref_aux["lb_loss"]),
-                           rtol=0.05)
+                           rtol=1e-2)
 print("MOE_SHARDED_OK")
 """
 

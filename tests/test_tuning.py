@@ -149,6 +149,28 @@ def test_batched_keys_carry_batch_bucket(tuner):
     assert tuner.stats["hits"] >= 1
 
 
+def test_sharded_keys_carry_mesh_topology(tuner):
+    """@sharded cache keys pin the mesh topology (axis name + extent, mesh
+    shape) and every key's platform part carries the device count -- a
+    1-device winner is never replayed on an N-device mesh."""
+    import jax
+    from repro.core.layout import Sharded
+    mesh = jax.make_mesh((1,), ("shard",))
+    x = jnp.arange(512, dtype=jnp.float32)
+    got = forge.scan(alg.ADD, x, layout=Sharded("shard", mesh=mesh),
+                     backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(got), np.cumsum(np.arange(512)),
+                               rtol=1e-5)
+    keys = [k for k in tuner._cache if k.startswith("scan@sharded|")]
+    assert keys, list(tuner._cache)
+    assert "|mesh=shard=1:1|" in keys[0], keys[0]
+    assert "/d1" in keys[0], keys[0]   # device count in the platform part
+    # The flat route's key carries the device count too (no mesh part).
+    forge.scan(alg.ADD, x, backend="pallas-interpret")
+    flat = [k for k in tuner._cache if k.startswith("scan@flat|")]
+    assert flat and "/d1" in flat[0] and "|mesh=" not in flat[0]
+
+
 def test_sort_ladder_races_digit_width(tuner):
     """The sort family is tuned over digit width x block policy and stays
     correct under every candidate."""

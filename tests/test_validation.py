@@ -12,7 +12,7 @@ import pytest
 from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import primitives as forge
-from repro.core.layout import Batched, Flat, Segmented
+from repro.core.layout import Batched, Flat, Segmented, Sharded
 
 X = jnp.arange(8, dtype=jnp.float32)
 FLAGS = jnp.ones((8,), jnp.int32)
@@ -167,12 +167,60 @@ def test_layout_must_be_a_descriptor():
         forge.scan(alg.ADD, X, layout="batched", backend="xla")
 
 
+# ---------------------------------------------------------------------------
+# Sharded layout: mesh-aware validation.
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_axis_must_name_a_mesh_axis():
+    import jax
+    mesh = jax.make_mesh((1,), ("model",))
+    with _raises(r"scan@sharded: axis 'nope' is not an axis of the mesh "
+                 r"\(axes: \('model',\)\)"):
+        forge.scan(alg.ADD, X, layout=Sharded("nope", mesh=mesh),
+                   backend="xla")
+    with _raises(r"mapreduce@sharded: axis 'nope'"):
+        forge.mapreduce(lambda v: v, alg.ADD, X,
+                        layout=Sharded("nope", mesh=mesh), backend="xla")
+
+
+def test_sharded_axis_must_be_a_name():
+    with _raises(r"scan@sharded: Sharded\(axis=...\) must name a mesh axis"):
+        forge.scan(alg.ADD, X, layout=Sharded(axis=""), backend="xla")
+
+
+def test_sharded_mapreduce_rejects_non_commutative_op():
+    """The cross-device fold of mapreduce@sharded requires commutativity
+    (declared on its table row), unlike the order-preserving scan route."""
+    q = tuple(jnp.ones((8,)) for _ in range(4))
+    with _raises(r"mapreduce@sharded: requires a commutative operator, got "
+                 r"'quaternion_mul'"):
+        forge.mapreduce(lambda v: v, alg.QUATERNION_MUL, q,
+                        layout=Sharded("model"), backend="xla")
+
+
+def test_sharded_scan_pinned_kwargs():
+    with _raises(r"scan@sharded: reverse= is pinned"):
+        forge.scan(alg.ADD, X, reverse=True, layout=Sharded("model"),
+                   backend="xla")
+
+
+def test_sharded_unsupported_primitives_name_their_routes():
+    with _raises(r"argsort: unsupported layout 'sharded'"):
+        forge.argsort(X, layout=Sharded("model"), backend="xla")
+    with _raises(r"copy: unsupported layout 'sharded'"):
+        forge.copy(X, layout=Sharded("model"), backend="xla")
+
+
 def test_registry_routes_all_have_impls_and_validation_fields():
     """Registry sanity: every declared route resolves an implementation on
-    the portable backend, and segmented routes all declare the descriptor
-    requirement (the rule the uniform errors above come from)."""
+    the portable backend, segmented routes all declare the descriptor
+    requirement, and sharded routes all declare the mesh requirement (the
+    rules the uniform errors above come from)."""
     for route in ki.iter_routes():
         assert ki.resolve_impl(route.key, "xla") is not None
         if route.layout == "segmented":
             assert route.needs_descriptor
+        if route.layout == "sharded":
+            assert route.needs_mesh
     assert ki.get_route("scan", Flat().kind).key == "scan@flat"

@@ -197,27 +197,52 @@ def init_gqa_cache(cfg, batch, cache_len, is_local, dtype=jnp.bfloat16):
     }
 
 
+def is_vector_pos(pos) -> bool:
+    """True when ``pos`` is a per-row (B,) position vector.
+
+    The serving engine's continuous-batching decode loop tracks one position
+    per live batch slot (requests are admitted and evicted independently, so
+    the batch is never position-aligned); the legacy padded path keeps the
+    scalar form.  Scalar and vector paths are kept separate so the scalar
+    lowering stays byte-for-byte what it was.
+    """
+    return getattr(pos, "ndim", 0) == 1
+
+
 def gqa_decode(params, cfg, x, cache, pos, *, is_local):
-    """One-token decode.  x: (B,1,D); pos: scalar current position."""
+    """One-token decode.  x: (B,1,D); pos: scalar position, or a (B,)
+    per-slot position vector (continuous batching: every row of the batch
+    sits at its own depth in its own cache slot)."""
     dtype = x.dtype
     B = x.shape[0]
     K, H, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
-    positions = jnp.full((1,), pos, jnp.int32)
+    vec = is_vector_pos(pos)
+    positions = (pos.astype(jnp.int32)[:, None] if vec
+                 else jnp.full((1,), pos, jnp.int32))
     q, k, v = _project_qkv(params, cfg, x, positions, dtype, is_local)
     Lc = cache["k"].shape[1]
     slot = pos % Lc
     slot_idx = jnp.arange(Lc)
+    qpos = pos[:, None] if vec else pos          # broadcasts to (B, Lc) / (Lc,)
     if is_local:
         # Slot s holds absolute position pos - ((pos - s) mod Lc); valid if >= 0.
-        slot_pos = pos - jnp.mod(pos - slot_idx, Lc)
+        slot_pos = qpos - jnp.mod(qpos - slot_idx, Lc)
         key_valid = slot_pos >= 0
     else:
-        key_valid = slot_idx <= pos
+        key_valid = slot_idx <= qpos
     rules = L.current_rules()
     _mesh = rules.get("_mesh") if rules else None
     _msize = (dict(zip(_mesh.axis_names, _mesh.devices.shape)).get("model", 1)
               if _mesh is not None else 1)
-    if rules and rules.get("decode_kv_shard") and _mesh is not None \
+    if vec:
+        # Per-row ring-slot scatter; the flash-decode sharded path is
+        # scalar-pos only (its owner-shard cache update keys on one slot).
+        bidx = jnp.arange(B)
+        kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        out = decode_attention(q, kc, vc, key_valid=key_valid,
+                               softcap=cfg.attn_softcap)
+    elif rules and rules.get("decode_kv_shard") and _mesh is not None \
             and Lc % _msize == 0:
         # Flash-decoding: cache sequence sharded over "model", partial
         # softmaxes merged with the SOFTMAX_MERGE algebra, and the cache
@@ -372,24 +397,45 @@ def init_mla_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
 
 
 def mla_decode(params, cfg, x, cache, pos):
-    """Absorbed decode: attention entirely in the compressed latent space."""
+    """Absorbed decode: attention entirely in the compressed latent space.
+
+    ``pos`` may be a scalar (aligned batch) or a (B,) per-slot vector
+    (continuous batching)."""
     dtype = x.dtype
     B = x.shape[0]
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    positions = jnp.full((1,), pos, jnp.int32)
+    vec = is_vector_pos(pos)
+    positions = (pos.astype(jnp.int32)[:, None] if vec
+                 else jnp.full((1,), pos, jnp.int32))
     q_nope, q_rope = _mla_q(params, cfg, x, positions, dtype)   # (B,1,H,*)
     ckv_new, krope_new = _mla_ckv(params, cfg, x, positions, dtype)
     # Absorb w_uk into q: q_abs[b,1,h,r] = sum_n q_nope[b,1,h,n] w_uk[r,h,n]
     q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"].astype(dtype))
     scale = 1.0 / np.sqrt(nd + rd)
-    valid = jnp.arange(cache["ckv"].shape[1]) <= pos
+    Lc = cache["ckv"].shape[1]
+    valid = (jnp.arange(Lc)[None, :] <= pos[:, None] if vec
+             else jnp.arange(Lc) <= pos)
     rules = L.current_rules()
     _mesh = rules.get("_mesh") if rules else None
     _msize = (dict(zip(_mesh.axis_names, _mesh.devices.shape)).get("model", 1)
               if _mesh is not None else 1)
-    if rules and rules.get("decode_mla_shard") and _mesh is not None \
+    if vec:
+        bidx = jnp.arange(B)
+        ckv_c = cache["ckv"].at[bidx, pos % Lc].set(
+            ckv_new[:, 0].astype(cache["ckv"].dtype))
+        kr_c = cache["krope"].at[bidx, pos % Lc].set(
+            krope_new[:, 0].astype(cache["krope"].dtype))
+        s = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                        ckv_c.astype(jnp.float32)) +
+             jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                        kr_c.astype(jnp.float32))) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p.astype(jnp.float32),
+                         ckv_c.astype(jnp.float32))  # (B,1,H,kvr)
+    elif rules and rules.get("decode_mla_shard") and _mesh is not None \
             and cache["ckv"].shape[1] % _msize == 0:
         # Flash-decoding in the compressed latent space: cache sequence
         # sharded over "model"; q gathered (tiny at decode); cache update

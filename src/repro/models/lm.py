@@ -284,14 +284,17 @@ def init_caches(cfg, batch, cache_len, dtype=jnp.bfloat16):
 
 
 def decode_step(params, cfg, caches, tokens, pos):
-    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32.
+    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32 or a (B,)
+    per-slot position vector (continuous batching: each batch row advances
+    independently through its own cache slot -- see serving/engine.py).
 
     For enc-dec models, cross K/V caches must have been built by prefill.
     Returns (logits (B, vocab), new_caches).
     """
     dtype = cfg.activation_dtype
     h = L.embed(params["embed"], tokens, cfg.embed_scale, dtype)
-    positions = jnp.full((1,), pos, jnp.int32)
+    positions = (pos.astype(jnp.int32)[:, None] if getattr(pos, "ndim", 0)
+                 else jnp.full((1,), pos, jnp.int32))
     h, new_caches, _ = _run_stack(params["decoder"], _dec_spec(cfg), cfg, h,
                                   positions, mode="decode", caches=caches,
                                   pos=pos)

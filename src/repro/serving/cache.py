@@ -1,0 +1,158 @@
+"""Slot-indexed decode cache: per-request paged/ring state + CSR accounting.
+
+The continuous-batching engine keeps ONE device-resident cache pytree for
+the whole batch (the same ``lm.init_caches`` tree the padded engine uses)
+and treats its batch axis as an array of *slots*: a request owns a slot from
+admission to eviction, and every layer's state for that request -- KV rings
+for attention layers, O(1) recurrent states, conv tails -- lives at that
+slot index.  This module is the address layer:
+
+* :func:`scatter_slot` writes a freshly prefilled single-request cache into
+  one slot of the live tree (handling the ``units`` stacking, whose leading
+  axis is the layer axis, not the batch axis);
+* :func:`poison_slot` overwrites a freed slot with a sentinel value -- used
+  by the stale-state-bleed tests (a recycled slot must behave exactly like a
+  fresh engine, so tests poison on eviction and diff the outputs) and
+  available as a debugging mode;
+* :func:`ring_slot` is the ring-buffer address map shared with
+  ``attention.gqa_decode`` (slot = pos mod window), kept here so the
+  wraparound tests pin the exact arithmetic the kernels use;
+* :class:`SlotLedger` tracks ragged per-slot lengths on the host and renders
+  them as the CSR ``offsets`` descriptor of the ``Segmented`` layout -- the
+  engine's own docstring promise that ragged per-request state is "a
+  descriptor change, not a new code path";
+* :func:`compact_ragged` drains ragged per-slot output buffers into one
+  flat stream + CSR offsets, with the exclusive +scan of lengths running on
+  ``core.primitives.scan`` (the same primitive the MoE dispatch uses for
+  its CSR construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Flat
+
+
+def _update(live_leaf, single_leaf, slot, axis):
+    return jax.lax.dynamic_update_slice_in_dim(
+        live_leaf, single_leaf.astype(live_leaf.dtype), slot, axis=axis)
+
+
+def scatter_slot(live, single, slot):
+    """Write a batch=1 cache tree ``single`` into ``slot`` of ``live``.
+
+    ``live`` is the full-batch decode cache (leaves lead with the slot axis;
+    ``units`` leaves lead with the layer axis, slot axis second -- the
+    ``lax.scan``-stacked layout of ``lm._stack_cache``).  ``slot`` may be a
+    traced scalar, so admission runs inside one jitted program.
+    """
+    out = dict(live)
+    for part in ("prefix", "suffix"):
+        out[part] = jax.tree.map(
+            lambda lv, sg: _update(lv, sg, slot, 0), live[part], single[part])
+    out["units"] = jax.tree.map(
+        lambda lv, sg: _update(lv, sg, slot, 1), live["units"], single["units"])
+    return out
+
+
+def poison_slot(live, slot, value=float("nan")):
+    """Overwrite every leaf of ``slot``'s state with ``value``.
+
+    Freed-slot hygiene check: if any downstream compute ever reads a freed
+    slot's state, a NaN poison turns the silent stale-read into a loud one.
+    Integer leaves get the truncated value (NaN -> large sentinel via -1).
+    """
+    def poison(leaf, axis):
+        shape = list(leaf.shape)
+        shape[axis] = 1
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            fill = jnp.full(shape, value, leaf.dtype)
+        else:
+            fill = jnp.full(shape, -1, leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, fill, slot, axis=axis)
+
+    out = dict(live)
+    for part in ("prefix", "suffix"):
+        out[part] = jax.tree.map(lambda l: poison(l, 0), live[part])
+    out["units"] = jax.tree.map(lambda l: poison(l, 1), live["units"])
+    return out
+
+
+def ring_slot(pos, window: int):
+    """Ring-buffer slot of absolute position ``pos`` in a ``window`` cache.
+
+    This is the address map ``attention.gqa_decode`` (local layers) and the
+    engine's position bookkeeping both use; ``pos`` may be scalar or array.
+    """
+    return pos % window
+
+
+def slot_position(slot_idx, pos, window: int):
+    """Absolute position currently held by ring slot ``slot_idx`` when the
+    writer is at ``pos`` (negative: slot not yet written)."""
+    return pos - (pos - slot_idx) % window
+
+
+class SlotLedger:
+    """Host-side ragged length accounting for the live slots.
+
+    One integer length per slot (tokens currently resident in the slot's
+    cache); rendered on demand as the CSR ``offsets`` descriptor that the
+    ``Segmented(offsets=...)`` layout consumes.  The ledger is pure host
+    bookkeeping -- it never forces a device sync.
+    """
+
+    def __init__(self, num_slots: int, cache_len: int):
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.lengths = np.zeros(num_slots, np.int64)
+
+    def occupy(self, slot: int, length: int):
+        if not 0 <= length <= self.cache_len:
+            raise ValueError(
+                f"slot {slot}: length {length} outside [0, {self.cache_len}]")
+        self.lengths[slot] = length
+
+    def advance(self, slot: int, by: int = 1):
+        self.lengths[slot] = min(self.lengths[slot] + by, self.cache_len)
+
+    def free(self, slot: int):
+        self.lengths[slot] = 0
+
+    def offsets(self) -> jax.Array:
+        """CSR offsets (num_slots + 1,) int32 -- the Segmented descriptor."""
+        return jnp.asarray(
+            np.concatenate([[0], np.cumsum(self.lengths)]), jnp.int32)
+
+    def segment_of(self, slot: int) -> tuple[int, int]:
+        """[start, end) of ``slot``'s segment in the flat CSR stream."""
+        start = int(self.lengths[:slot].sum())
+        return start, start + int(self.lengths[slot])
+
+
+def compact_ragged(buf, counts):
+    """Drain ragged per-slot rows into (flat stream, CSR offsets).
+
+    ``buf``: (B, T) per-slot buffers; ``counts``: (B,) valid prefix lengths.
+    Returns ``(flat, offsets)`` with ``flat[offsets[b]:offsets[b+1]] ==
+    buf[b, :counts[b]]`` -- the CSR compaction pattern (exclusive +scan of
+    counts = segment starts, then a gather), with the scan on the library's
+    own primitive.  Host-side drain helper: runs eagerly on small arrays.
+    """
+    B, T = buf.shape
+    counts = jnp.asarray(counts, jnp.int32)
+    incl = forge.scan(alg.ADD, counts, layout=Flat())        # (B,) inclusive
+    starts = incl - counts                                   # exclusive form
+    total = int(incl[-1]) if B else 0
+    offsets = jnp.concatenate(
+        [starts.astype(jnp.int32), jnp.asarray([total], jnp.int32)])
+    # Gather: flat[k] = buf[b, k - starts[b]] for k in [starts[b], incl[b]).
+    seg = jnp.searchsorted(incl, jnp.arange(total, dtype=jnp.int32),
+                           side="right").astype(jnp.int32)
+    col = jnp.arange(total, dtype=jnp.int32) - starts[seg]
+    flat = buf[seg, col]
+    return flat, offsets

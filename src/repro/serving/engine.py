@@ -1,35 +1,50 @@
-"""Batched serving engine: prefill + decode with KV / recurrent-state caches.
+"""Serving engine: continuous batching with a device-resident decode loop.
 
-Requests are padded to a fixed batch and right-aligned to a common prompt
-length (static shapes => one compiled prefill + one compiled decode step);
-finished sequences are masked out.  For the recurrent/hybrid archs the
-"cache" is O(1) state + ring-buffered local-attention windows, which is what
-makes the ``long_500k`` serving shape feasible.
+Two execution paths share one model, one sampler and one RNG discipline:
 
-The decode hot path is *batch-native*: every per-request quantity is
-computed by one grid-batched primitive launch over the whole batch
-(kernels/batched.py), never by a ``vmap`` of per-request 1-D calls or a
-per-request Python loop.
+**Continuous (the serving path, ``generate`` / ``serve``)** -- a host-side
+FIFO scheduler (serving/scheduler.py) admits requests into live batch
+*slots*; each admission prefilles the request alone at its exact prompt
+length and scatters the resulting caches into its slot (serving/cache.py).
+Decode then runs **on device** as one ``lax.while_loop`` whose carry holds
+the caches, per-slot positions, sampled tokens, EOS/length state and the
+output buffers -- between prefill and completion there is *zero* host<->
+device token traffic: the all-done predicate is a ``mapreduce`` over the
+active flags, EOS masking and per-slot length tracking are elementwise over
+the slot axis, and per-request ``seq_logprob`` is a masked
+``mapreduce(layout=Batched())`` over the (slots, steps) log-prob buffer.
+Slots free as requests hit EOS / ``max_new_tokens``; the scheduler recycles
+them for waiting arrivals (open-loop traffic), so the batch is continuously
+full instead of padded to the slowest request.
 
-Per-request sequence scores: the batch is *ragged* -- requests finish at
-different lengths -- so the per-step chosen-token log-probs are reduced with
-``mapreduce(..., layout=Batched())`` over a (requests, steps) grid with a
-per-request length mask (``last_scores`` / ``last_stats["seq_logprob"]``):
-one launch, one row per request, masked steps contribute the identity.
+**Padded (the reference oracle, ``generate_padded``)** -- the original
+fixed-batch host loop: one prefill over the left-padded batch, one decode
+dispatch + host sync per token.  It stays as the differential oracle for the
+parity suite (tests/test_serving_parity.py): same requests, same seeds =>
+identical token streams.
+
+Cross-path determinism is anchored in counter-based sampling keys: the key
+for request ``r``'s ``j``-th token is ``fold_in(fold_in(base, seed_r), j)``
+-- a pure function of (engine seed, request seed, token index), independent
+of batch composition, admission order, or which engine runs it.  Batch rows
+never mix inside the model (attention/recurrence are row-local), so a
+request's stream depends only on its own prompt + seed; that is what makes
+continuous-vs-padded parity exact and staggered admission safe.
 
 Sampling: ``temperature > 0`` with ``top_k``/``top_p`` set filters each
 step's logits through ``top_k(..., layout=Segmented(offsets=...))`` over
 the flat per-request vocab stream (uniform V-sized segments -- the batched
-layout in segment clothing) plus a ``scan(..., layout=Batched())`` nucleus
-cutoff over the (B, k) candidate grid -- the serving-side consumers of the
-sort family (kernels/sort.py) and the batched family (kernels/batched.py).
+layout in segment clothing; a future ragged/per-request vocab mask is a
+descriptor change, not a new code path) plus a ``scan(..., layout=
+Batched())`` nucleus cutoff over the (B, k) candidate grid.  These run
+*inside* the while-loop body -- the whole decode hot path, sampler
+included, lives in the compiled layer.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +52,10 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
-from repro.core.layout import Batched, Segmented
+from repro.core.layout import Batched, Flat, Segmented
 from repro.models import lm
+from repro.serving import cache as CA
+from repro.serving.scheduler import Scheduler
 from repro.training import train_step as TS
 
 
@@ -47,12 +64,76 @@ class Request:
     prompt: list          # token ids
     max_new_tokens: int = 16
     eos_id: int = -1      # -1: never stops early
+    # Per-request sampling seed; None = the engine assigns the submission
+    # index.  The j-th sampled token uses fold_in(fold_in(base, seed), j),
+    # so a request's stream is reproducible under any batching/scheduling.
+    seed: int | None = None
+
+
+# ---------------------------------------------------------------------------
+# Sampling (shared by both paths; all batched, no per-request host loops)
+# ---------------------------------------------------------------------------
+
+
+def request_step_keys(base_key, seeds, steps):
+    """(B,) per-row keys: fold_in(fold_in(base, seed_b), step_b)."""
+    def fold(s, t):
+        return jax.random.fold_in(jax.random.fold_in(base_key, s), t)
+
+    return jax.vmap(fold)(seeds.astype(jnp.uint32), steps.astype(jnp.uint32))
+
+
+def chosen_logprobs(logits, tok):
+    """log p of each batch row's sampled token under this step's logits."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+
+
+def sample_tokens(base_key, logits, seeds, steps, *, temperature, top_k,
+                  top_p, top_p_candidates):
+    """Sample one token per batch row.  Returns (B,) int32.
+
+    Greedy when ``temperature <= 0``; otherwise per-row Gumbel-argmax with
+    counter-based keys (see module docstring), filtered through the
+    segmented top-k / batched nucleus-cutoff primitives when configured.
+    """
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = request_step_keys(base_key, seeds, steps)
+    B, V = logits.shape
+    if top_k or top_p < 1.0:
+        k = min(top_k if top_k else top_p_candidates, V)
+        flat = logits.astype(jnp.float32).reshape(-1)
+        offsets = jnp.arange(B + 1, dtype=jnp.int32) * V
+        vals, idx = forge.top_k(flat, k, layout=Segmented(offsets=offsets))
+        scaled = vals / temperature                   # (B, k) descending
+        # Keep the shortest prefix whose mass reaches top_p (the first
+        # candidate always survives: its exclusive prefix mass is 0).  The
+        # (B, k) candidate grid is exactly the batched-scan layout: one
+        # launch scans every request's row, whatever the batch size.
+        probs = jax.nn.softmax(scaled, axis=-1)
+        cum = forge.scan(alg.ADD, probs, inclusive=False, layout=Batched())
+        filtered = jnp.where(cum < top_p, scaled, -jnp.inf)
+        g = jax.vmap(lambda kk: jax.random.gumbel(kk, (k,), jnp.float32))(keys)
+        choice = jnp.argmax(filtered + g, axis=-1)
+        return jnp.take_along_axis(
+            idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
+    g = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(keys)
+    return jnp.argmax(logits.astype(jnp.float32) / temperature + g,
+                      axis=-1).astype(jnp.int32)
+
+
+def _has_global_attn(cfg) -> bool:
+    kinds = tuple(cfg.prefix) + tuple(cfg.unit) + tuple(cfg.suffix)
+    return any(k not in ("attn_local", "rglru", "mlstm", "slstm")
+               for k in kinds)
 
 
 class Engine:
     def __init__(self, cfg, mesh, params, *, cache_len: int, batch_size: int,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
-                 top_p_candidates: int = 64, seed: int = 0):
+                 top_p_candidates: int = 64, seed: int = 0,
+                 max_new_cap: int | None = None, poison_on_evict: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.params = params
@@ -62,13 +143,25 @@ class Engine:
         self.top_k = top_k
         self.top_p = top_p
         self.top_p_candidates = top_p_candidates
-        self.key = jax.random.PRNGKey(seed)
+        self.max_new_cap = max_new_cap or cache_len
+        self.poison_on_evict = poison_on_evict
+        self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
             TS.make_prefill_step(cfg, mesh, cache_len) if mesh is not None
             else functools.partial(self._plain_prefill, cache_len=cache_len))
         self._decode = jax.jit(
             TS.make_decode_step(cfg, mesh) if mesh is not None
             else lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos))
+        self._sample = functools.partial(
+            sample_tokens, temperature=self.temperature, top_k=self.top_k,
+            top_p=self.top_p, top_p_candidates=self.top_p_candidates)
+        self._admit_fn = jax.jit(self._admit_impl)
+        self._loop_fn = {
+            stop_on_free: jax.jit(functools.partial(
+                self._loop_impl, stop_on_free=stop_on_free))
+            for stop_on_free in (False, True)}
+        self.last_stats: dict = {}
+        self.last_scores = np.zeros((0,), np.float32)
 
     def _plain_prefill(self, params, batch, *, cache_len):
         kwargs = {}
@@ -79,71 +172,312 @@ class Engine:
         return lm.prefill(params, self.cfg, batch["tokens"],
                           cache_len=cache_len, **kwargs)
 
-    def _sample(self, logits):
-        if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self.key, sub = jax.random.split(self.key)
-        if self.top_k or self.top_p < 1.0:
-            return self._topk_topp_sample(sub, logits)
-        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+    def _make_batch(self, toks: np.ndarray) -> dict:
+        cfg = self.cfg
+        B, plen = toks.shape
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.is_encdec:
+            batch["src_embeds"] = jnp.zeros((B, plen, cfg.d_model), jnp.float32)
+        if cfg.num_prefix_embeds:
+            batch["vision_embeds"] = jnp.zeros(
+                (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+        return batch
 
-    def _topk_topp_sample(self, key, logits):
-        """Top-k / nucleus sampling via the segmented sort primitives.
+    # -----------------------------------------------------------------------
+    # Continuous-batching path
+    # -----------------------------------------------------------------------
 
-        The decode batch is treated as one flat stream of per-request vocab
-        segments (CSR offsets -- the same descriptors the seq-logprob
-        reduction uses, so a future ragged/per-request vocab mask is a
-        descriptor change, not a new code path).  ``segmented_top_k`` returns
-        each request's k highest logits descending plus their within-segment
-        indices, which *are* the vocab ids; the nucleus filter is then an
-        exclusive +scan of the candidate probabilities along the k axis.
+    def _fresh_state(self) -> dict:
+        """Device-resident engine state: caches + per-slot control arrays.
 
-        With ``top_p`` alone, the nucleus is drawn from the
-        ``top_p_candidates`` highest-probability tokens rather than all V
-        -- the standard serving approximation that keeps the per-step sort
-        bounded (tokens beyond that set carry negligible mass for any
-        practical ``top_p``); raise ``top_p_candidates`` to widen it.
+        The cache tree is shaped/dtyped via ``eval_shape`` of the prefill
+        (batched to ``batch_size``) so slot scatters are always exact-dtype
+        -- mixed-precision caches (f32 recurrent states riding bf16 KV) get
+        no silent casts.
         """
-        B, V = logits.shape
-        k = min(self.top_k if self.top_k else self.top_p_candidates, V)
-        flat = logits.astype(jnp.float32).reshape(-1)
-        offsets = jnp.arange(B + 1, dtype=jnp.int32) * V
-        vals, idx = forge.top_k(flat, k, layout=Segmented(offsets=offsets))
-        scaled = vals / self.temperature                   # (B, k) descending
-        # Keep the shortest prefix whose mass reaches top_p (the first
-        # candidate always survives: its exclusive prefix mass is 0).  The
-        # (B, k) candidate grid is exactly the batched-scan layout: one
-        # launch scans every request's row, whatever the batch size.
-        probs = jax.nn.softmax(scaled, axis=-1)
-        cum = forge.scan(alg.ADD, probs, inclusive=False, layout=Batched())
-        filtered = jnp.where(cum < self.top_p, scaled, -jnp.inf)
-        choice = jax.random.categorical(key, filtered, axis=-1)
-        return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0]
+        B, T = self.batch_size, self.max_new_cap
+        _, cache_shape = jax.eval_shape(
+            self._prefill, self.params,
+            self._make_batch(np.zeros((B, 1), np.int32)))
+        return {
+            "caches": jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), cache_shape),
+            "tok": jnp.zeros((B,), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "emitted": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), bool),
+            "out": jnp.zeros((B, T), jnp.int32),
+            "logps": jnp.zeros((B, T), jnp.float32),
+            "seeds": jnp.zeros((B,), jnp.int32),
+            "max_new": jnp.zeros((B,), jnp.int32),
+            "eos": jnp.full((B,), -1, jnp.int32),
+        }
 
-    @staticmethod
-    @jax.jit
-    def _chosen_logprobs(logits, tok):
-        """log p of each batch row's sampled token under this step's logits."""
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        return jnp.take_along_axis(
-            logp, jnp.asarray(tok)[:, None], axis=-1)[:, 0]
+    def _admit_impl(self, state, caches1, logits1, slot, seed, max_new, eos,
+                    pos0):
+        """Scatter a prefilled request into ``slot`` + sample its first token
+        -- all on device; the token never visits the host."""
+        T = self.max_new_cap
+        tok1 = self._sample(self._base_key, logits1, seed[None],
+                            jnp.zeros((1,), jnp.int32))[0]
+        lp1 = chosen_logprobs(logits1, tok1[None])[0]
+        st = dict(state)
+        st["caches"] = CA.scatter_slot(state["caches"], caches1, slot)
+        st["tok"] = state["tok"].at[slot].set(tok1)
+        st["pos"] = state["pos"].at[slot].set(pos0)
+        st["emitted"] = state["emitted"].at[slot].set(1)
+        st["active"] = state["active"].at[slot].set(
+            (tok1 != eos) & (max_new > 1))
+        st["out"] = state["out"].at[slot].set(
+            jnp.zeros((T,), jnp.int32).at[0].set(tok1))
+        st["logps"] = state["logps"].at[slot].set(
+            jnp.zeros((T,), jnp.float32).at[0].set(lp1))
+        st["seeds"] = state["seeds"].at[slot].set(seed)
+        st["max_new"] = state["max_new"].at[slot].set(max_new)
+        st["eos"] = state["eos"].at[slot].set(eos)
+        return st
+
+    def _loop_impl(self, params, state, budget, *, stop_on_free):
+        """The device-resident decode loop: ONE ``lax.while_loop`` dispatch.
+
+        Runs until every live slot is done (EOS or length cap), or until
+        ``budget`` steps have executed (the scheduler bounds a dispatch at
+        the next arrival event), or -- with ``stop_on_free`` (waiters are
+        queued) -- as soon as any slot frees.  Returns (state, steps_run).
+        """
+        B = self.batch_size
+        active0 = state["active"]
+        bidx = jnp.arange(B)
+
+        def cond(carry):
+            st, t = carry
+            # All-done predicate as a commutative mapreduce over the active
+            # flags -- the loop predicate itself runs on the primitive layer.
+            any_active = forge.mapreduce(
+                lambda a: a, alg.MAX, st["active"].astype(jnp.int32),
+                layout=Flat()) > 0
+            go = any_active & (t < budget)
+            if stop_on_free:
+                go &= jnp.all(~active0 | st["active"])
+            return go
+
+        def body(carry):
+            st, t = carry
+            was_active = st["active"]
+            logits, caches = self._decode(
+                params, st["caches"], st["tok"][:, None], st["pos"])
+            nxt = self._sample(self._base_key, logits, st["seeds"],
+                               st["emitted"])
+            lp = chosen_logprobs(logits, nxt)
+            widx = jnp.minimum(st["emitted"], self.max_new_cap - 1)
+            out = st["out"].at[bidx, widx].set(
+                jnp.where(was_active, nxt, st["out"][bidx, widx]))
+            logps = st["logps"].at[bidx, widx].set(
+                jnp.where(was_active, lp, st["logps"][bidx, widx]))
+            emitted = st["emitted"] + was_active
+            hit_eos = was_active & (nxt == st["eos"])
+            hit_cap = emitted >= st["max_new"]
+            new = dict(st)
+            new["caches"] = caches
+            new["tok"] = jnp.where(was_active, nxt, st["tok"])
+            new["pos"] = st["pos"] + was_active
+            new["emitted"] = emitted
+            new["active"] = was_active & ~hit_eos & ~hit_cap
+            new["out"] = out
+            new["logps"] = logps
+            return new, t + 1
+
+        state, steps = jax.lax.while_loop(
+            cond, body, (state, jnp.zeros((), jnp.int32)))
+        return state, steps
+
+    def _dispatch_loop(self, state, budget, stop_on_free):
+        """One device-loop dispatch (separate method so tests can wrap it in
+        a transfer guard: nothing here may sync tokens to host)."""
+        return self._loop_fn[stop_on_free](
+            self.params, state, jnp.asarray(budget, jnp.int32))
+
+    def _seq_logprobs(self, state):
+        """Per-slot sequence scores over the ragged (slots, steps) buffer:
+        one masked ``mapreduce(layout=Batched())`` launch, identity at
+        masked steps -- identical code path at any live-slot count."""
+        T = self.max_new_cap
+        mask = (jnp.arange(T, dtype=jnp.int32)[None, :]
+                < state["emitted"][:, None]).astype(jnp.int32)
+        return forge.mapreduce(
+            lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD,
+            (state["logps"], mask), layout=Batched())
+
+    def _validate_request(self, r: Request):
+        plen = len(r.prompt) + self.cfg.num_prefix_embeds
+        if plen > self.cache_len:
+            raise ValueError(
+                f"prompt ({plen} tokens incl. prefix) exceeds cache_len="
+                f"{self.cache_len}")
+        if r.max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"max_new_tokens={r.max_new_tokens} exceeds the engine's "
+                f"output buffer cap {self.max_new_cap} (raise max_new_cap)")
+        if _has_global_attn(self.cfg) and \
+                plen + r.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"prompt+max_new ({plen}+{r.max_new_tokens}) exceeds "
+                f"cache_len={self.cache_len} for a global-attention arch "
+                f"(the KV ring would overwrite live context)")
+
+    def serve(self, arrivals) -> list:
+        """Run an open-loop arrival trace to completion.
+
+        ``arrivals``: iterable of ``(arrival_step, Request)`` (or bare
+        ``Request``s, all arriving at step 0); the step clock is the decode-
+        step clock -- arrivals between device dispatches are admitted into
+        whatever slots have freed.  Returns the scheduler's completed
+        ``RequestState`` records in submission order (tokens, seq_logprob,
+        submit/admit/finish steps).
+        """
+        if self.cfg.is_encdec:
+            raise NotImplementedError(
+                "continuous batching for enc-dec archs: cross-attention "
+                "caches are source-length-shaped, which breaks uniform slot "
+                "scatter -- use generate_padded()")
+        pending = []
+        for a in arrivals:
+            step, req = a if isinstance(a, tuple) else (0, a)
+            self._validate_request(req)
+            pending.append((int(step), req))
+        pending.sort(key=lambda a: a[0])
+        pending = list(reversed(pending))   # pop() = earliest
+
+        sched = Scheduler(self.batch_size)
+        state = self._fresh_state()
+        now = 0
+        stats = {"loop_dispatches": 0, "decode_steps": 0, "prefill_s": 0.0,
+                 "decode_s": 0.0, "admissions": 0}
+        t_serve = time.time()
+
+        def submit_due():
+            while pending and pending[-1][0] <= now:
+                step, req = pending.pop()
+                sched.submit(req, step=max(step, now))
+
+        submit_due()
+        while not (sched.all_done and not pending):
+            # -- admission: prefill each new request alone, scatter its cache
+            for rec in sched.admit(step=now):
+                r = rec.request
+                if r.max_new_tokens < 1:
+                    sched.complete(rec.slot, step=now)
+                    continue
+                t0 = time.time()
+                toks = np.asarray(r.prompt, np.int32)[None, :]
+                logits1, caches1 = self._prefill(
+                    self.params, self._make_batch(toks))
+                pos0 = toks.shape[1] + self.cfg.num_prefix_embeds
+                state = self._admit_fn(
+                    state, caches1, logits1,
+                    jnp.asarray(rec.slot, jnp.int32),
+                    jnp.asarray(rec.seed, jnp.int32),
+                    jnp.asarray(r.max_new_tokens, jnp.int32),
+                    jnp.asarray(r.eos_id, jnp.int32),
+                    jnp.asarray(pos0, jnp.int32))
+                stats["prefill_s"] += time.time() - t0
+                stats["admissions"] += 1
+
+            live = sched.live_slots
+            if not live:
+                if pending:
+                    now = max(now, pending[-1][0])
+                    submit_due()
+                    continue
+                break
+            # An admitted request may be done already (EOS/cap on its first
+            # token); drain before dispatching an empty loop.
+            self._drain_done(sched, state, now)
+            if not sched.live_slots:
+                submit_due()
+                continue
+
+            # -- one device-loop dispatch: run until all-done, bounded by the
+            # next arrival event; break out early on a freed slot only when
+            # someone is waiting for it.
+            budget = int(np.max(np.asarray(
+                state["max_new"] - state["emitted"]))) + 1
+            if pending:
+                budget = max(1, min(budget, pending[-1][0] - now))
+            stop_on_free = sched.has_waiting or bool(pending)
+            t0 = time.time()
+            state, steps = self._dispatch_loop(state, budget, stop_on_free)
+            steps = int(steps)                     # control-plane sync only
+            stats["decode_s"] += time.time() - t0
+            stats["loop_dispatches"] += 1
+            stats["decode_steps"] += steps
+            now += steps
+            submit_due()
+            state = self._drain_done(sched, state, now)
+
+        recs = [sched.records[rid] for rid in sorted(sched.records)]
+        stats["serve_s"] = time.time() - t_serve
+        n_tok = sum(len(rec.tokens) for rec in recs)
+        stats["decode_tok_per_s"] = n_tok / max(stats["decode_s"], 1e-9)
+        stats["seq_logprob"] = [rec.seq_logprob for rec in recs]
+        stats["total_tokens"] = n_tok
+        stats["final_step"] = now
+        self.last_stats = stats
+        self.last_scores = np.asarray(
+            [rec.seq_logprob for rec in recs], np.float32)
+        return recs
+
+    def _drain_done(self, sched: Scheduler, state, now):
+        """Evict finished slots: pull their ragged outputs (the only token
+        sync -- at completion) through the CSR compaction descriptor."""
+        done_slots = [s for s in sched.live_slots
+                      if not bool(state["active"][s])]
+        if not done_slots:
+            return state
+        seq_lp = self._seq_logprobs(state)
+        flat, offsets = CA.compact_ragged(state["out"], state["emitted"])
+        flat = np.asarray(flat)
+        offsets = np.asarray(offsets)
+        for slot in done_slots:
+            rec = sched.complete(slot, step=now)
+            rec.tokens = [int(t) for t in flat[offsets[slot]:offsets[slot + 1]]]
+            rec.seq_logprob = float(seq_lp[slot])
+            if self.poison_on_evict:
+                state = dict(state)
+                state["caches"] = CA.poison_slot(
+                    state["caches"], jnp.asarray(slot, jnp.int32))
+        return state
 
     def generate(self, requests: list) -> list:
-        """Run a batch of requests to completion; returns token lists."""
+        """Run requests to completion (continuous batching); token lists in
+        input order.  More requests than ``batch_size`` simply queue."""
+        if self.cfg.is_encdec:
+            return self.generate_padded(requests)
+        recs = self.serve([(0, r) for r in requests])
+        return [rec.tokens for rec in recs]
+
+    # -----------------------------------------------------------------------
+    # Padded-batch reference path (the parity oracle)
+    # -----------------------------------------------------------------------
+
+    def generate_padded(self, requests: list) -> list:
+        """Fixed-batch reference: pad to ``batch_size``, left-align prompts,
+        one decode dispatch + host sync per token.  Kept as the differential
+        oracle; same seeds => bit-identical tokens vs the continuous path."""
         cfg = self.cfg
         B = self.batch_size
-        assert len(requests) <= B
+        n_req = len(requests)
+        assert n_req <= B
+        seeds = np.arange(B, dtype=np.int32)
+        for i, r in enumerate(requests):
+            if r.seed is not None:
+                seeds[i] = r.seed
+        seeds = jnp.asarray(seeds)
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(requests):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if cfg.is_encdec:
-            batch["src_embeds"] = jnp.zeros(
-                (B, plen, cfg.d_model), jnp.float32)
-        if cfg.num_prefix_embeds:
-            batch["vision_embeds"] = jnp.zeros(
-                (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+        batch = self._make_batch(toks)
 
         t0 = time.time()
         logits, caches = self._prefill(self.params, batch)
@@ -152,27 +486,38 @@ class Engine:
         max_new = max(r.max_new_tokens for r in requests)
         outputs = [[] for _ in range(B)]
         done = np.zeros(B, bool)
-        tok = np.asarray(self._sample(logits)).astype(np.int32)
-        step_logps = [self._chosen_logprobs(logits, tok)]  # stays on device
+        tok = self._sample(self._base_key, logits, seeds,
+                           jnp.zeros((B,), jnp.int32))
+        tok_h = np.asarray(tok).astype(np.int32)
+        step_logps = [chosen_logprobs(logits, tok)]  # stays on device
         pos0 = plen + cfg.num_prefix_embeds
         t1 = time.time()
         for i, r in enumerate(requests):
-            outputs[i].append(int(tok[i]))
+            # First sampled token: subject to the same cap/EOS bookkeeping as
+            # every later token (a 0-budget request emits nothing, and EOS as
+            # the first token finishes the request).
+            if r.max_new_tokens >= 1:
+                outputs[i].append(int(tok_h[i]))
+            if len(outputs[i]) >= r.max_new_tokens or \
+                    (outputs[i] and outputs[i][-1] == r.eos_id):
+                done[i] = True
         for t in range(1, max_new):
-            logits, caches = self._decode(
-                self.params, caches, jnp.asarray(tok[:, None]),
-                jnp.asarray(pos0 + t - 1, jnp.int32))
-            tok = np.asarray(self._sample(logits)).astype(np.int32)
-            step_logps.append(self._chosen_logprobs(logits, tok))
-            for i, r in enumerate(requests):
-                if i < len(requests) and not done[i] and len(outputs[i]) < r.max_new_tokens:
-                    outputs[i].append(int(tok[i]))
-                    if outputs[i][-1] == r.eos_id:
-                        done[i] = True
-            if done[:len(requests)].all():
+            if done[:n_req].all():
                 break
+            logits, caches = self._decode(
+                self.params, caches, jnp.asarray(tok_h[:, None]),
+                jnp.asarray(pos0 + t - 1, jnp.int32))
+            tok = self._sample(self._base_key, logits, seeds,
+                               jnp.full((B,), t, jnp.int32))
+            tok_h = np.asarray(tok).astype(np.int32)
+            step_logps.append(chosen_logprobs(logits, tok))
+            for i, r in enumerate(requests):
+                if not done[i] and len(outputs[i]) < r.max_new_tokens:
+                    outputs[i].append(int(tok_h[i]))
+                    if outputs[i][-1] == r.eos_id or \
+                            len(outputs[i]) >= r.max_new_tokens:
+                        done[i] = True
         decode_s = time.time() - t1
-        n_req = len(requests)
         n_tok = sum(len(o) for o in outputs[:n_req])
 
         # Sequence scores over the ragged batch: one batched-mapreduce row

@@ -173,7 +173,15 @@ def make_decode_step(cfg, mesh):
         rules = {**rules, "moe_shard_map": False, "decode_mla_shard": False}
 
     def decode_step(params, caches, tokens, pos):
-        with L.sharding_rules(rules):
+        step_rules = rules
+        if rules and getattr(pos, "ndim", 0):
+            # Per-slot (B,) positions (continuous batching): the flash-decode
+            # shard-map paths key their owner-local cache update on a single
+            # scalar slot, so they are scalar-pos only -- attention falls back
+            # to the per-row scatter path, and the rules say so explicitly.
+            step_rules = {**rules, "decode_kv_shard": False,
+                          "decode_mla_shard": False}
+        with L.sharding_rules(step_rules):
             p_low = jax.tree.map(
                 lambda x: x.astype(jnp.bfloat16)
                 if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

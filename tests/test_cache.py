@@ -1,0 +1,228 @@
+"""Unit tests for the slot-indexed decode cache (serving/cache.py).
+
+Three layers of protection for slot recycling:
+
+* address arithmetic: ``ring_slot`` / ``slot_position`` wraparound at
+  ``cache_len``, pinned against a brute-force reference so the tests break
+  if the engine's bookkeeping and the attention kernels ever disagree;
+* tree surgery: ``scatter_slot`` writes exactly one slot (including the
+  layer-stacked ``units`` leaves whose batch axis is axis 1), works with a
+  traced slot index under jit, and casts to the live leaf dtype;
+  ``poison_slot`` NaN/sentinel-fills exactly one slot;
+* end-to-end hygiene: a recycled slot in a real engine -- with every freed
+  slot poison-filled -- produces bit-identical output to a fresh engine, so
+  no stale state bleeds across requests (the poison turns any stale read
+  into NaN logits, which would change the tokens loudly).
+
+Plus the CSR side: ``SlotLedger.offsets()`` renders ragged slot lengths as
+a ``Segmented`` descriptor, and ``compact_ragged`` drains ragged buffers
+through the library's own scan primitive.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import cache as CA
+
+
+def _fake_tree(B=4, L=8, U=3, D=5):
+    """A cache pytree shaped like lm.init_caches: prefix/suffix lead with
+    the slot axis, units lead with the layer axis (slot axis second)."""
+    key = iter(jax.random.split(jax.random.PRNGKey(0), 8))
+    return {
+        "prefix": [{"k": jax.random.normal(next(key), (B, L, 2, D)),
+                    "pos": jnp.zeros((B,), jnp.int32)}],
+        "units": {"k": jax.random.normal(next(key), (U, B, L, D),
+                                         jnp.bfloat16),
+                  "h": jax.random.normal(next(key), (U, B, D),
+                                         jnp.float32)},
+        "suffix": [{"conv": jax.random.normal(next(key), (B, 4, D))}],
+    }
+
+
+def _single_like(tree, value=1.0):
+    """A batch=1 tree congruent with ``tree`` (units keep the layer axis)."""
+    def one(leaf, axis):
+        shape = list(leaf.shape)
+        shape[axis] = 1
+        return jnp.full(shape, value, leaf.dtype)
+
+    return {
+        "prefix": jax.tree.map(lambda l: one(l, 0), tree["prefix"]),
+        "units": jax.tree.map(lambda l: one(l, 1), tree["units"]),
+        "suffix": jax.tree.map(lambda l: one(l, 0), tree["suffix"]),
+    }
+
+
+def _slot_view(tree, slot):
+    return {
+        "prefix": jax.tree.map(lambda l: l[slot], tree["prefix"]),
+        "units": jax.tree.map(lambda l: l[:, slot], tree["units"]),
+        "suffix": jax.tree.map(lambda l: l[slot], tree["suffix"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scatter_slot / poison_slot
+# ---------------------------------------------------------------------------
+
+
+def test_scatter_writes_exactly_one_slot():
+    live = _fake_tree()
+    single = _single_like(live, 7.0)
+    out = CA.scatter_slot(live, single, 2)
+    for s in range(4):
+        got = _slot_view(out, s)
+        want = _slot_view(single if s == 2 else live,
+                          0 if s == 2 else s)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                          np.asarray(w, np.float32))
+
+
+def test_scatter_traced_slot_under_jit():
+    live = _fake_tree()
+    single = _single_like(live, 3.0)
+    f = jax.jit(CA.scatter_slot)
+    for slot in (0, 3):
+        out = f(live, single, jnp.asarray(slot, jnp.int32))
+        leaf = np.asarray(out["units"]["h"], np.float32)
+        assert (leaf[:, slot] == 3.0).all()
+        others = [s for s in range(4) if s != slot]
+        np.testing.assert_array_equal(
+            leaf[:, others], np.asarray(live["units"]["h"])[:, others])
+
+
+def test_scatter_casts_to_live_dtype():
+    live = _fake_tree()                      # units "k" is bf16
+    single = _single_like(live, 1.0)
+    single["units"]["k"] = single["units"]["k"].astype(jnp.float32)
+    out = CA.scatter_slot(live, single, 1)
+    assert out["units"]["k"].dtype == jnp.bfloat16
+
+
+def test_poison_fills_exactly_one_slot():
+    live = _fake_tree()
+    out = CA.poison_slot(live, 1)
+    # Floats NaN, ints sentinel, only slot 1; slot 0/2/3 untouched.
+    assert np.isnan(np.asarray(out["units"]["h"], np.float32)[:, 1]).all()
+    assert np.isnan(np.asarray(out["prefix"][0]["k"])[1]).all()
+    assert (np.asarray(out["prefix"][0]["pos"])[1] == -1).all()
+    for s in (0, 2, 3):
+        for g, w in zip(jax.tree.leaves(_slot_view(out, s)),
+                        jax.tree.leaves(_slot_view(live, s))):
+            np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                          np.asarray(w, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Ring addressing -- wraparound at cache_len.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [1, 4, 7])
+def test_ring_wraparound(window):
+    pos = np.arange(5 * window)
+    slots = np.asarray(CA.ring_slot(jnp.asarray(pos), window))
+    assert (slots == pos % window).all()
+    assert set(slots) == set(range(window))    # every slot gets reused
+
+
+@pytest.mark.parametrize("window", [3, 8])
+def test_slot_position_inverts_ring_slot(window):
+    """slot_position recovers the newest absolute position living in each
+    ring slot -- the exact validity rule gqa_decode's local path applies."""
+    for pos in range(3 * window):
+        for s in range(window):
+            sp = int(CA.slot_position(s, pos, window))
+            # brute force: newest p <= pos with p % window == s (or negative
+            # if the slot has never been written)
+            cand = [p for p in range(pos + 1) if p % window == s]
+            want = cand[-1] if cand else sp   # sp < 0 expected when unwritten
+            if cand:
+                assert sp == want
+            else:
+                assert sp < 0
+
+
+# ---------------------------------------------------------------------------
+# SlotLedger -- ragged lengths as a CSR Segmented descriptor.
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_offsets_are_csr():
+    led = CA.SlotLedger(4, cache_len=16)
+    for slot, n in enumerate([3, 0, 16, 7]):
+        led.occupy(slot, n)
+    off = np.asarray(led.offsets())
+    assert off.dtype == np.int32
+    np.testing.assert_array_equal(off, [0, 3, 3, 19, 26])
+    assert led.segment_of(2) == (3, 19)
+    led.advance(2)                      # clamped at cache_len
+    assert led.lengths[2] == 16
+    led.free(2)
+    np.testing.assert_array_equal(np.asarray(led.offsets()), [0, 3, 3, 3, 10])
+
+
+def test_ledger_rejects_overlong():
+    led = CA.SlotLedger(2, cache_len=8)
+    with pytest.raises(ValueError):
+        led.occupy(0, 9)
+
+
+# ---------------------------------------------------------------------------
+# compact_ragged -- CSR drain of ragged slot buffers.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_compact_ragged_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    B, T = 5, 9
+    buf = rng.integers(0, 100, (B, T)).astype(np.int32)
+    counts = rng.integers(0, T + 1, (B,)).astype(np.int32)
+    flat, offsets = CA.compact_ragged(jnp.asarray(buf), counts)
+    flat, offsets = np.asarray(flat), np.asarray(offsets)
+    np.testing.assert_array_equal(
+        flat, np.concatenate([buf[b, :counts[b]] for b in range(B)]))
+    np.testing.assert_array_equal(offsets,
+                                  np.concatenate([[0], np.cumsum(counts)]))
+
+
+def test_compact_ragged_all_empty():
+    flat, offsets = CA.compact_ragged(jnp.zeros((3, 4), jnp.int32),
+                                      np.zeros(3, np.int32))
+    assert flat.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(offsets), [0, 0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end slot hygiene: recycled slot == fresh engine, under poison.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "recurrentgemma-2b"])
+def test_recycled_slot_no_stale_bleed(arch):
+    """Serve two requests through ONE slot with every freed slot poison-
+    filled (NaN floats).  If the second request ever read the first's
+    leftover state, its logits would go NaN and its tokens would change;
+    instead it must match a fresh engine that only ever saw request B."""
+    from repro.configs import base as C
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+
+    cfg = C.get_config(arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ra = Request([3, 1, 4], max_new_tokens=5, seed=7)
+    rb = Request([2, 7, 2], max_new_tokens=5, seed=9)
+
+    eng = Engine(cfg, None, params, cache_len=32, batch_size=1,
+                 temperature=0.7, top_k=8, poison_on_evict=True)
+    out_both = eng.generate([ra, rb])          # rb recycles ra's slot
+
+    fresh = Engine(cfg, None, params, cache_len=32, batch_size=1,
+                   temperature=0.7, top_k=8)
+    out_fresh = fresh.generate([rb])
+    assert out_both[1] == out_fresh[0]
+    assert not np.isnan(eng.last_scores).any()

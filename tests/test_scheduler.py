@@ -1,0 +1,246 @@
+"""Deterministic simulation suite for the continuous-batching scheduler.
+
+The scheduler is pure host bookkeeping (serving/scheduler.py), so the whole
+admission/eviction state machine runs here against a *fake model*: each
+request carries a service time (its decode-step budget), a simulated decode
+step advances every live slot by one, and completion fires exactly when the
+budget is spent -- no device, no model, thousands of steps per second.
+
+Invariants pinned by this suite (the engine inherits them wholesale):
+
+* no double-occupancy: a slot holds at most one live request, a request at
+  most one slot;
+* FIFO admission: slot grants follow submission order exactly;
+* eviction exactly on completion: ``finish_step - admit_step`` equals the
+  request's service time, never more, never less;
+* zero starvation: every submitted request finishes, even when bursts
+  exceed ``batch_size`` many times over or the queue goes repeatedly empty.
+
+Property tests run under hypothesis when installed and fall back to a
+seeded sweep otherwise (same pattern as tests/test_properties.py).
+"""
+import dataclasses
+
+import pytest
+
+from repro.serving.scheduler import Scheduler, SchedulerInvariantError
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def seeded(test):
+    """Drive ``test(seed)`` by hypothesis when available, else a fixed
+    seed sweep -- one decorator, identical test bodies."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=30, deadline=None)(
+            given(seed=st.integers(0, 2**32 - 1))(test))
+    return pytest.mark.parametrize("seed", [37 * i + 5 for i in range(12)])(
+        test)
+
+
+@dataclasses.dataclass
+class FakeRequest:
+    max_new_tokens: int
+    seed: int | None = None
+
+
+def run_sim(arrivals, num_slots, max_steps=100_000):
+    """Run an arrival trace against the fake model to completion.
+
+    ``arrivals``: list of ``(arrival_step, service_steps)``.  Returns
+    ``(sched, log)`` where ``log["admit_order"]`` is the slot-grant order
+    and ``log["max_live"]`` the peak concurrency.  Invariants are audited
+    after every admission wave and every simulated decode step.
+    """
+    sched = Scheduler(num_slots)
+    remaining = {}
+    pending = sorted(arrivals, key=lambda a: a[0])
+    log = {"admit_order": [], "max_live": 0}
+    now, i = 0, 0
+    while i < len(pending) or not sched.all_done:
+        while i < len(pending) and pending[i][0] <= now:
+            rid = sched.submit(FakeRequest(pending[i][1]), step=now)
+            remaining[rid] = pending[i][1]
+            i += 1
+        for rec in sched.admit(step=now):
+            log["admit_order"].append(rec.rid)
+            if remaining[rec.rid] <= 0:   # zero-budget: done at admission
+                sched.complete(rec.slot, step=now)
+        sched.check_invariants()
+        log["max_live"] = max(log["max_live"], len(sched.live_slots))
+        for slot in list(sched.live_slots):
+            rec = sched.slot_record(slot)
+            remaining[rec.rid] -= 1
+            if remaining[rec.rid] <= 0:
+                sched.complete(slot, step=now + 1)
+        sched.check_invariants()
+        now += 1
+        assert now < max_steps, "simulation did not terminate (starvation?)"
+    return sched, log
+
+
+# ---------------------------------------------------------------------------
+# Deterministic traces.
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_admission_order():
+    sched, log = run_sim([(0, 3)] * 10, num_slots=3)
+    assert log["admit_order"] == sorted(log["admit_order"])
+    assert log["admit_order"] == list(range(10))
+
+
+def test_eviction_exactly_at_budget():
+    sched, _ = run_sim([(0, 5), (0, 2), (1, 7)], num_slots=2)
+    for rec in sched.records.values():
+        assert rec.done
+        assert rec.finish_step - rec.admit_step == \
+            max(rec.request.max_new_tokens, 0)
+
+
+def test_burst_larger_than_batch():
+    """A burst 8x the slot count: peak concurrency is capped at the slot
+    count, everyone still finishes, and grants stay FIFO."""
+    n_slots = 2
+    sched, log = run_sim([(0, 4)] * (8 * n_slots), num_slots=n_slots)
+    assert log["max_live"] == n_slots
+    assert all(rec.done for rec in sched.records.values())
+    assert log["admit_order"] == sorted(log["admit_order"])
+
+
+def test_empty_queue_and_gaps():
+    """Arrival gaps empty the queue; admissions resume when traffic does."""
+    sched, _ = run_sim([(0, 2), (50, 3), (100, 1)], num_slots=4)
+    recs = sorted(sched.records.values(), key=lambda r: r.rid)
+    assert [r.admit_step for r in recs] == [0, 50, 100]
+    assert Scheduler(4).all_done
+    assert Scheduler(4).admit() == []
+
+
+def test_zero_budget_request_completes_without_decode():
+    sched, _ = run_sim([(0, 0), (0, 3)], num_slots=1)
+    rec0 = sched.records[0]
+    assert rec0.done and rec0.finish_step == rec0.admit_step
+    assert sched.records[1].done
+
+
+def test_no_starvation_under_sustained_overload():
+    """2 slots, arrivals every step for 100 steps: strictly FIFO means the
+    wait is bounded by queue position, not unbounded."""
+    sched, log = run_sim([(t, 2) for t in range(100)], num_slots=2)
+    assert all(rec.done for rec in sched.records.values())
+    assert log["admit_order"] == list(range(100))
+
+
+def test_single_slot_serializes():
+    sched, _ = run_sim([(0, 3), (0, 4), (0, 2)], num_slots=1)
+    recs = sorted(sched.records.values(), key=lambda r: r.rid)
+    # Strict serialization: each admission waits for the previous finish.
+    for prev, nxt in zip(recs, recs[1:]):
+        assert nxt.admit_step >= prev.finish_step
+
+
+# ---------------------------------------------------------------------------
+# Direct API / invariant-violation behavior.
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_flags():
+    sched = Scheduler(2)
+    rid = sched.submit(FakeRequest(3))
+    rec = sched.record(rid)
+    assert rec.waiting and not rec.live and not rec.done
+    sched.admit()
+    assert rec.live and not rec.waiting and not rec.done
+    sched.complete(rec.slot, step=3)
+    assert rec.done and not rec.live and not rec.waiting
+
+
+def test_seed_defaulting():
+    sched = Scheduler(2)
+    r0 = sched.submit(FakeRequest(1, seed=None))      # -> rid
+    r1 = sched.submit(FakeRequest(1, seed=777))       # -> request's seed
+    r2 = sched.submit(FakeRequest(1), seed=42)        # -> explicit override
+    assert sched.record(r0).seed == r0
+    assert sched.record(r1).seed == 777
+    assert sched.record(r2).seed == 42
+
+
+def test_complete_free_slot_raises():
+    sched = Scheduler(2)
+    with pytest.raises(SchedulerInvariantError):
+        sched.complete(0)
+
+
+def test_double_complete_raises():
+    sched = Scheduler(1)
+    sched.submit(FakeRequest(1))
+    slot = sched.admit()[0].slot
+    sched.complete(slot)
+    with pytest.raises(SchedulerInvariantError):
+        sched.complete(slot)
+
+
+def test_corrupted_slot_table_detected():
+    sched = Scheduler(2)
+    sched.submit(FakeRequest(1))
+    sched.admit()
+    sched.slots[1] = sched.slots[0]   # forge a double-occupancy
+    with pytest.raises(SchedulerInvariantError):
+        sched.check_invariants()
+
+
+def test_bad_slot_count_rejected():
+    with pytest.raises(ValueError):
+        Scheduler(0)
+
+
+# ---------------------------------------------------------------------------
+# Properties over random traces.
+# ---------------------------------------------------------------------------
+
+
+def _random_trace(seed):
+    import random
+    rng = random.Random(seed)
+    n = rng.randint(1, 40)
+    return ([(rng.randint(0, 60), rng.randint(0, 10)) for _ in range(n)],
+            rng.randint(1, 5))
+
+
+@seeded
+def test_property_all_complete_fifo_capped(seed):
+    """Random open-loop traces: every request completes, admissions are
+    FIFO, concurrency never exceeds the slot count, budgets are exact."""
+    arrivals, n_slots = _random_trace(seed)
+    sched, log = run_sim(arrivals, num_slots=n_slots)
+    assert len(sched.records) == len(arrivals)
+    assert all(rec.done for rec in sched.records.values())
+    assert log["admit_order"] == sorted(log["admit_order"])
+    assert log["max_live"] <= n_slots
+    for rec in sched.records.values():
+        assert rec.finish_step - rec.admit_step == \
+            max(rec.request.max_new_tokens, 0)
+        assert rec.admit_step >= rec.submit_step
+
+
+@seeded
+def test_property_burst_waves(seed):
+    """Bursts of (slots * k) simultaneous arrivals in waves -- the stress
+    shape for slot recycling -- never break invariants or strand work."""
+    import random
+    rng = random.Random(seed)
+    n_slots = rng.randint(1, 4)
+    arrivals = []
+    for wave in range(rng.randint(1, 4)):
+        at = wave * rng.randint(1, 10)
+        arrivals += [(at, rng.randint(1, 6))
+                     for _ in range(n_slots * rng.randint(2, 5))]
+    sched, log = run_sim(arrivals, num_slots=n_slots)
+    assert all(rec.done for rec in sched.records.values())
+    assert log["max_live"] <= n_slots

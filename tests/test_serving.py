@@ -112,17 +112,24 @@ def test_single_and_full_batch_same_batched_path(setup, dispatch_spy):
     shape-specialized fallback (per-row loop, vmap-of-1-D, scalar special
     case) may appear at either extreme.  The batched family makes the batch
     a grid dimension, so the dispatched set is size-independent by
-    construction; this pins that property."""
+    construction; this pins that property.
+
+    The device-resident loop resolves primitives at *trace* time, so each
+    measurement uses a fresh Engine (fresh jit caches => the loop re-traces
+    and the spy sees the full dispatch set)."""
     cfg, params, _ = setup
     B = 4
-    eng = Engine(cfg, None, params, cache_len=64, batch_size=B,
-                 temperature=1.0, top_k=5, top_p=0.9, seed=2)
-    eng.generate([Request(prompt=[1, 2], max_new_tokens=3)])
-    single = set(dispatch_spy)
-    dispatch_spy.clear()
-    eng.generate([Request(prompt=[1 + i, 2], max_new_tokens=3)
-                  for i in range(B)])
-    full = set(dispatch_spy)
+
+    def dispatched(n_req):
+        eng = Engine(cfg, None, params, cache_len=64, batch_size=B,
+                     temperature=1.0, top_k=5, top_p=0.9, seed=2)
+        dispatch_spy.clear()
+        eng.generate([Request(prompt=[1 + i, 2], max_new_tokens=3)
+                      for i in range(n_req)])
+        return set(dispatch_spy)
+
+    single = dispatched(1)
+    full = dispatched(B)
 
     # The decode path runs on the batched family...  (flat scan/mapreduce
     # still legitimately appear *inside* the radix composition backing
@@ -131,5 +138,53 @@ def test_single_and_full_batch_same_batched_path(setup, dispatch_spy):
     assert "scan@batched" in single          # nucleus cutoff over (B, k)
     assert "mapreduce@batched" in single     # masked per-request seq scores
     assert "top_k@segmented" in single       # per-request candidate top-k
-    # ...and hits the identical primitive set at both batch extremes.
+    # ...and hits the identical primitive set at both batch extremes: the
+    # slot count is a grid dimension of one compiled loop, never a reason
+    # to re-specialize.
     assert single == full
+
+
+def test_decode_loop_single_dispatch_no_token_syncs(setup):
+    """The acceptance property of the device-resident loop: a batch that
+    fits in the slots decodes to completion in ONE ``lax.while_loop``
+    dispatch, with ZERO device->host transfers between prefill and
+    completion -- every per-token decision (EOS, length caps, sampling,
+    logprob accumulation) happens on device.  A transfer guard makes any
+    hidden per-token sync a hard error."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=4,
+                 temperature=1.0, top_k=5, seed=2)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=6),
+            Request(prompt=[4, 5], max_new_tokens=4)]
+    eng.generate(reqs)  # warm the jit caches (compile-time is off the clock)
+
+    real, calls = eng._dispatch_loop, []
+
+    def guarded(state, budget, stop_on_free):
+        calls.append(int(budget))
+        with jax.transfer_guard_device_to_host("disallow"):
+            return real(state, budget, stop_on_free)
+
+    eng._dispatch_loop = guarded
+    outs = eng.generate(reqs)
+    assert len(calls) == 1
+    assert eng.last_stats["loop_dispatches"] == 1
+    assert eng.last_stats["decode_steps"] >= 5   # 6 tokens, 1st at admission
+    assert len(outs[0]) == 6 and len(outs[1]) == 4
+
+
+def test_serve_open_loop_arrivals(setup):
+    """serve(): open-loop trace with arrivals mid-flight; the virtual clock
+    advances by executed decode steps and every record is self-consistent."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    reqs = [Request(prompt=[1, 2], max_new_tokens=5, seed=0),
+            Request(prompt=[3, 4], max_new_tokens=4, seed=1),
+            Request(prompt=[5, 6], max_new_tokens=3, seed=2)]
+    recs = eng.serve([(0, reqs[0]), (2, reqs[1]), (4, reqs[2])])
+    assert [len(r.tokens) for r in recs] == [5, 4, 3]
+    for rec in recs:
+        assert rec.done
+        assert rec.submit_step <= rec.admit_step <= rec.finish_step
+    assert eng.last_stats["decode_steps"] > 0
+    assert eng.last_stats["total_tokens"] == 12

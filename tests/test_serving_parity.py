@@ -1,0 +1,208 @@
+"""Differential parity: continuous-batching engine vs the padded oracle.
+
+The padded fixed-batch path (``generate_padded``) is the reference
+implementation: one prefill over the aligned batch, one decode dispatch per
+token, host bookkeeping everywhere.  The continuous path must reproduce its
+token streams *exactly* -- same requests, same seeds, bit-identical tokens
+-- across greedy, top-k and top-p sampling, under staggered admission, and
+through slot recycling.  What makes this possible (and what these tests
+therefore pin):
+
+* batch rows never mix inside the model -- attention/recurrence are
+  row-local, so a request's stream depends only on its own prompt+seed;
+* sampling keys are counter-based per request
+  (``fold_in(fold_in(base, seed), token_index)``), independent of batch
+  composition, slot index or admission time.
+
+One asymmetry is deliberate: the *padded* oracle left-pads ragged prompts,
+and pad tokens attend as real context -- a known contamination of the
+legacy path that continuous batching removes (each request prefills alone
+at its exact length).  So multi-request oracle comparisons use equal-length
+prompts, and ragged prompts are checked per-request against a batch-of-one
+oracle (no padding => no contamination).
+
+seq_logprob is compared to tight tolerance, not bitwise: both paths sum the
+same per-token log-probs with a batched mapreduce, but over different
+buffer extents (the padded path's buffer is trimmed to realized steps), so
+the reduction tree may differ in the last ulp.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as C
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+
+SAMPLERS = {
+    "greedy": dict(),
+    "topk": dict(temperature=0.8, top_k=5),
+    "topp": dict(temperature=0.9, top_p=0.85),
+}
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = C.get_config("gemma2-27b", smoke=True)
+    return cfg, lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def recurrent():
+    cfg = C.get_config("recurrentgemma-2b", smoke=True)
+    return cfg, lm.init_params(jax.random.PRNGKey(1), cfg)
+
+
+def _engines(model, **kw):
+    cfg, params = model
+    mk = lambda: Engine(cfg, None, params, cache_len=64, batch_size=4, **kw)
+    return mk(), mk()
+
+
+def _lp_close(a, b):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Equal-length multi-request parity, all sampling modes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(SAMPLERS))
+def test_equal_length_batch_parity(gemma, mode):
+    reqs = [Request([3, 5, 7], max_new_tokens=6, seed=11),
+            Request([2, 4, 9], max_new_tokens=5, seed=22),
+            Request([9, 1, 8], max_new_tokens=4, seed=33)]
+    cont, padded = _engines(gemma, **SAMPLERS[mode])
+    out_c = cont.generate(reqs)
+    out_p = padded.generate_padded(reqs)
+    assert out_c == out_p
+    _lp_close(cont.last_stats["seq_logprob"], padded.last_stats["seq_logprob"])
+
+
+def test_recurrent_arch_parity(recurrent):
+    """Recurrent + local-attention arch: state is O(1) per slot, scattered
+    whole at admission -- tokens must still match the padded oracle."""
+    reqs = [Request([5, 2, 6], max_new_tokens=6, seed=3),
+            Request([1, 7, 4], max_new_tokens=6, seed=4)]
+    cont, padded = _engines(recurrent, temperature=0.7, top_k=6)
+    out_c = cont.generate(reqs)
+    out_p = padded.generate_padded(reqs)
+    assert out_c == out_p
+    _lp_close(cont.last_stats["seq_logprob"], padded.last_stats["seq_logprob"])
+
+
+# ---------------------------------------------------------------------------
+# Ragged prompts: per-request oracle (padding-free batch of one).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(SAMPLERS))
+def test_ragged_prompts_match_per_request_oracle(gemma, mode):
+    cfg, params = gemma
+    reqs = [Request([3, 5, 7], max_new_tokens=6, seed=11),
+            Request([2, 4], max_new_tokens=5, seed=22),
+            Request([9, 1, 8, 6], max_new_tokens=4, seed=33)]
+    cont = Engine(cfg, None, params, cache_len=64, batch_size=4,
+                  **SAMPLERS[mode])
+    out_c = cont.generate(reqs)
+    for i, r in enumerate(reqs):
+        oracle = Engine(cfg, None, params, cache_len=64, batch_size=1,
+                        **SAMPLERS[mode])
+        out_1 = oracle.generate_padded([r])
+        assert out_1[0] == out_c[i], f"request {i} diverged"
+        _lp_close([oracle.last_stats["seq_logprob"][0]],
+                  [cont.last_stats["seq_logprob"][i]])
+
+
+# ---------------------------------------------------------------------------
+# Staggered admission: requests joining a running batch sample identically.
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_admission_parity(gemma):
+    cfg, params = gemma
+    reqs = [Request([3, 5, 7], max_new_tokens=8, seed=1),
+            Request([2, 4, 6], max_new_tokens=6, seed=2),
+            Request([9, 1, 8], max_new_tokens=5, seed=3)]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=4,
+                 temperature=0.8, top_k=5)
+    recs = eng.serve([(0, reqs[0]), (3, reqs[1]), (6, reqs[2])])
+    assert [r.admit_step for r in recs] == [0, 3, 6]
+    assert recs[1].admit_step > recs[0].admit_step  # genuinely mid-flight
+    for i, r in enumerate(reqs):
+        oracle = Engine(cfg, None, params, cache_len=64, batch_size=1,
+                        temperature=0.8, top_k=5)
+        out_1 = oracle.generate_padded([r])
+        assert out_1[0] == recs[i].tokens, \
+            f"request {i} admitted at step {recs[i].admit_step} diverged"
+
+
+def test_slot_recycling_parity(gemma):
+    """More requests than slots: late requests decode in recycled slots and
+    still match the per-request oracle bit for bit."""
+    cfg, params = gemma
+    reqs = [Request([i + 1, i + 2], max_new_tokens=3 + i % 3, seed=100 + i)
+            for i in range(6)]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 temperature=0.8, top_k=5)
+    out = eng.generate(reqs)
+    assert eng.last_stats["admissions"] == 6
+    for i, r in enumerate(reqs):
+        oracle = Engine(cfg, None, params, cache_len=64, batch_size=1,
+                        temperature=0.8, top_k=5)
+        assert oracle.generate_padded([r])[0] == out[i]
+
+
+# ---------------------------------------------------------------------------
+# Boundary accounting (the legacy off-by-ones, now fixed in BOTH paths).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["continuous", "padded"])
+def test_max_new_tokens_one(gemma, path):
+    """Regression: exactly one token when max_new_tokens=1 (the legacy loop
+    appended the first sample before any cap bookkeeping)."""
+    cfg, params = gemma
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    reqs = [Request([3, 5], max_new_tokens=1), Request([2, 4], max_new_tokens=4)]
+    out = eng.generate(reqs) if path == "continuous" \
+        else eng.generate_padded(reqs)
+    assert len(out[0]) == 1
+    assert len(out[1]) == 4
+
+
+@pytest.mark.parametrize("path", ["continuous", "padded"])
+def test_max_new_tokens_zero(gemma, path):
+    cfg, params = gemma
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    reqs = [Request([3, 5], max_new_tokens=0), Request([2, 4], max_new_tokens=3)]
+    out = eng.generate(reqs) if path == "continuous" \
+        else eng.generate_padded(reqs)
+    assert out[0] == []
+    assert len(out[1]) == 3
+
+
+@pytest.mark.parametrize("path", ["continuous", "padded"])
+def test_eos_as_first_token_stops(gemma, path):
+    """Regression: EOS sampled as the very first token ends the request (the
+    legacy loop only checked EOS on tokens 2+)."""
+    cfg, params = gemma
+    probe = Engine(cfg, None, params, cache_len=64, batch_size=1)
+    first = probe.generate([Request([3, 5], max_new_tokens=1)])[0][0]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=1)
+    req = Request([3, 5], max_new_tokens=8, eos_id=first)
+    out = eng.generate([req]) if path == "continuous" \
+        else eng.generate_padded([req])
+    assert out[0] == [first]
+
+
+def test_request_overflow_legacy_asserts_continuous_queues(gemma):
+    cfg, params = gemma
+    reqs = [Request([1, 2], max_new_tokens=2, seed=i) for i in range(3)]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    assert len(eng.generate(reqs)) == 3          # continuous: queues
+    with pytest.raises(AssertionError):
+        eng.generate_padded(reqs)                # padded: fixed batch

@@ -140,6 +140,85 @@ def channel_scan_bytes(batch: int, t: int, c: int, n_leaves_in: int,
     return batch * tp * cp_ * sz * (n_leaves_in + n_leaves_out)
 
 
+# ---------------------------------------------------------------------------
+# pallas-gpu routes: block = gpu_threads * nitem * vec_width (float4-style
+# transactions), and the decoupled-lookback scan adds only the O(n/block)
+# cross-block mailbox on top of the 2n element movement -- the single-pass
+# argument of the paper's GPU scan made checkable.
+# ---------------------------------------------------------------------------
+
+
+def _gpu_block(policy, nitem: int, dtypes) -> int:
+    vw = min(ki.vec_width(d, flavor="gpu") for d in dtypes)
+    return policy.gpu_threads * nitem * vw
+
+
+def gpu_scan_bytes(n: int, dtypes, policy) -> int:
+    """Single-pass lookback scan: one read + one write per (padded) element,
+    plus the per-block (partial, status) mailbox -- 2n + O(n/block), NOT the
+    3n of scan-then-propagate or the multi-launch reduce-then-scan."""
+    block = _gpu_block(policy, policy.nitem_scan, dtypes)
+    np_ = _pad(n, block)
+    nb = np_ // block
+    per_elem = sum(jnp.dtype(d).itemsize for d in dtypes)
+    # Mailbox: each block writes its inclusive partial + an int32 status
+    # flag and reads its predecessor's.
+    return 2 * np_ * per_elem + 2 * nb * (per_elem + 4)
+
+
+def gpu_batched_scan_bytes(batch: int, n: int, dtypes, policy) -> int:
+    """Per-row lookback rides the inner grid axis: B x the flat traffic."""
+    return batch * gpu_scan_bytes(n, dtypes, policy)
+
+
+def gpu_mapreduce_bytes(n: int, in_dtypes, out_dtypes, policy) -> int:
+    """Block partials written once, folded once: n reads + 2*(n/block)."""
+    block = _gpu_block(policy, policy.nitem_reduce, in_dtypes)
+    np_ = _pad(n, block)
+    nb = np_ // block
+    out_elem = sum(jnp.dtype(d).itemsize for d in out_dtypes)
+    return (np_ * sum(jnp.dtype(d).itemsize for d in in_dtypes)
+            + 2 * nb * out_elem + out_elem)
+
+
+def gpu_batched_mapreduce_bytes(batch: int, n: int, in_dtypes, out_dtypes,
+                                policy) -> int:
+    return batch * gpu_mapreduce_bytes(n, in_dtypes, out_dtypes, policy)
+
+
+def gpu_matvec_bytes(n: int, p: int, dtype, out_dtype=None,
+                     policy=None) -> int:
+    """A once, x re-read per column stripe, y accumulated in the output
+    block across the sequential reduction axis (written once)."""
+    policy = policy or ki.resolve_tuning("gpu_generic")
+    sz = jnp.dtype(dtype).itemsize
+    osz = jnp.dtype(out_dtype or dtype).itemsize
+    rows = policy.matvec_rows * ki.WARP
+    cols = max(policy.matvec_cols * ki.vec_width(dtype, flavor="gpu"), 1)
+    a_bytes = _pad(n, rows) * _pad(p, cols) * sz
+    x_bytes = ki.cdiv(p, cols) * _pad(n, rows) * sz
+    y_bytes = _pad(p, cols) * osz
+    return a_bytes + x_bytes + y_bytes
+
+
+def gpu_vecmat_bytes(n: int, p: int, dtype, out_dtype=None,
+                     policy=None) -> int:
+    policy = policy or ki.resolve_tuning("gpu_generic")
+    sz = jnp.dtype(dtype).itemsize
+    osz = jnp.dtype(out_dtype or dtype).itemsize
+    rows = policy.vecmat_rows * ki.WARP
+    cols = max(policy.vecmat_cols * ki.vec_width(dtype, flavor="gpu"), 1)
+    a_bytes = _pad(n, rows) * _pad(p, cols) * sz
+    x_bytes = ki.cdiv(n, rows) * _pad(p, cols) * sz
+    z_bytes = _pad(n, rows) * osz
+    return a_bytes + x_bytes + z_bytes
+
+
+def gpu_copy_bytes(n: int, dtype, nitem: int, policy) -> int:
+    block = policy.gpu_threads * nitem * ki.vec_width(dtype, flavor="gpu")
+    return 2 * _pad(n, block) * jnp.dtype(dtype).itemsize
+
+
 def sort_pass_count(key_bits: int, digit_bits: int, num_segments: int = 1) -> int:
     """LSD scatter passes: key digits, then segment-id digits (if any)."""
     passes = ki.cdiv(key_bits, digit_bits)

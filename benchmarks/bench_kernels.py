@@ -43,6 +43,9 @@ from repro.core.layout import Batched, Segmented
 from repro.kernels import ref
 
 POLICY = ki.resolve_tuning("tpu_v5e")
+# GPU structural entries are keyed to one concrete chip policy so the
+# budgets are deterministic (the A100 ladder point; see intrinsics.py).
+GPU_POLICY = ki.resolve_tuning("gpu_a100")
 
 
 def _us(s):
@@ -324,7 +327,34 @@ def ci_structural_entries() -> dict:
             AN.batched_matvec_bytes(64, 4096, 128, f32, policy=POLICY),
         "linear_recurrence@batched/float32/B=64xT=4096xC=256":
             AN.channel_scan_bytes(64, 4096, 256, 2, 2, f32, POLICY),
+        # pallas-gpu routes (gpu_a100 policy).  The scan entries encode the
+        # single-pass decoupled-lookback bound: 2n element movement plus
+        # only the O(n/block) cross-block mailbox -- NOT the 3n of
+        # scan-then-propagate.
+        "copy@flat/pallas-gpu/float32/n=1e6":
+            AN.gpu_copy_bytes(N, f32, GPU_POLICY.nitem_copy, GPU_POLICY),
+        "scan@flat/pallas-gpu/float32/n=1e6":
+            AN.gpu_scan_bytes(N, [f32], GPU_POLICY),
+        "scan@flat/pallas-gpu/bfloat16/n=1e6":
+            AN.gpu_scan_bytes(N, [bf16], GPU_POLICY),
+        "scan@batched/pallas-gpu/float32/B=64xn=16384":
+            AN.gpu_batched_scan_bytes(64, 16384, [f32], GPU_POLICY),
+        "mapreduce@flat/pallas-gpu/float32/n=1e6":
+            AN.gpu_mapreduce_bytes(N, [f32], [f32], GPU_POLICY),
+        "mapreduce@flat/pallas-gpu/uint8/n=1e6":
+            AN.gpu_mapreduce_bytes(N, [u8], [f32], GPU_POLICY),
+        "mapreduce@batched/pallas-gpu/float32/B=64xn=16384":
+            AN.gpu_batched_mapreduce_bytes(64, 16384, [f32], [f32],
+                                           GPU_POLICY),
+        "matvec@flat/pallas-gpu/float32/1e3x1e4":
+            AN.gpu_matvec_bytes(10**3, 10**4, f32, policy=GPU_POLICY),
+        "vecmat@flat/pallas-gpu/float32/1e4x1e3":
+            AN.gpu_vecmat_bytes(10**4, 10**3, f32, policy=GPU_POLICY),
     }
+    # ~2n: element movement + tile padding + the O(n/block) mailbox, with
+    # a 5% structural allowance -- far below the 3n of a two-pass scan.
+    assert e["scan@flat/pallas-gpu/float32/n=1e6"] <= int(2.1 * N * 4), \
+        "gpu scan lost its single-pass ~2n bound"
     return {k: int(v) for k, v in e.items()}
 
 
@@ -375,6 +405,20 @@ def ci_correctness():
     bb = jax.random.normal(jax.random.PRNGKey(8), (2, 37, 130), jnp.float32)
     _check(forge.linear_recurrence(ab, bb, layout=Batched(), backend=B),
            ref.ref_batched_linear_recurrence(ab, bb), 1e-3)
+    # pallas-gpu kernel bodies under interpret mode: the lookback scan
+    # crossing a block boundary, the partials-fold reduce, and the radix
+    # composition riding both.
+    G = "pallas-gpu"
+    _check(forge.scan(alg.ADD, x, backend=G), ref.ref_scan(alg.ADD, x), 1e-3)
+    _check(forge.scan(alg.ADD, xb, layout=Batched(), backend=G),
+           ref.ref_batched_scan(alg.ADD, xb), 1e-3)
+    _check(forge.mapreduce(alg.unitfloat8_decode, alg.ADD, u, backend=G),
+           ref.ref_mapreduce(alg.unitfloat8_decode, alg.ADD, u), 1e-2)
+    _check_exact(forge.sort(ku, backend=G), ref.ref_sort(ku))
+    _check(forge.matvec(lambda xv, av: xv * av, alg.ADD, Ab[0], vb[0],
+                        backend=G),
+           ref.ref_matvec(lambda xv, av: xv * av, alg.ADD, Ab[0], vb[0]),
+           1e-3)
     print(f"ci correctness (interpret, small sizes): OK "
           f"({time.time()-t0:.1f}s)")
 

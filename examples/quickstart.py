@@ -104,5 +104,15 @@ logits = jax.random.normal(jax.random.fold_in(key, 11), (10,), jnp.float32)
 v, i = forge.top_k(logits, 2, layout=Segmented(offsets=offs), backend=B)
 print("per-request top-2 logits:", np.round(np.asarray(v), 2).tolist(),
       "ids:", np.asarray(i).tolist())
+print("\n== 9. backend selection: scoped, queryable, zero call changes ==")
+import repro
+
+print("available:", ", ".join(repro.available_backends()))
+print("scan@flat native on pallas-gpu?",
+      repro.supports("scan@flat", "pallas-gpu"))
+with repro.use_backend("pallas-gpu"):   # GPU kernel bodies (interpreted on CPU)
+    g = forge.scan(alg.ADD, x[:300])
+print("scan under use_backend('pallas-gpu'):", np.asarray(g)[:4], "...")
+
 print("\n(quickstart done -- one entry point per primitive, layout as a"
-      " value, three backends, zero code changes)")
+      " value, four backends, zero code changes)")

@@ -1,3 +1,31 @@
-"""repro: KernelForge-TPU -- portable parallel primitives + multi-pod LM framework."""
+"""repro: KernelForge -- portable parallel primitives + multi-pod LM framework.
+
+Backend selection surface (the documented way to pick a lowering):
+
+    import repro
+    repro.available_backends()           # ("pallas-gpu", "pallas-interpret", ...)
+    repro.supports("scan@flat", "pallas-gpu")
+    with repro.use_backend("pallas-gpu"):
+        forge.scan(op, xs)               # every dispatch in scope uses it
+
+``use_backend`` is thread-safe and scoped; an explicit ``backend=`` argument
+on a primitive call still wins.  The legacy ``force_backend()`` global pin
+survives as a warn-once deprecated shim in ``repro.core.intrinsics``.
+"""
+
+from repro.core.intrinsics import (  # noqa: F401
+    available_backends,
+    current_backend,
+    force_backend,  # deprecated shim (warns once); not in __all__
+    supports,
+    use_backend,
+)
+
+__all__ = [
+    "available_backends",
+    "current_backend",
+    "supports",
+    "use_backend",
+]
 
 __version__ = "0.1.0"

@@ -7,28 +7,38 @@ same *purposes* are served by different mechanisms (see DESIGN.md §2); this
 module provides them:
 
 * **In-tile combines** (:func:`tile_scan`, :func:`tile_reduce`): the shuffle
-  analogue.  A Pallas block holds an ``(sublane, 128)``-aligned tile in vector
-  registers; log-step shifted combines emitted here lower to in-register VPU
-  ops.  Arbitrary element types are pytrees -- JAX tracing specializes the
-  structural recursion at compile time like Julia's ``@generated``.
+  analogue.  Log-step shifted combines over pytrees of tile values -- JAX
+  tracing specializes the structural recursion at compile time like Julia's
+  ``@generated``.  The *shift primitive* is flavor-dispatched
+  (:class:`IntrinsicsFlavor`): the TPU flavor emits roll+select combines
+  that lower to in-register VPU ops over ``(sublane, 128)`` tiles; the GPU
+  flavor emits identity-padded shifts -- the ``shfl_up`` formulation, where
+  lanes below the shift distance receive the operator identity so no
+  post-combine select is needed.
+* **Ordered visibility** (:func:`memory_fence`): the release/acquire
+  analogue behind the decoupled-lookback scan.  The TPU flavor is the
+  identity (grid steps execute sequentially per core, so prior tiles'
+  aggregates are visible by construction); the GPU flavor pins ordering
+  with an optimization barrier so the publish of a block's aggregate
+  cannot be reordered past the status flag derived from it (a hardware
+  Mosaic-GPU lowering strengthens this to a device-scope fence).
 * **Alignment / vectorization helpers** (:func:`min_tile`,
-  :func:`block_shape`, :func:`pattern_decompose`): the ``vload`` /
-  ``vload_pattern`` analogue.  Block shapes are chosen so every HBM->VMEM
-  transfer is wide and aligned; ragged tails become *statically generated*
-  masked patterns, never dynamic shapes.
-* **Grid-carry protocol** (documented here, implemented in kernels/scan.py):
-  the ordered-memory-access analogue.  TPU Pallas grid steps execute
-  sequentially per core, so a scratch carry gives the decoupled-lookback
-  guarantee (prior tiles' aggregates visible) by construction -- no
-  release/acquire flags, no spinning.
+  :func:`vec_width`, :func:`pattern_decompose`): the ``vload`` /
+  ``vload_pattern`` analogue.  Block shapes are chosen so every transfer
+  is wide and aligned -- ``vec_width`` is the float4-style vectorized
+  load/store width hint the GPU block arithmetic uses; ragged tails become
+  *statically generated* masked patterns, never dynamic shapes.
 * **Tuning-policy dispatch** (:class:`TuningPolicy`): the paper's
   ``A40 <: Ampere <: AbstractArch`` hierarchy, as a chip-family registry
   resolved at trace time.
-* **Backend dispatch** (:func:`register_impl` / :func:`resolve_impl`): the
-  package-extension mechanism.  Algorithms in ``core/primitives.py`` never
-  name a backend; implementations register themselves per backend and the
-  dispatcher picks ``pallas-tpu`` on TPU, ``xla`` elsewhere (and
-  ``pallas-interpret`` under the validation flag).
+* **Backend dispatch** (:func:`register_impl` / :func:`resolve_impl`) and
+  the **backend selection API** (:func:`use_backend`,
+  :func:`available_backends`, :func:`supports`): the package-extension
+  mechanism.  Algorithms in ``core/primitives.py`` never name a backend;
+  implementations register themselves per backend and the dispatcher picks
+  ``pallas-tpu`` on TPU, ``pallas-gpu`` on GPU, ``xla`` elsewhere --
+  overridable per call (``backend=``) or per scope
+  (``with use_backend("pallas-gpu"): ...``, thread-safe).
 * **The primitive registry** (:class:`PrimitiveDef` / :class:`RouteDef` /
   :func:`dispatch`): the declarative table behind the layout-polymorphic
   Layer-2 API.  One row per (primitive, layout) names the registered
@@ -40,8 +50,11 @@ module provides them:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -53,6 +66,7 @@ from repro.core import layout as lay
 Pytree = Any
 
 LANES = 128  # TPU vector lane count (minor-most tile dimension)
+WARP = 32    # GPU subgroup width (warp/wavefront32; the shuffle scope)
 
 _SUBLANE_BY_ITEMSIZE = {8: 4, 4: 8, 2: 16, 1: 32}
 
@@ -100,6 +114,20 @@ def tile_mask(tile_shape: Sequence[int], axis: int, start: Any, valid_until: Any
 
 # --------------------------------------------------------------------------
 # Shuffle analogue: in-tile ordered scans and reductions over pytrees.
+#
+# The log-step structure is shared; the *shift primitive* underneath it is
+# flavor-dispatched (IntrinsicsFlavor below), because TPUs and GPUs reach
+# "combine with the value s slots back" through different hardware:
+#
+# * "tpu": roll the tile and select -- lowers to in-register VPU permutes
+#   over (sublane, 128) tiles; no operator identity is needed.
+# * "gpu": identity-padded shift -- the warp/subgroup ``shfl_up``
+#   formulation, where slots below the shift distance receive the operator
+#   identity so the combine is unconditional (no post-select), exactly the
+#   shuffle-scan inner loop of the paper's KernelIntrinsics layer.
+#
+# Both produce bit-identical scans for any associative op (identity is
+# two-sided), so every flavor validates against the same oracle.
 # --------------------------------------------------------------------------
 
 
@@ -108,23 +136,131 @@ def _shift_along(x, s: int, axis: int):
     return jnp.roll(x, s, axis=axis)
 
 
-def tile_scan(op, x: Pytree, axis: int) -> Pytree:
+def _tpu_shift_combine(op, x: Pytree, s: int, axis: int, idx) -> Pytree:
+    """Roll + select: out[i] = i >= s ? op(x[i-s], x[i]) : x[i]."""
+    shifted = jax.tree.map(lambda l: _shift_along(l, s, axis), x)
+    combined = op(shifted, x)
+    keep = idx >= s
+    return jax.tree.map(lambda c, o: jnp.where(keep, c, o), combined, x)
+
+
+def _slice_head(l, s: int, axis: int):
+    sl = [slice(None)] * l.ndim
+    sl[axis] = slice(0, l.shape[axis] - s)
+    return l[tuple(sl)]
+
+
+def _gpu_shift_combine(op, x: Pytree, s: int, axis: int, idx) -> Pytree:
+    """shfl_up analogue: slots < s receive the operator identity, so the
+    combine needs no keep-mask select afterwards."""
+    def pad_shape(l):
+        shape = list(l.shape)
+        shape[axis] = s
+        return jax.ShapeDtypeStruct(tuple(shape), l.dtype)
+
+    ident = op.identity(jax.tree.map(pad_shape, x))
+    shifted = jax.tree.map(
+        lambda il, l: jnp.concatenate([il, _slice_head(l, s, axis)],
+                                      axis=axis), ident, x)
+    return op(shifted, x)
+
+
+def _fence_noop(values: Pytree) -> Pytree:
+    return values
+
+
+def _fence_barrier(values: Pytree) -> Pytree:
+    return jax.lax.optimization_barrier(values)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntrinsicsFlavor:
+    """One Layer-1 lowering strategy (per backend family).
+
+    ``shift_combine`` is the primitive under :func:`tile_scan` /
+    :func:`tile_reduce`; ``fence`` implements :func:`memory_fence`;
+    ``vec_bytes`` is the default vectorized load/store transaction width
+    :func:`vec_width` derives element counts from.
+    """
+
+    name: str
+    shift_combine: Callable
+    fence: Callable
+    vec_bytes: int
+
+
+_FLAVORS: dict[str, IntrinsicsFlavor] = {}
+_BACKEND_FLAVOR: dict[str, str] = {}
+
+
+def register_flavor(flavor: IntrinsicsFlavor, backends: Sequence[str] = ()):
+    """Register a Layer-1 flavor and map backend names onto it."""
+    _FLAVORS[flavor.name] = flavor
+    for b in backends:
+        _BACKEND_FLAVOR[b] = flavor.name
+
+
+register_flavor(
+    IntrinsicsFlavor("tpu", _tpu_shift_combine, _fence_noop,
+                     vec_bytes=4 * LANES),
+    backends=("pallas-tpu", "pallas-interpret", "xla"))
+register_flavor(
+    IntrinsicsFlavor("gpu", _gpu_shift_combine, _fence_barrier,
+                     vec_bytes=16),
+    backends=("pallas-gpu",))
+
+
+def get_flavor(name_or_backend: str) -> IntrinsicsFlavor:
+    """Resolve a flavor by its own name or by a backend name."""
+    name = _BACKEND_FLAVOR.get(name_or_backend, name_or_backend)
+    flavor = _FLAVORS.get(name)
+    if flavor is None:
+        raise ValueError(
+            f"unknown intrinsics flavor {name_or_backend!r} "
+            f"(flavors: {sorted(_FLAVORS)}; "
+            f"backends: {sorted(_BACKEND_FLAVOR)})")
+    return flavor
+
+
+def memory_fence(values: Pytree, *, flavor: str = "tpu") -> Pytree:
+    """Ordered-visibility edge: the returned values are guaranteed to be
+    materialized before anything computed *from them* afterwards.
+
+    Kernels thread a (publish, flag) pair through the fence so the status
+    flag a successor observes cannot be reordered before the aggregate it
+    guards -- the release/acquire protocol of decoupled lookback.  The TPU
+    flavor is the identity (per-core sequential grids order memory by
+    construction); the GPU flavor lowers to an optimization barrier today
+    and is the seam where a hardware Mosaic-GPU lowering emits a
+    device-scope fence.
+    """
+    return get_flavor(flavor).fence(values)
+
+
+def vec_width(dtype, *, flavor: str = "gpu") -> int:
+    """Elements per vectorized load/store transaction for ``dtype`` --
+    the float4-style width hint (16-byte transactions on GPUs, a full
+    lane-row on TPUs)."""
+    return max(1, get_flavor(flavor).vec_bytes // jnp.dtype(dtype).itemsize)
+
+
+def tile_scan(op, x: Pytree, axis: int, *, flavor: str = "tpu") -> Pytree:
     """In-order inclusive scan of a tile along ``axis`` (Hillis–Steele).
 
     log2(extent) shifted combines; order-preserving, so correct for
     non-commutative ``op`` (quaternions, affine maps, 2x2 matrices).
-    No identity needed: out[i] = i >= s ? op(x[i-s], x[i]) : x[i].
+    The shift primitive is flavor-dispatched (see module docstring): the
+    TPU form needs no identity (roll + select), the GPU form is the
+    identity-padded ``shfl_up`` combine.
     """
+    shift_combine = get_flavor(flavor).shift_combine
     leaves = jax.tree.leaves(x)
     extent = leaves[0].shape[axis]
     shape = leaves[0].shape
     idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis)
     s = 1
     while s < extent:
-        shifted = jax.tree.map(lambda l: _shift_along(l, s, axis), x)
-        combined = op(shifted, x)
-        keep = idx >= s
-        x = jax.tree.map(lambda c, o: jnp.where(keep, c, o), combined, x)
+        x = shift_combine(op, x, s, axis, idx)
         s *= 2
     return x
 
@@ -154,18 +290,18 @@ def _split_along(x: Pytree, axis: int, k: int) -> tuple[Pytree, Pytree]:
     return lo, hi
 
 
-def tile_reduce(op, x: Pytree, axis: int) -> Pytree:
+def tile_reduce(op, x: Pytree, axis: int, *, flavor: str = "tpu") -> Pytree:
     """Reduce a tile along ``axis``, keepdims.
 
     Commutative ops with power-of-two extents use a balanced halving fold
-    (fewest combines); otherwise an order-preserving scan + take-last.  The
-    commutativity dispatch is itself a tuning decision exposed by the
-    operator algebra (DESIGN.md §3).
+    (fewest combines, flavor-independent); otherwise an order-preserving
+    flavored scan + take-last.  The commutativity dispatch is itself a
+    tuning decision exposed by the operator algebra (DESIGN.md §3).
     """
     extent = jax.tree.leaves(x)[0].shape[axis]
     pow2 = extent > 0 and (extent & (extent - 1)) == 0
     if not getattr(op, "commutative", False) or not pow2:
-        return tile_take_last(tile_scan(op, x, axis), axis)
+        return tile_take_last(tile_scan(op, x, axis, flavor=flavor), axis)
     k = extent
     while k > 1:
         k //= 2
@@ -202,6 +338,14 @@ class TuningPolicy:
     # mean fewer passes but a larger per-pass rank scan; the sweet spot is
     # shape- and chip-dependent, so it sits on the tuning ladder.
     sort_digit_bits: int = 8
+    # GPU (pallas-gpu) block arithmetic: a block covers
+    # gpu_threads x nitem_* x vec_width(dtype) elements -- threads per
+    # block times the paper's items-per-thread times the vectorized
+    # transaction width, so the existing nitem_* ladders race meaningful
+    # GPU knobs with no new tuning keys.  gpu_vec_bytes is the vectorized
+    # load/store transaction width (float4-style 128-bit accesses).
+    gpu_threads: int = 128
+    gpu_vec_bytes: int = 16
 
 
 _TUNING_REGISTRY: dict[str, TuningPolicy] = {}
@@ -235,6 +379,33 @@ register_tuning(
                  matvec_rows=2, matvec_cols=1, vecmat_rows=2, vecmat_cols=1,
                  sort_digit_bits=4),
 )
+# GPU family (the paper's A40 <: Ampere chain, across vendors): blocks are
+# gpu_threads x nitem x vec elements.  Datacenter parts get more threads
+# per block; the MI300 wavefront64 part doubles the subgroup multiple.
+register_tuning("gpu_generic", TuningPolicy(name="gpu_generic"))
+register_tuning(
+    "gpu_a100",
+    TuningPolicy(name="gpu_a100", nitem_scan=16, nitem_reduce=8,
+                 gpu_threads=256),
+    parent="gpu_generic")
+register_tuning(
+    "gpu_h100",
+    TuningPolicy(name="gpu_h100", nitem_scan=32, nitem_reduce=16,
+                 gpu_threads=256),
+    parent="gpu_a100")
+register_tuning(
+    "gpu_mi300",
+    TuningPolicy(name="gpu_mi300", nitem_scan=16, nitem_reduce=8,
+                 gpu_threads=256),
+    parent="gpu_generic")
+# GPU kernel bodies under the Pallas interpreter (CI's gpu-interpret job):
+# small blocks keep the Python grid loop fast, same code paths as hardware.
+register_tuning(
+    "gpu_interpret",
+    TuningPolicy(name="gpu_interpret", nitem_scan=2, nitem_reduce=2,
+                 nitem_copy=2, matvec_rows=2, matvec_cols=1, vecmat_rows=2,
+                 vecmat_cols=1, sort_digit_bits=4, gpu_threads=32),
+    parent="gpu_generic")
 
 
 def resolve_tuning(name: str | None = None) -> TuningPolicy:
@@ -243,6 +414,9 @@ def resolve_tuning(name: str | None = None) -> TuningPolicy:
     while name not in _TUNING_REGISTRY:
         name = _TUNING_PARENTS.get(name, "generic")
     return _TUNING_REGISTRY[name]
+
+
+_GPU_PLATFORMS = ("gpu", "cuda", "rocm")
 
 
 def detect_chip() -> str:
@@ -254,19 +428,54 @@ def detect_chip() -> str:
         if "v5p" in kind or "v5" in kind:
             return "tpu_v5p"
         return "tpu_v5e"
+    if dev.platform in _GPU_PLATFORMS:
+        kind = getattr(dev, "device_kind", "").lower()
+        for tag, name in (("h100", "gpu_h100"), ("h200", "gpu_h100"),
+                          ("a100", "gpu_a100"), ("mi300", "gpu_mi300"),
+                          ("mi250", "gpu_mi300")):
+            if tag in kind:
+                return name
+        return "gpu_generic"
     return "generic"
 
 
+def default_policy_name(backend: str | None) -> str | None:
+    """Tuning-policy name a backend's kernels should resolve when no policy
+    is passed (None means: detect the chip).  Shared by the kernel wrappers
+    and the autotuner hook so both start from the same base policy."""
+    if backend == "pallas-interpret":
+        return "interpret"
+    if backend == "pallas-gpu":
+        # On a real GPU the chip detector picks the family; everywhere else
+        # the kernel bodies run under the interpreter and want tiny blocks.
+        return None if jax.default_backend() in _GPU_PLATFORMS \
+            else "gpu_interpret"
+    return None
+
+
 # --------------------------------------------------------------------------
-# Backend dispatch registry (package-extension analogue).
+# Backend dispatch registry (package-extension analogue) and the public
+# backend-selection API: a thread-safe scoped override (use_backend) plus
+# registry-driven capability queries (available_backends / supports).
 # --------------------------------------------------------------------------
 
 _IMPL_REGISTRY: dict[tuple[str, str], Callable] = {}
-_FORCED_BACKEND: str | None = None
+_FORCED_BACKEND: str | None = None           # legacy force_backend() shim
+_FORCE_BACKEND_WARNED = False
 # Optional autotuner hook (installed by core.tuning to avoid a layering
 # cycle): called as hook(primitive, backend, impl) and may return a wrapped
 # impl that injects a benchmarked TuningPolicy, or None to pass through.
 _TUNER_HOOK: Callable[[str, str, Callable], Callable | None] | None = None
+
+
+class _BackendScope(threading.local):
+    """Per-thread stack of use_backend() overrides (innermost wins)."""
+
+    def __init__(self):
+        self.stack: list[str] = []
+
+
+_BACKEND_SCOPE = _BackendScope()
 
 
 def set_tuner_hook(hook: Callable | None):
@@ -288,16 +497,81 @@ def registered_backends(key: str) -> list[str]:
     return sorted(b for (p, b) in _IMPL_REGISTRY if p == key)
 
 
+def _known_backends() -> set[str]:
+    # Registration happens when kernels/ops.py imports; pull it in lazily so
+    # the query API works from a bare `import repro` without making Layer 1
+    # depend on the kernels package at import time.
+    if not _IMPL_REGISTRY:
+        from repro.kernels import ops as _ops  # noqa: F401
+    return {b for (_, b) in _IMPL_REGISTRY}
+
+
+def available_backends() -> tuple[str, ...]:
+    """All backend names with at least one registered implementation."""
+    return tuple(sorted(_known_backends()))
+
+
+def supports(route: str, backend: str) -> bool:
+    """Whether ``route`` (e.g. ``"scan@batched"``) has a native ``backend``
+    implementation.  False means dispatch would use the xla fallback."""
+    known = _known_backends()
+    if route not in route_keys():
+        raise ValueError(
+            f"unknown route {route!r} (routes: {sorted(route_keys())})")
+    return (route, backend) in _IMPL_REGISTRY and backend in known
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Scoped backend override: ``with use_backend("pallas-gpu"): ...``.
+
+    Thread-safe (each thread keeps its own stack; innermost scope wins) and
+    validated against the registry up front, so a typo fails at the `with`
+    statement rather than as a silent xla fallback deep in a trace.  An
+    explicit ``backend=`` argument on a primitive call still takes
+    precedence over the scope.
+    """
+    if backend not in _known_backends():
+        raise ValueError(
+            f"unknown backend {backend!r} "
+            f"(available: {', '.join(available_backends())})")
+    _BACKEND_SCOPE.stack.append(backend)
+    try:
+        yield backend
+    finally:
+        _BACKEND_SCOPE.stack.pop()
+
+
 def force_backend(backend: str | None):
-    """Force a backend globally (used by tests to pin pallas-interpret)."""
-    global _FORCED_BACKEND
+    """Deprecated: process-global backend pin.  Use :func:`use_backend`.
+
+    Kept as a warn-once shim with unchanged behavior (a global default that
+    scoped overrides and explicit ``backend=`` arguments still beat).
+    """
+    global _FORCED_BACKEND, _FORCE_BACKEND_WARNED
+    if not _FORCE_BACKEND_WARNED:
+        warnings.warn(
+            "force_backend() is deprecated; use the scoped "
+            "repro.use_backend(...) context manager instead",
+            DeprecationWarning, stacklevel=2)
+        _FORCE_BACKEND_WARNED = True
     _FORCED_BACKEND = backend
 
 
 def current_backend() -> str:
+    """The backend dispatch uses when no explicit ``backend=`` is passed:
+    innermost use_backend() scope, else the (deprecated) forced global,
+    else the platform default."""
+    if _BACKEND_SCOPE.stack:
+        return _BACKEND_SCOPE.stack[-1]
     if _FORCED_BACKEND is not None:
         return _FORCED_BACKEND
-    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return "pallas-tpu"
+    if platform in _GPU_PLATFORMS:
+        return "pallas-gpu"
+    return "xla"
 
 
 def resolve_impl(primitive: str, backend: str | None = None) -> Callable:
@@ -305,6 +579,13 @@ def resolve_impl(primitive: str, backend: str | None = None) -> Callable:
     key = (primitive, backend)
     impl = _IMPL_REGISTRY.get(key)
     if impl is None:
+        if backend not in _known_backends():
+            # Unknown backend *names* are user errors and fail loudly,
+            # uniformly naming the route; known backends without a native
+            # implementation for this route fall back below.
+            raise ValueError(
+                f"{primitive}: unknown backend {backend!r} "
+                f"(available: {', '.join(available_backends())})")
         # Fall back to the portable XLA implementation -- the algorithmic
         # layer is always available even on backends with no Pallas lowering.
         impl = _IMPL_REGISTRY.get((primitive, "xla"))

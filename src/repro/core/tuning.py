@@ -300,8 +300,7 @@ def _hook(primitive: str, backend: str, impl: Callable) -> Callable | None:
         if keyinfo is None:
             return impl(*args, **kwargs)
         key = tuner.make_key(primitive, backend, *keyinfo)
-        base = ki.resolve_tuning(
-            "interpret" if backend == "pallas-interpret" else None)
+        base = ki.resolve_tuning(ki.default_policy_name(backend))
         entry = tuner.lookup(key)
         if entry is None:
             if not _all_concrete(args, kwargs):

@@ -44,9 +44,10 @@ Two calling forms, selected by the layout descriptor
   compute and the collective fold are emitted.  This is how
   ``distributed/collectives.py`` dispatches the flash-decoding merge.
 
-Registered for all three backends in ``kernels/ops.py``; ``sub_backend``
-names the backend the *local* routes dispatch to, so ``pallas-interpret``
-exercises the real kernel bodies under the collective composition.
+Registered for every backend in ``kernels/ops.py``; ``backend`` names the
+backend the *local* routes dispatch to (the same spelling every primitive
+uses), so ``pallas-interpret`` exercises the real kernel bodies and
+``pallas-gpu`` runs the GPU lowerings under the collective composition.
 """
 from __future__ import annotations
 
@@ -122,8 +123,8 @@ def _exclusive_carry(op: alg.AssocOp, total: Pytree, axis_name: str) -> Pytree:
     return carry
 
 
-def _scan_local(op, xs_loc, *, axis_name, inclusive, sub_backend, policy):
-    incl = ki.dispatch("scan", None, sub_backend, (op, xs_loc),
+def _scan_local(op, xs_loc, *, axis_name, inclusive, backend, policy):
+    incl = ki.dispatch("scan", None, backend, (op, xs_loc),
                        {"axis": 0, "inclusive": True, "reverse": False,
                         "policy": policy})
     total = jax.tree.map(lambda l: l[-1:], incl)
@@ -138,10 +139,10 @@ def _scan_local(op, xs_loc, *, axis_name, inclusive, sub_backend, policy):
 
 
 def sharded_scan(op, xs, *, axis_name, mesh, inclusive=True,
-                 sub_backend="xla", policy=None):
+                 backend="xla", policy=None):
     if mesh is None:
         return _scan_local(op, xs, axis_name=axis_name, inclusive=inclusive,
-                           sub_backend=sub_backend, policy=policy)
+                           backend=backend, policy=policy)
     shards = _axis_extent(mesh, axis_name)
     n = _lead(xs)
     n_pad = -(-n // shards) * shards
@@ -151,7 +152,7 @@ def sharded_scan(op, xs, *, axis_name, mesh, inclusive=True,
 
     def local(xs_loc):
         return _scan_local(op, xs_loc, axis_name=axis_name,
-                           inclusive=inclusive, sub_backend=sub_backend,
+                           inclusive=inclusive, backend=backend,
                            policy=policy)
 
     out = shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
@@ -188,19 +189,19 @@ def _fold_axis0(op, vals):
     return jax.tree.map(lambda l: l[0], vals)
 
 
-def _reduce_local(op, vals_loc, *, sub_backend, policy):
+def _reduce_local(op, vals_loc, *, backend, policy):
     """Reduce leaf axis 0 of the local shard, elementwise over the rest."""
     if all(l.ndim == 1 for l in jax.tree.leaves(vals_loc)):
-        return ki.dispatch("mapreduce", None, sub_backend,
+        return ki.dispatch("mapreduce", None, backend,
                            (lambda v: v, op, vals_loc),
                            {"axis": None, "policy": policy})
     return _fold_axis0(op, vals_loc)
 
 
-def sharded_mapreduce(f, op, xs, *, axis_name, mesh, sub_backend="xla",
+def sharded_mapreduce(f, op, xs, *, axis_name, mesh, backend="xla",
                       policy=None):
     if mesh is None:
-        part = _reduce_local(op, f(xs), sub_backend=sub_backend,
+        part = _reduce_local(op, f(xs), backend=backend,
                              policy=policy)
         return alg.collective_fold(op, axis_name)(part)
     shards = _axis_extent(mesh, axis_name)
@@ -217,7 +218,7 @@ def sharded_mapreduce(f, op, xs, *, axis_name, mesh, sub_backend="xla",
         vals = _pad_with(vals, n_pad - n, ident)
 
     def local(vals_loc):
-        part = _reduce_local(op, vals_loc, sub_backend=sub_backend,
+        part = _reduce_local(op, vals_loc, backend=backend,
                              policy=policy)
         return alg.collective_fold(op, axis_name)(part)
 
@@ -230,11 +231,11 @@ def sharded_mapreduce(f, op, xs, *, axis_name, mesh, sub_backend="xla",
 # ---------------------------------------------------------------------------
 
 
-def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, sub_backend,
+def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, backend,
                  policy):
     n_loc = keys_loc.shape[0]
     kk = min(k, n_loc)
-    v, i = ki.dispatch("top_k", None, sub_backend, (keys_loc, kk),
+    v, i = ki.dispatch("top_k", None, backend, (keys_loc, kk),
                        {"largest": largest, "key_bits": key_bits,
                         "policy": policy})
     gi = i + (jax.lax.axis_index(axis_name) * n_loc).astype(i.dtype)
@@ -249,7 +250,7 @@ def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, sub_backend,
     # tie-stable by local index; gathering in axis order makes the stable
     # merge sort tie-stable by *global* index -- identical to the flat
     # oracle's order.
-    mv, mi = ki.dispatch("sort_pairs", None, sub_backend,
+    mv, mi = ki.dispatch("sort_pairs", None, backend,
                          (gv.reshape(-1), ggi.reshape(-1)),
                          {"descending": largest, "key_bits": key_bits,
                           "policy": policy})
@@ -257,12 +258,12 @@ def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, sub_backend,
 
 
 def sharded_top_k(keys, k, *, axis_name, mesh, largest=True, key_bits=None,
-                  sub_backend="xla", policy=None):
+                  backend="xla", policy=None):
     if k == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
     if mesh is None:
         return _top_k_local(keys, k, axis_name=axis_name, largest=largest,
-                            key_bits=key_bits, sub_backend=sub_backend,
+                            key_bits=key_bits, backend=backend,
                             policy=policy)
     n = keys.shape[0]
     if not 0 <= k <= n:
@@ -280,7 +281,7 @@ def sharded_top_k(keys, k, *, axis_name, mesh, largest=True, key_bits=None,
     def local(keys_loc):
         return _top_k_local(keys_loc, k, axis_name=axis_name,
                             largest=largest, key_bits=key_bits,
-                            sub_backend=sub_backend, policy=policy)
+                            backend=backend, policy=policy)
 
     return shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
                      out_specs=(P(), P()), check_rep=False)(keys)
@@ -292,9 +293,9 @@ def sharded_top_k(keys, k, *, axis_name, mesh, largest=True, key_bits=None,
 
 
 def _sort_pairs_local(keys_loc, values_loc, *, axis_name, descending,
-                      key_bits, sub_backend, policy):
+                      key_bits, backend, policy):
     n_loc = keys_loc.shape[0]
-    ks, vs = ki.dispatch("sort_pairs", None, sub_backend,
+    ks, vs = ki.dispatch("sort_pairs", None, backend,
                          (keys_loc, values_loc),
                          {"descending": descending, "key_bits": key_bits,
                           "policy": policy})
@@ -336,11 +337,11 @@ def _sort_pairs_local(keys_loc, values_loc, *, axis_name, descending,
 
 
 def sharded_sort_pairs(keys, values, *, axis_name, mesh, descending=False,
-                       key_bits=None, sub_backend="xla", policy=None):
+                       key_bits=None, backend="xla", policy=None):
     if mesh is None:
         return _sort_pairs_local(keys, values, axis_name=axis_name,
                                  descending=descending, key_bits=key_bits,
-                                 sub_backend=sub_backend, policy=policy)
+                                 backend=backend, policy=policy)
     n = keys.shape[0]
     if n == 0:
         return keys, values
@@ -360,7 +361,7 @@ def sharded_sort_pairs(keys, values, *, axis_name, mesh, descending=False,
     def local(keys_loc, values_loc):
         return _sort_pairs_local(keys_loc, values_loc, axis_name=axis_name,
                                  descending=descending, key_bits=key_bits,
-                                 sub_backend=sub_backend, policy=policy)
+                                 backend=backend, policy=policy)
 
     out_k, out_v = shard_map(
         local, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),

@@ -2,10 +2,15 @@
 
 This module is the "package extension" of the two-layer design: it registers
 each (primitive, layout) route's implementations with the Layer-1 registry
-(``core.intrinsics``) under three backends:
+(``core.intrinsics``) under four backends:
 
 * ``pallas-tpu``       -- the Pallas kernels, compiled by Mosaic (TARGET);
-* ``pallas-interpret`` -- the same kernel bodies executed in Python on CPU
+* ``pallas-gpu``       -- the GPU kernel bodies (kernels/gpu.py):
+                          decoupled-lookback scan, two-phase mapreduce,
+                          strip-mined semiring matvec/vecmat -- compiled by
+                          Triton/Mosaic-GPU on a GPU platform, interpreted
+                          elsewhere (the kernels auto-detect);
+* ``pallas-interpret`` -- the TPU kernel bodies executed in Python on CPU
                           (correctness validation of the TPU path);
 * ``xla``              -- portable pure-XLA fallbacks (used by the CPU
                           dry-run; also the baseline the benchmarks compare
@@ -35,6 +40,7 @@ from repro.core import operators as alg
 from repro.distributed import primitives as dist_k
 from repro.kernels import batched as batched_k
 from repro.kernels import copy as copy_k
+from repro.kernels import gpu as gpu_k
 from repro.kernels import mapreduce as mapreduce_k
 from repro.kernels import matvec as matvec_k
 from repro.kernels import ref
@@ -110,6 +116,75 @@ def np_prod(t):
 
 def _scan_xla(op, xs, *, axis=0, inclusive=True, reverse=False, policy=None):
     return ref.ref_scan(op, xs, axis=axis, inclusive=inclusive, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# pallas-gpu wrappers: shape normalization onto the flat/batched lookback
+# kernels (kernels/gpu.py).  The GPU kernels scan along the minor axis, so
+# every other layout is moveaxis-normalized to (lead, n).
+# ---------------------------------------------------------------------------
+
+
+def _scan_gpu(op, xs, *, axis=0, inclusive=True, reverse=False,
+              interpret=None, policy=None):
+    leaves = jax.tree.leaves(xs)
+    ndim = leaves[0].ndim
+    if reverse:
+        xs = jax.tree.map(lambda l: jnp.flip(l, axis), xs)
+    if ndim == 1:
+        out = gpu_k.scan_flat_gpu(op, xs, inclusive=inclusive,
+                                  policy=policy, interpret=interpret)
+    else:
+        def to2(l):
+            l2 = jnp.moveaxis(l, axis, -1)
+            return l2.reshape(-1, l2.shape[-1]), l2.shape
+
+        shapes = [to2(l)[1] for l in leaves]
+        xs2 = jax.tree.map(lambda l: to2(l)[0], xs)
+        out2 = gpu_k.scan_batched_gpu(op, xs2, inclusive=inclusive,
+                                      policy=policy, interpret=interpret)
+        outs = [jnp.moveaxis(l.reshape(s), -1, axis)
+                for l, s in zip(jax.tree.leaves(out2), shapes)]
+        out = jax.tree.unflatten(jax.tree.structure(xs), outs)
+    if reverse:
+        out = jax.tree.map(lambda l: jnp.flip(l, axis), out)
+    return out
+
+
+def _batched_scan_gpu(op, xs, *, inclusive=True, reverse=False,
+                      interpret=None, policy=None):
+    if reverse:
+        xs = jax.tree.map(lambda l: jnp.flip(l, 1), xs)
+    out = gpu_k.scan_batched_gpu(op, xs, inclusive=inclusive,
+                                 policy=policy, interpret=interpret)
+    if reverse:
+        out = jax.tree.map(lambda l: jnp.flip(l, 1), out)
+    return out
+
+
+def _mapreduce_gpu(f, op, xs, *, axis=None, interpret=None, policy=None):
+    leaves = jax.tree.leaves(xs)
+    ndim = leaves[0].ndim
+    if axis is None:
+        flat = jax.tree.map(lambda l: l.reshape(-1), xs)
+        return gpu_k.mapreduce_flat_gpu(f, op, flat, policy=policy,
+                                        interpret=interpret)
+    if ndim == 2:
+        # Rows of the batched reducer are whichever axis survives: reducing
+        # axis 0 transposes so columns become independent rows.
+        if axis == 0:
+            xs = jax.tree.map(lambda l: l.T, xs)
+        return gpu_k.mapreduce_batched_gpu(f, op, xs, policy=policy,
+                                           interpret=interpret)
+    raise NotImplementedError("mapreduce: gpu path supports axis=None or 2D")
+
+
+def _linrec_gpu(a, b, h0=None, *, reverse=False, interpret=None, policy=None):
+    A, B = _scan_gpu(alg.AFFINE, (a, b), axis=1, inclusive=True,
+                     reverse=reverse, interpret=interpret, policy=policy)
+    if h0 is None:
+        return B
+    return A * h0[:, None, :] + B
 
 
 # ---------------------------------------------------------------------------
@@ -416,33 +491,49 @@ def _pallas_pair(fn):
 
 
 def _per_backend(fn):
-    return {b: functools.partial(fn, sub_backend=b)
-            for b in ("pallas-tpu", "pallas-interpret", "xla")}
+    # Compositions (radix sorts, sharded folds) take the backend their
+    # scan/mapreduce building blocks dispatch to -- the same ``backend``
+    # spelling as everywhere else, so each registered row just pins it.
+    return {b: functools.partial(fn, backend=b)
+            for b in ("pallas-tpu", "pallas-gpu", "pallas-interpret", "xla")}
 
 
 IMPLS: dict[str, dict[str, Any]] = {
-    "copy@flat": {**_pallas_pair(copy_k.copy_pallas), "xla": _copy_xla},
-    "scan@flat": {**_pallas_pair(_scan_pallas), "xla": _scan_xla},
+    "copy@flat": {**_pallas_pair(copy_k.copy_pallas), "xla": _copy_xla,
+                  "pallas-gpu": gpu_k.copy_gpu},
+    "scan@flat": {**_pallas_pair(_scan_pallas), "xla": _scan_xla,
+                  "pallas-gpu": _scan_gpu},
     "scan@batched": {**_pallas_pair(_batched_scan_pallas),
-                     "xla": _batched_scan_xla},
+                     "xla": _batched_scan_xla,
+                     "pallas-gpu": _batched_scan_gpu},
+    # scan@segmented / mapreduce@segmented have no native pallas-gpu rows
+    # (yet): dispatch falls back to xla, and supports() reports it.
     "scan@segmented": {**_pallas_pair(_segmented_scan_pallas),
                        "xla": _segmented_scan_xla},
     "mapreduce@flat": {**_pallas_pair(_mapreduce_pallas),
-                       "xla": _mapreduce_xla},
+                       "xla": _mapreduce_xla,
+                       "pallas-gpu": _mapreduce_gpu},
     "mapreduce@batched": {**_pallas_pair(_batched_mapreduce_pallas),
-                          "xla": _batched_mapreduce_xla},
+                          "xla": _batched_mapreduce_xla,
+                          "pallas-gpu": gpu_k.mapreduce_batched_gpu},
     "mapreduce@segmented": {**_pallas_pair(_segmented_mapreduce_pallas),
                             "xla": _segmented_mapreduce_xla},
-    "matvec@flat": {**_pallas_pair(_matvec_pallas), "xla": _matvec_xla},
+    "matvec@flat": {**_pallas_pair(_matvec_pallas), "xla": _matvec_xla,
+                    "pallas-gpu": gpu_k.matvec_gpu},
     "matvec@batched": {**_pallas_pair(_batched_matvec_pallas),
-                       "xla": _batched_matvec_xla},
-    "vecmat@flat": {**_pallas_pair(_vecmat_pallas), "xla": _vecmat_xla},
+                       "xla": _batched_matvec_xla,
+                       "pallas-gpu": gpu_k.batched_matvec_gpu},
+    "vecmat@flat": {**_pallas_pair(_vecmat_pallas), "xla": _vecmat_xla,
+                    "pallas-gpu": gpu_k.vecmat_gpu},
     "vecmat@batched": {**_pallas_pair(_batched_vecmat_pallas),
-                       "xla": _batched_vecmat_xla},
+                       "xla": _batched_vecmat_xla,
+                       "pallas-gpu": gpu_k.batched_vecmat_gpu},
     "linear_recurrence@flat": {**_pallas_pair(_linrec_pallas),
-                               "xla": _linrec_xla},
+                               "xla": _linrec_xla,
+                               "pallas-gpu": _linrec_gpu},
     "linear_recurrence@batched": {**_pallas_pair(_linrec_pallas),
-                                  "xla": _linrec_xla},
+                                  "xla": _linrec_xla,
+                                  "pallas-gpu": _linrec_gpu},
     "sort@flat": _per_backend(sort_k.sort_radix),
     "sort@segmented": _per_backend(sort_k.segmented_sort_radix),
     "sort_pairs@flat": _per_backend(sort_k.sort_pairs_radix),
@@ -452,9 +543,10 @@ IMPLS: dict[str, dict[str, Any]] = {
     "top_k@flat": _per_backend(sort_k.top_k_radix),
     "top_k@segmented": _per_backend(sort_k.segmented_top_k_radix),
     # Device-spanning routes (distributed/primitives.py): the local route
-    # plus the operator's collective fold.  ``sub_backend`` names the
-    # backend the shard-local compute dispatches to, so pallas-interpret
-    # runs the real kernel bodies under the collective composition.
+    # plus the operator's collective fold.  ``backend`` names the backend
+    # the shard-local compute dispatches to, so pallas-interpret runs the
+    # real kernel bodies (and pallas-gpu the GPU lowerings) under the
+    # collective composition.
     "scan@sharded": _per_backend(dist_k.sharded_scan),
     "mapreduce@sharded": _per_backend(dist_k.sharded_mapreduce),
     "sort_pairs@sharded": _per_backend(dist_k.sharded_sort_pairs),

@@ -16,11 +16,11 @@ least-significant-digit radix sort is
 5. **scatter** of keys (and any payload pytree) to
    ``base[digit] + rank``.
 
-No step names a backend: every scan/mapreduce goes through the Layer-1
-dispatch registry, so the same code runs on ``pallas-tpu``,
-``pallas-interpret`` and ``xla`` -- the scatter/gather glue between passes is
-dispatch-layer XLA, exactly like the segmented primitives' descriptor
-bookkeeping.
+No step hardcodes a backend: every scan/mapreduce goes through the Layer-1
+dispatch registry keyed by the ``backend=`` parameter, so the same code runs
+on ``pallas-tpu``, ``pallas-gpu``, ``pallas-interpret`` and ``xla`` -- the
+scatter/gather glue between passes is dispatch-layer XLA, exactly like the
+segmented primitives' descriptor bookkeeping.
 
 The segmented variants reuse the PR 1 descriptors (flag array / CSR
 offsets): a segmented sort is two chained stable radix phases -- key digits
@@ -52,8 +52,7 @@ Pytree = Any
 def _resolve_policy(policy, backend):
     if policy is not None:
         return policy
-    return ki.resolve_tuning("interpret" if backend == "pallas-interpret"
-                             else None)
+    return ki.resolve_tuning(ki.default_policy_name(backend))
 
 
 def _full_mask(kb: int, dtype) -> jax.Array:
@@ -141,23 +140,23 @@ def _from_bits(bits, dtype, kb, descending):
 # ---------------------------------------------------------------------------
 
 
-def sort_radix(keys, *, descending=False, key_bits=None, sub_backend="xla",
+def sort_radix(keys, *, descending=False, key_bits=None, backend="xla",
                policy=None):
     """Stable LSD radix sort of a flat key array (keys only: 2n/pass)."""
-    policy = _resolve_policy(policy, sub_backend)
+    policy = _resolve_policy(policy, backend)
     kb = _key_bits_for(keys, key_bits)
     if keys.shape[0] == 0:
         return keys
     bits = _to_bits(keys, kb, descending)
     bits, _ = _radix_passes(bits, (), kb, policy.sort_digit_bits,
-                            sub_backend, policy)
+                            backend, policy)
     return _from_bits(bits, keys.dtype, kb, descending)
 
 
 def sort_pairs_radix(keys, values, *, descending=False, key_bits=None,
-                     sub_backend="xla", policy=None):
+                     backend="xla", policy=None):
     """Stable key sort carrying an arbitrary pytree payload along."""
-    policy = _resolve_policy(policy, sub_backend)
+    policy = _resolve_policy(policy, backend)
     kb = _key_bits_for(keys, key_bits)
     leaves, treedef = jax.tree.flatten(values)
     n = keys.shape[0]
@@ -169,36 +168,36 @@ def sort_pairs_radix(keys, values, *, descending=False, key_bits=None,
         return keys, values
     bits = _to_bits(keys, kb, descending)
     bits, leaves = _radix_passes(bits, tuple(leaves), kb,
-                                 policy.sort_digit_bits, sub_backend, policy)
+                                 policy.sort_digit_bits, backend, policy)
     return (_from_bits(bits, keys.dtype, kb, descending),
             jax.tree.unflatten(treedef, list(leaves)))
 
 
 def argsort_radix(keys, *, descending=False, key_bits=None,
-                  sub_backend="xla", policy=None):
+                  backend="xla", policy=None):
     """Stable sorting permutation (int32), via an index payload."""
     n = keys.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
     _, perm = sort_pairs_radix(keys, iota, descending=descending,
-                               key_bits=key_bits, sub_backend=sub_backend,
+                               key_bits=key_bits, backend=backend,
                                policy=policy)
     return perm
 
 
-def top_k_radix(keys, k, *, largest=True, key_bits=None, sub_backend="xla",
+def top_k_radix(keys, k, *, largest=True, key_bits=None, backend="xla",
                 policy=None):
     """(values, indices) of the k extreme elements, sorted, ties stable."""
     n = keys.shape[0]
     if not 0 <= k <= n:
         raise ValueError(f"top_k: need 0 <= k <= n, got k={k}, n={n}")
-    policy = _resolve_policy(policy, sub_backend)
+    policy = _resolve_policy(policy, backend)
     kb = _key_bits_for(keys, key_bits)
     if k == 0:
         return keys[:0], jnp.zeros((0,), jnp.int32)
     bits = _to_bits(keys, kb, largest)
     iota = jnp.arange(n, dtype=jnp.int32)
     bits, (idx,) = _radix_passes(bits, (iota,), kb, policy.sort_digit_bits,
-                                 sub_backend, policy)
+                                 backend, policy)
     return _from_bits(bits[:k], keys.dtype, kb, largest), idx[:k]
 
 
@@ -235,29 +234,29 @@ def _segment_ids_and_starts(n, flags, offsets, backend, policy):
 
 
 def _segmented_sort_core(keys, payload_leaves, *, flags, offsets, descending,
-                         key_bits, sub_backend, policy, carry_starts=False):
+                         key_bits, backend, policy, carry_starts=False):
     """Two stable phases: key digits, then segment-id digits.
 
     With ``carry_starts`` each element's run-start index rides along as one
     extra int32 payload (argsort / top_k need it to localize indices).
     """
-    policy = _resolve_policy(policy, sub_backend)
+    policy = _resolve_policy(policy, backend)
     kb = _key_bits_for(keys, key_bits)
     n = keys.shape[0]
     if n == 0:
         return keys, tuple(payload_leaves), jnp.zeros((0,), jnp.int32)
     seg_ids, starts, seg_bits = _segment_ids_and_starts(
-        n, flags, offsets, sub_backend, policy)
+        n, flags, offsets, backend, policy)
     bits = _to_bits(keys, kb, descending)
     extra = (starts,) if carry_starts else ()
     carried = (seg_ids.astype(jnp.uint32),) + extra + tuple(payload_leaves)
     bits, carried = _radix_passes(bits, carried, kb, policy.sort_digit_bits,
-                                  sub_backend, policy)
+                                  backend, policy)
     payload = (bits,) + tuple(carried[1:])
     if seg_bits > 0:
         _, payload = _radix_passes(
             carried[0], payload, seg_bits, policy.sort_digit_bits,
-            sub_backend, policy)
+            backend, policy)
     if carry_starts:
         bits, starts, leaves = payload[0], payload[1], tuple(payload[2:])
     else:
@@ -266,17 +265,17 @@ def _segmented_sort_core(keys, payload_leaves, *, flags, offsets, descending,
 
 
 def segmented_sort_radix(keys, *, flags=None, offsets=None, descending=False,
-                         key_bits=None, sub_backend="xla", policy=None):
+                         key_bits=None, backend="xla", policy=None):
     """Independent stable sort of every contiguous segment (layout kept)."""
     out, _, _ = _segmented_sort_core(
         keys, (), flags=flags, offsets=offsets, descending=descending,
-        key_bits=key_bits, sub_backend=sub_backend, policy=policy)
+        key_bits=key_bits, backend=backend, policy=policy)
     return out
 
 
 def segmented_sort_pairs_radix(keys, values, *, flags=None, offsets=None,
                                descending=False, key_bits=None,
-                               sub_backend="xla", policy=None):
+                               backend="xla", policy=None):
     leaves, treedef = jax.tree.flatten(values)
     n = keys.shape[0]
     if any(l.shape[0] != n for l in leaves):
@@ -285,21 +284,21 @@ def segmented_sort_pairs_radix(keys, values, *, flags=None, offsets=None,
             f"{n}, got {[l.shape for l in leaves]}")
     out, out_leaves, _ = _segmented_sort_core(
         keys, tuple(leaves), flags=flags, offsets=offsets,
-        descending=descending, key_bits=key_bits, sub_backend=sub_backend,
+        descending=descending, key_bits=key_bits, backend=backend,
         policy=policy)
     return out, jax.tree.unflatten(treedef, list(out_leaves))
 
 
 def segmented_argsort_radix(keys, *, flags=None, offsets=None,
                             descending=False, key_bits=None,
-                            sub_backend="xla", policy=None):
+                            backend="xla", policy=None):
     """Within-segment sorting permutation: out[i] is the *offset inside its
     segment* of the element placed at flat position i."""
     n = keys.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
     _, (perm,), starts = _segmented_sort_core(
         keys, (iota,), flags=flags, offsets=offsets, descending=descending,
-        key_bits=key_bits, sub_backend=sub_backend, policy=policy,
+        key_bits=key_bits, backend=backend, policy=policy,
         carry_starts=True)
     # The sorted stream keeps the input's segment layout, and each element's
     # run start rode along through both phases -- so within-segment position
@@ -309,7 +308,7 @@ def segmented_argsort_radix(keys, *, flags=None, offsets=None,
 
 def segmented_top_k_radix(keys, k, *, flags=None, offsets=None,
                           num_segments=None, largest=True, key_bits=None,
-                          sub_backend="xla", policy=None):
+                          backend="xla", policy=None):
     """Per-segment (values, indices): ``(S, k)`` each, extreme-first.
 
     ``indices`` are within-segment offsets into the original layout; slots
@@ -318,11 +317,11 @@ def segmented_top_k_radix(keys, k, *, flags=None, offsets=None,
     index ``-1``.  With ``flags``, a static ``num_segments`` is required
     (trailing never-started segments come back entirely filled).
     """
-    policy = _resolve_policy(policy, sub_backend)
+    policy = _resolve_policy(policy, backend)
     if k < 0:
         raise ValueError(f"top_k: k must be >= 0, got {k}")
     n = keys.shape[0]
-    scan = ki.resolve_impl("scan@flat", sub_backend)
+    scan = ki.resolve_impl("scan@flat", backend)
     if offsets is not None:
         num_segments = int(offsets.shape[0]) - 1
         offs = offsets.astype(jnp.int32)
@@ -343,7 +342,7 @@ def segmented_top_k_radix(keys, k, *, flags=None, offsets=None,
     iota = jnp.arange(n, dtype=jnp.int32)
     sorted_keys, (perm,), starts = _segmented_sort_core(
         keys, (iota,), flags=flags, offsets=offsets, descending=largest,
-        key_bits=key_bits, sub_backend=sub_backend, policy=policy,
+        key_bits=key_bits, backend=backend, policy=policy,
         carry_starts=True)
     within = perm - starts
 

@@ -33,7 +33,7 @@ from repro.core import primitives as forge
 from repro.core.layout import Batched
 from repro.kernels import ref
 
-BACKENDS = ["pallas-interpret", "xla"]
+BACKENDS = ["pallas-interpret", "pallas-gpu", "xla"]
 
 # Declared oracle coverage, keyed by registry route (primitive@layout):
 # operator names exercised per batched route.  Non-commutative pytree ops

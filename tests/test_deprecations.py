@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from conftest import make_operand
+from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import primitives as forge
 from repro.core.layout import Batched, Segmented
@@ -180,3 +181,60 @@ def test_new_surface_does_not_warn():
         forge.mapreduce(lambda t: t, alg.ADD, jnp.ones((2, 4)),
                         layout=Batched(), backend="xla")
     assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# force_backend(): the process-global pin, deprecated in favor of the
+# scoped use_backend() context manager.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fresh_force_backend_state():
+    """Reset the force_backend warn-once flag and any forced global."""
+    saved_warned = ki._FORCE_BACKEND_WARNED
+    saved_forced = ki._FORCED_BACKEND
+    ki._FORCE_BACKEND_WARNED = False
+    ki._FORCED_BACKEND = None
+    yield
+    ki._FORCE_BACKEND_WARNED = saved_warned
+    ki._FORCED_BACKEND = saved_forced
+
+
+def test_force_backend_warns_once_and_matches_use_backend(
+        fresh_force_backend_state):
+    x = make_operand("add", _nprng("fb"), (33,))
+
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        ki.force_backend("pallas-interpret")
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, "expected exactly one DeprecationWarning"
+    assert "use_backend" in str(deps[0].message)
+
+    # While forced, dispatch resolves through the pin...
+    assert ki.current_backend() == "pallas-interpret"
+    got = forge.scan(alg.ADD, x)
+
+    # ...and later calls (including clearing the pin) stay silent.
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        ki.force_backend(None)
+    assert not [w for w in second
+                if issubclass(w.category, DeprecationWarning)], (
+        "force_backend warned twice")
+    assert ki._FORCED_BACKEND is None
+
+    # Bit-identical to the scoped replacement.
+    with ki.use_backend("pallas-interpret"):
+        want = forge.scan(alg.ADD, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_use_backend_scope_beats_forced_global(fresh_force_backend_state):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ki.force_backend("pallas-interpret")
+    with ki.use_backend("xla"):
+        assert ki.current_backend() == "xla"
+    assert ki.current_backend() == "pallas-interpret"

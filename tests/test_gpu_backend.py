@@ -1,0 +1,340 @@
+"""pallas-gpu backend conformance, run under Pallas interpret mode on CPU.
+
+Everything goes through the public forge surface with
+``backend="pallas-gpu"`` (or the scoped ``repro.use_backend``), so the
+whole route -- registry resolution, the ``gpu_interpret`` tuning policy,
+block-size arithmetic, the decoupled-lookback scan kernel, the
+partials-fold mapreduce, the accumulator matvec/vecmat, and the radix
+composition on top of them -- is exercised exactly as a GPU user would
+hit it.  Shapes are fuzzed around the *GPU* block boundary
+(``gpu_threads * nitem * vec_width``), which is where lookback carries,
+masking and grid arithmetic all change behavior.
+
+CI runs this file in the dedicated ``gpu-interpret`` job.
+"""
+import threading
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close, make_operand
+import repro
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Batched, Segmented
+from repro.kernels import ref
+
+GPU = "pallas-gpu"
+POL = ki.resolve_tuning("gpu_interpret")
+
+
+def _seed(*parts):
+    return zlib.crc32("|".join(str(p) for p in parts).encode())
+
+
+def _block(nitem_field, dtype=jnp.float32):
+    """The pallas-gpu tile extent under the gpu_interpret policy."""
+    nitem = getattr(POL, nitem_field)
+    return POL.gpu_threads * nitem * ki.vec_width(dtype, flavor="gpu")
+
+
+def _boundary_ns(block):
+    return [0, 1, block - 1, block, block + 1, 3 * block + 5]
+
+
+# ---------------------------------------------------------------------------
+# scan @ flat / @ batched
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op_name", ["add", "logsumexp", "mat2_mul"])
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_scan_flat_gpu(op_name, inclusive):
+    op = alg.STD_OPS[op_name]
+    block = _block("nitem_scan")
+    nprng = np.random.default_rng(_seed("scan-flat", op_name, inclusive))
+    for n in _boundary_ns(block):
+        x = make_operand(op_name, nprng, (n,))
+        got = forge.scan(op, x, inclusive=inclusive, backend=GPU)
+        want = ref.ref_scan(op, x, inclusive=inclusive)
+        tol = 1e-2 if op_name == "mat2_mul" else 1e-3
+        assert_trees_close(got, want, rtol=tol, atol=tol,
+                           err=f"scan@flat gpu {op_name} n={n}")
+
+
+def test_scan_flat_gpu_reverse():
+    op = alg.STD_OPS["add"]
+    block = _block("nitem_scan")
+    nprng = np.random.default_rng(_seed("scan-rev"))
+    x = make_operand("add", nprng, (block + 3,))
+    got = forge.scan(op, x, reverse=True, backend=GPU)
+    want = ref.ref_scan(op, x, reverse=True)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("op_name", ["add", "quaternion_mul"])
+def test_scan_batched_gpu(op_name):
+    op = alg.STD_OPS[op_name]
+    block = _block("nitem_scan")
+    nprng = np.random.default_rng(_seed("scan-batched", op_name))
+    for (b, n) in [(0, 5), (3, 0), (1, 1), (3, 7),
+                   (2, block - 1), (1, block), (2, block + 1)]:
+        x = make_operand(op_name, nprng, (b, n))
+        got = forge.scan(op, x, layout=Batched(), backend=GPU)
+        want = ref.ref_batched_scan(op, x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"scan@batched gpu {op_name} shape=({b},{n})")
+
+
+def test_scan_gpu_int_dtype_bit_exact():
+    block = _block("nitem_scan", jnp.int32)
+    x = jnp.asarray(
+        np.random.default_rng(_seed("int")).integers(-50, 50, block + 7),
+        jnp.int32)
+    got = forge.scan(alg.ADD, x, backend=GPU)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.cumsum(np.asarray(x), dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# mapreduce @ flat / @ batched
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op_name", ["add", "max", "logsumexp"])
+def test_mapreduce_flat_gpu(op_name):
+    op = alg.STD_OPS[op_name]
+    block = _block("nitem_reduce")
+    nprng = np.random.default_rng(_seed("mr-flat", op_name))
+    for n in [1, block - 1, block, block + 1, 3 * block + 5]:
+        x = make_operand(op_name, nprng, (n,))
+        got = forge.mapreduce(lambda v: v, op, x, backend=GPU)
+        want = ref.ref_mapreduce(lambda v: v, op, x)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
+                           err=f"mapreduce@flat gpu {op_name} n={n}")
+
+
+def test_mapreduce_flat_gpu_nontrivial_f():
+    nprng = np.random.default_rng(_seed("mr-f"))
+    block = _block("nitem_reduce")
+    x = make_operand("add", nprng, (2 * block + 9,))
+    got = forge.mapreduce(lambda v: v * v, alg.ADD, x, backend=GPU)
+    want = ref.ref_mapreduce(lambda v: v * v, alg.ADD, x)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("axis", [0, 1])
+def test_mapreduce_2d_axis_gpu(axis):
+    nprng = np.random.default_rng(_seed("mr-2d", axis))
+    x = make_operand("add", nprng, (3, _block("nitem_reduce") + 2))
+    got = forge.mapreduce(lambda v: v, alg.ADD, x, axis=axis, backend=GPU)
+    want = ref.ref_mapreduce(lambda v: v, alg.ADD, x, axis=axis)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op_name", ["add", "quaternion_mul"])
+def test_mapreduce_batched_gpu(op_name):
+    op = alg.STD_OPS[op_name]
+    block = _block("nitem_reduce")
+    nprng = np.random.default_rng(_seed("mr-batched", op_name))
+    for (b, n) in [(0, 5), (3, 0), (3, 7), (2, block), (2, block + 1)]:
+        x = make_operand(op_name, nprng, (b, n))
+        got = forge.mapreduce(lambda v: v, op, x, layout=Batched(),
+                              backend=GPU)
+        want = ref.ref_batched_mapreduce(lambda v: v, op, x)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
+                           err=f"mapreduce@batched gpu {op_name} ({b},{n})")
+
+
+# ---------------------------------------------------------------------------
+# matvec / vecmat @ flat / @ batched
+# ---------------------------------------------------------------------------
+
+
+def _mv_shapes():
+    rows = POL.matvec_rows * ki.WARP
+    return [(1, 1), (3, 5), (rows - 1, 4), (rows, 3), (rows + 1, 7)]
+
+
+@pytest.mark.parametrize("op_name", ["add", "min"])
+def test_matvec_gpu(op_name):
+    op = alg.STD_OPS[op_name]
+    nprng = np.random.default_rng(_seed("mv", op_name))
+    f = lambda xi, aij: xi * aij
+    for (n, p) in _mv_shapes():
+        A = jnp.asarray(nprng.standard_normal((n, p)), jnp.float32)
+        x = jnp.asarray(nprng.standard_normal((n,)), jnp.float32)
+        got = forge.matvec(f, op, A, x, backend=GPU)
+        want = ref.ref_matvec(f, op, A, x)
+        assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                           err=f"matvec gpu {op_name} ({n},{p})")
+
+
+@pytest.mark.parametrize("op_name", ["add", "min"])
+def test_vecmat_gpu(op_name):
+    op = alg.STD_OPS[op_name]
+    nprng = np.random.default_rng(_seed("vm", op_name))
+    cols = POL.vecmat_cols * ki.vec_width(jnp.float32, flavor="gpu")
+    f = lambda aij, xj: aij * xj
+    for (n, p) in [(1, 1), (5, 3), (4, cols - 1), (3, cols), (7, cols + 1)]:
+        A = jnp.asarray(nprng.standard_normal((n, p)), jnp.float32)
+        x = jnp.asarray(nprng.standard_normal((p,)), jnp.float32)
+        got = forge.vecmat(f, op, A, x, backend=GPU)
+        want = ref.ref_vecmat(f, op, A, x)
+        assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                           err=f"vecmat gpu {op_name} ({n},{p})")
+
+
+def test_batched_matvec_vecmat_gpu():
+    nprng = np.random.default_rng(_seed("bmv"))
+    rows = POL.matvec_rows * ki.WARP
+    f = lambda u, v: u * v
+    A = jnp.asarray(nprng.standard_normal((3, rows + 2, 5)), jnp.float32)
+    x = jnp.asarray(nprng.standard_normal((3, rows + 2)), jnp.float32)
+    got = forge.matvec(f, alg.ADD, A, x, layout=Batched(), backend=GPU)
+    want = ref.ref_batched_matvec(f, alg.ADD, A, x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err="batched matvec")
+    xv = jnp.asarray(nprng.standard_normal((3, 5)), jnp.float32)
+    got = forge.vecmat(f, alg.ADD, A, xv, layout=Batched(), backend=GPU)
+    want = ref.ref_batched_vecmat(f, alg.ADD, A, xv)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4, err="batched vecmat")
+
+
+# ---------------------------------------------------------------------------
+# linear_recurrence, copy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("with_h0", [False, True])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_linear_recurrence_gpu(with_h0, reverse):
+    nprng = np.random.default_rng(_seed("linrec", with_h0, reverse))
+    block = _block("nitem_scan")
+    B, T, C = 2, block + 3, 3
+    a = jnp.asarray(nprng.uniform(0.5, 1.0, (B, T, C)), jnp.float32)
+    b = jnp.asarray(nprng.standard_normal((B, T, C)), jnp.float32)
+    h0 = (jnp.asarray(nprng.standard_normal((B, C)), jnp.float32)
+          if with_h0 else None)
+    got = forge.linear_recurrence(a, b, h0, reverse=reverse, backend=GPU)
+    want = ref.ref_linear_recurrence(a, b, h0, reverse=reverse)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_copy_gpu():
+    nprng = np.random.default_rng(_seed("copy"))
+    block = _block("nitem_copy")
+    for n in [1, block - 1, block, block + 1]:
+        x = jnp.asarray(nprng.standard_normal((n,)), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(forge.copy(x, backend=GPU)), np.asarray(x))
+    x2 = jnp.asarray(nprng.standard_normal((5, 7)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(forge.copy(x2, backend=GPU)), np.asarray(x2))
+
+
+# ---------------------------------------------------------------------------
+# The sort family composes on top of the gpu scan/mapreduce routes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint32, jnp.float32])
+def test_sort_pairs_gpu(dtype):
+    block = _block("nitem_scan")
+    nprng = np.random.default_rng(_seed("sort", np.dtype(dtype).name))
+    for n in [0, 1, 37, block + 3]:
+        if np.issubdtype(np.dtype(dtype), np.floating):
+            keys = jnp.asarray(nprng.standard_normal(n), dtype)
+        else:
+            keys = jnp.asarray(nprng.integers(0, 1 << 16, n), dtype)
+        vals = jnp.arange(n, dtype=jnp.int32)
+        gk, gv = forge.sort_pairs(keys, vals, backend=GPU)
+        wk, wv = ref.ref_sort_pairs(keys, vals)
+        np.testing.assert_array_equal(np.asarray(gk), np.asarray(wk),
+                                      err_msg=f"sort_pairs keys n={n}")
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv),
+                                      err_msg=f"sort_pairs vals n={n}")
+
+
+def test_sort_argsort_topk_gpu():
+    nprng = np.random.default_rng(_seed("satk"))
+    keys = jnp.asarray(nprng.integers(0, 1000, 101), jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(forge.sort(keys, backend=GPU)),
+        np.asarray(ref.ref_sort(keys)))
+    np.testing.assert_array_equal(
+        np.asarray(forge.argsort(keys, backend=GPU)),
+        np.asarray(ref.ref_argsort(keys)))
+    gv, gi = forge.top_k(keys, 7, backend=GPU)
+    wv, wi = ref.ref_top_k(keys, 7)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+# ---------------------------------------------------------------------------
+# Selection surface: scoping, fallback, error reporting.
+# ---------------------------------------------------------------------------
+
+
+def test_use_backend_scopes_and_nests():
+    before = repro.current_backend()
+    with repro.use_backend(GPU):
+        assert repro.current_backend() == GPU
+        with repro.use_backend("xla"):
+            assert repro.current_backend() == "xla"
+        assert repro.current_backend() == GPU
+    assert repro.current_backend() == before
+
+
+def test_use_backend_is_thread_local():
+    seen = {}
+
+    def worker():
+        seen["inner"] = repro.current_backend()
+
+    with repro.use_backend(GPU):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["inner"] != GPU
+
+
+def test_use_backend_routes_dispatch():
+    nprng = np.random.default_rng(_seed("scoped"))
+    x = make_operand("add", nprng, (_block("nitem_scan") + 1,))
+    with repro.use_backend(GPU):
+        got = forge.scan(alg.ADD, x)
+    want = ref.ref_scan(alg.ADD, x)
+    assert_trees_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_supports_reports_gpu_coverage():
+    for route in ("scan@flat", "scan@batched", "mapreduce@flat",
+                  "matvec@flat", "vecmat@batched", "sort_pairs@flat",
+                  "top_k@flat", "linear_recurrence@batched"):
+        assert repro.supports(route, GPU), route
+    # Segmented scan/mapreduce deliberately have no gpu route yet.
+    assert not repro.supports("scan@segmented", GPU)
+    assert not repro.supports("mapreduce@segmented", GPU)
+    assert GPU in repro.available_backends()
+
+
+def test_segmented_falls_back_to_xla_under_gpu_scope():
+    nprng = np.random.default_rng(_seed("seg"))
+    x = make_operand("add", nprng, (23,))
+    flags = jnp.zeros(23, jnp.int32).at[jnp.array([0, 7, 15])].set(1)
+    with repro.use_backend(GPU):
+        got = forge.scan(alg.ADD, x, layout=Segmented(flags=flags))
+    want = ref.ref_segmented_scan(alg.ADD, x, flags=flags)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_unknown_backend_errors_name_the_route():
+    x = jnp.ones(8, jnp.float32)
+    with pytest.raises(ValueError, match=r"scan@flat: unknown backend"):
+        forge.scan(alg.ADD, x, backend="pallas-rocm")
+    with pytest.raises(ValueError, match="unknown backend"):
+        repro.use_backend("metal").__enter__()

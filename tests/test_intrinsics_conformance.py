@@ -1,0 +1,142 @@
+"""Layer-1 intrinsics conformance: every flavor against one oracle.
+
+The portability contract of the intrinsics layer is that the flavored
+primitives -- ``tile_scan`` / ``tile_reduce`` shift combines, the
+``memory_fence`` visibility edge, the ``vec_width`` hint -- are
+*semantically identical* across flavors: the TPU roll+select combine and
+the GPU identity-padded ``shfl_up`` combine must produce bit-equivalent
+scans for any associative operator, commutative or not, scalar or pytree.
+
+Seeded fuzz over (backend x operator x extent), comparing every registered
+backend's flavor against the ``pallas-interpret`` oracle flavor and against
+an independent Python-loop reference.
+"""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close, make_operand
+from repro.core import intrinsics as ki
+from repro.core import operators as alg
+
+# Non-commutative pytree ops force the order-preserving identity-padded
+# path; logsumexp exercises a non-trivial identity (-inf).
+OP_NAMES = ["add", "max", "logsumexp", "affine", "quaternion_mul",
+            "mat2_mul"]
+# Extents straddle powers of two: the log-step loop and the non-pow2
+# reduce fallback both get hit.
+EXTENTS = [1, 2, 3, 7, 8, 9, 31, 64, 100]
+
+ORACLE_BACKEND = "pallas-interpret"
+
+
+def _seed(*parts):
+    return zlib.crc32("|".join(str(p) for p in parts).encode())
+
+
+def _ref_scan(op, x, extent):
+    """Python-loop inclusive scan along axis 0 (independent oracle)."""
+    acc = None
+    rows = []
+    for i in range(extent):
+        elem = jax.tree.map(lambda l: l[i:i + 1], x)
+        acc = elem if acc is None else op(acc, elem)
+        rows.append(acc)
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *rows)
+
+
+@pytest.mark.parametrize("backend", sorted(ki.available_backends()))
+@pytest.mark.parametrize("op_name", OP_NAMES)
+def test_tile_scan_matches_oracle_flavor(backend, op_name):
+    op = alg.STD_OPS[op_name]
+    flavor = ki.get_flavor(backend).name
+    oracle = ki.get_flavor(ORACLE_BACKEND).name
+    nprng = np.random.default_rng(_seed("scan", backend, op_name))
+    for n in EXTENTS:
+        x = make_operand(op_name, nprng, (n,))
+        got = ki.tile_scan(op, x, axis=0, flavor=flavor)
+        want = ki.tile_scan(op, x, axis=0, flavor=oracle)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
+                           err=f"tile_scan {backend}/{op_name} n={n}")
+        ref = _ref_scan(op, x, n)
+        assert_trees_close(got, ref, rtol=1e-4, atol=1e-4,
+                           err=f"tile_scan-vs-ref {backend}/{op_name} n={n}")
+
+
+@pytest.mark.parametrize("backend", sorted(ki.available_backends()))
+@pytest.mark.parametrize("op_name", OP_NAMES)
+def test_tile_reduce_matches_oracle_flavor(backend, op_name):
+    op = alg.STD_OPS[op_name]
+    flavor = ki.get_flavor(backend).name
+    oracle = ki.get_flavor(ORACLE_BACKEND).name
+    nprng = np.random.default_rng(_seed("reduce", backend, op_name))
+    for n in EXTENTS:
+        x = make_operand(op_name, nprng, (n,))
+        got = ki.tile_reduce(op, x, axis=0, flavor=flavor)
+        want = ki.tile_reduce(op, x, axis=0, flavor=oracle)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-5,
+                           err=f"tile_reduce {backend}/{op_name} n={n}")
+        ref = ki.tile_take_last(_ref_scan(op, x, n), axis=0)
+        assert_trees_close(got, ref, rtol=1e-4, atol=1e-4,
+                           err=f"tile_reduce-vs-ref {backend}/{op_name} n={n}")
+
+
+@pytest.mark.parametrize("op_name", ["add", "mat2_mul"])
+def test_tile_scan_axis1_flavors_agree(op_name):
+    """2-D tiles, scanned along the minor axis (the in-kernel layout)."""
+    op = alg.STD_OPS[op_name]
+    nprng = np.random.default_rng(_seed("axis1", op_name))
+    x = make_operand(op_name, nprng, (4, 37))
+    got_g = ki.tile_scan(op, x, axis=1, flavor="gpu")
+    got_t = ki.tile_scan(op, x, axis=1, flavor="tpu")
+    assert_trees_close(got_g, got_t, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", sorted(ki.available_backends()))
+def test_memory_fence_is_semantically_identity(backend):
+    """The fence orders visibility; it must never change the values, for
+    scalars, arrays and (publish, flag) pytrees alike."""
+    flavor = ki.get_flavor(backend).name
+    x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    np.testing.assert_array_equal(
+        np.asarray(ki.memory_fence(x, flavor=flavor)), np.asarray(x))
+    pub, flag = ki.memory_fence((x, jnp.int32(1)), flavor=flavor)
+    np.testing.assert_array_equal(np.asarray(pub), np.asarray(x))
+    assert int(flag) == 1
+
+
+def test_memory_fence_traces_under_jit():
+    """The fence must be jit-traceable on every flavor (it sits inside
+    kernel bodies and their surrounding jitted wrappers)."""
+    for flavor in ("tpu", "gpu"):
+        f = jax.jit(lambda v: ki.memory_fence((v, v * 2), flavor=flavor))
+        a, b = f(jnp.ones((4,)))
+        np.testing.assert_array_equal(np.asarray(a), np.ones((4,)))
+        np.testing.assert_array_equal(np.asarray(b), 2 * np.ones((4,)))
+
+
+def test_vec_width_transaction_arithmetic():
+    """float4-style widths: vec_bytes / itemsize, floored at one element."""
+    assert ki.vec_width(jnp.float32, flavor="gpu") == 4
+    assert ki.vec_width(jnp.bfloat16, flavor="gpu") == 8
+    assert ki.vec_width(jnp.int8, flavor="gpu") == 16
+    assert ki.vec_width(jnp.float64, flavor="gpu") == 2
+    # TPU flavor: a full lane-row of f32.
+    assert ki.vec_width(jnp.float32, flavor="tpu") == ki.LANES
+    for backend in ki.available_backends():
+        assert ki.vec_width(jnp.float32, flavor=backend) >= 1
+
+
+def test_every_backend_resolves_a_flavor():
+    for backend in ki.available_backends():
+        flavor = ki.get_flavor(backend)
+        assert flavor.name in ("tpu", "gpu")
+        assert flavor.vec_bytes > 0
+
+
+def test_unknown_flavor_raises():
+    with pytest.raises(ValueError, match="unknown intrinsics flavor"):
+        ki.get_flavor("cuda-graphs")

@@ -224,3 +224,35 @@ def test_registry_routes_all_have_impls_and_validation_fields():
         if route.layout == "sharded":
             assert route.needs_mesh
     assert ki.get_route("scan", Flat().kind).key == "scan@flat"
+
+
+# ---------------------------------------------------------------------------
+# Backend selection: unknown names fail loudly, uniformly naming the route.
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_backend_string_names_the_route():
+    with _raises(r"scan@flat: unknown backend 'pallas-rocm' \(available: "):
+        forge.scan(alg.ADD, X, backend="pallas-rocm")
+    with _raises(r"sort@flat: unknown backend 'cub'"):
+        forge.sort(jnp.arange(8, dtype=jnp.uint32), backend="cub")
+    with _raises(r"mapreduce@batched: unknown backend 'tirton'"):
+        forge.mapreduce(lambda v: v, alg.ADD, jnp.ones((2, 8)),
+                        layout=Batched(), backend="tirton")
+
+
+def test_use_backend_rejects_unknown_names_up_front():
+    """A typo fails at the `with` statement, not as a silent xla fallback."""
+    with _raises(r"unknown backend 'metal' \(available: "):
+        with ki.use_backend("metal"):
+            pass  # pragma: no cover - never entered
+
+
+def test_known_backend_without_route_falls_back_not_raises():
+    """Known backends missing a native route fall back to the portable
+    implementation -- only unknown *names* are errors."""
+    got = forge.scan(
+        alg.ADD, X,
+        layout=Segmented(flags=jnp.zeros(8, jnp.int32).at[0].set(1)),
+        backend="pallas-gpu")
+    assert got.shape == X.shape

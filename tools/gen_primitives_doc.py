@@ -58,6 +58,7 @@ def generate() -> str:
     from repro.core import intrinsics as ki
     from repro.core import primitives as forge  # noqa: F401 (registers impls)
 
+    backends = list(ki.available_backends())
     lines = [
         BEGIN,
         "",
@@ -65,18 +66,21 @@ def generate() -> str:
         "",
         "Enumerated from the `PrimitiveDef` table in `core/intrinsics.py` —",
         "the same rows that drive dispatch, validation, zero-extent guards,",
-        "tuning keys and the conformance-matrix completeness check.",
+        "tuning keys and the conformance-matrix completeness check.  One",
+        "availability column per registered backend: ✓ marks a native route",
+        "(`repro.supports(route, backend)`); — means dispatch falls back to",
+        "the portable `xla` implementation under that backend.",
         "",
-        "| primitive | layout | registered backends | validation | "
-        "zero-extent | tuned knobs |",
-        "|---|---|---|---|---|---|",
+        "| primitive | layout | " + " | ".join(f"`{b}`" for b in backends)
+        + " | validation | zero-extent | tuned knobs |",
+        "|---|---|" + "---|" * len(backends) + "---|---|---|",
     ]
     for pdef in ki.PRIMITIVE_DEFS.values():
         for route in pdef.routes.values():
-            backends = ", ".join(
-                f"`{b}`" for b in ki.registered_backends(route.key))
+            marks = " | ".join(
+                "✓" if ki.supports(route.key, b) else "—" for b in backends)
             lines.append(
-                f"| `{pdef.name}` | `{route.layout}` | {backends} | "
+                f"| `{pdef.name}` | `{route.layout}` | {marks} | "
                 f"{_route_validation(route)} | {_route_zero(route)} | "
                 f"{_route_knobs(route)} |")
     lines += [

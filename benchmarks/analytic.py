@@ -188,8 +188,10 @@ def gpu_batched_mapreduce_bytes(batch: int, n: int, in_dtypes, out_dtypes,
 
 def gpu_matvec_bytes(n: int, p: int, dtype, out_dtype=None,
                      policy=None) -> int:
-    """A once, x re-read per column stripe, y accumulated in the output
-    block across the sequential reduction axis (written once)."""
+    """A once, x re-read per column stripe; two-phase partials form: each
+    row strip writes its own (nbi, p) partial row (no output revisiting,
+    so the kernel is exact on parallel grids), the strips fold outside the
+    kernel (read back once), y written once."""
     policy = policy or ki.resolve_tuning("gpu_generic")
     sz = jnp.dtype(dtype).itemsize
     osz = jnp.dtype(out_dtype or dtype).itemsize
@@ -197,8 +199,9 @@ def gpu_matvec_bytes(n: int, p: int, dtype, out_dtype=None,
     cols = max(policy.matvec_cols * ki.vec_width(dtype, flavor="gpu"), 1)
     a_bytes = _pad(n, rows) * _pad(p, cols) * sz
     x_bytes = ki.cdiv(p, cols) * _pad(n, rows) * sz
+    part_bytes = 2 * ki.cdiv(n, rows) * _pad(p, cols) * osz
     y_bytes = _pad(p, cols) * osz
-    return a_bytes + x_bytes + y_bytes
+    return a_bytes + x_bytes + part_bytes + y_bytes
 
 
 def gpu_vecmat_bytes(n: int, p: int, dtype, out_dtype=None,
@@ -210,8 +213,9 @@ def gpu_vecmat_bytes(n: int, p: int, dtype, out_dtype=None,
     cols = max(policy.vecmat_cols * ki.vec_width(dtype, flavor="gpu"), 1)
     a_bytes = _pad(n, rows) * _pad(p, cols) * sz
     x_bytes = ki.cdiv(n, rows) * _pad(p, cols) * sz
+    part_bytes = 2 * ki.cdiv(p, cols) * _pad(n, rows) * osz
     z_bytes = _pad(n, rows) * osz
-    return a_bytes + x_bytes + z_bytes
+    return a_bytes + x_bytes + part_bytes + z_bytes
 
 
 def gpu_copy_bytes(n: int, dtype, nitem: int, policy) -> int:

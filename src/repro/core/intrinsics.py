@@ -513,12 +513,17 @@ def available_backends() -> tuple[str, ...]:
 
 def supports(route: str, backend: str) -> bool:
     """Whether ``route`` (e.g. ``"scan@batched"``) has a native ``backend``
-    implementation.  False means dispatch would use the xla fallback."""
-    known = _known_backends()
+    implementation.  False means dispatch would use the xla fallback;
+    unknown route or backend *names* raise ValueError, mirroring what
+    dispatch itself (and :func:`use_backend`) would do with them."""
     if route not in route_keys():
         raise ValueError(
             f"unknown route {route!r} (routes: {sorted(route_keys())})")
-    return (route, backend) in _IMPL_REGISTRY and backend in known
+    if backend not in _known_backends():
+        raise ValueError(
+            f"unknown backend {backend!r} "
+            f"(available: {', '.join(available_backends())})")
+    return (route, backend) in _IMPL_REGISTRY
 
 
 @contextlib.contextmanager
@@ -556,6 +561,37 @@ def force_backend(backend: str | None):
             DeprecationWarning, stacklevel=2)
         _FORCE_BACKEND_WARNED = True
     _FORCED_BACKEND = backend
+
+
+_SUB_BACKEND_WARNED = False
+
+
+def sub_backend_alias(fn):
+    """Deprecated-alias shim: the composition entry points (radix sorts,
+    sharded folds) used to spell their backend parameter ``sub_backend=``.
+    The alias still works -- warn once per process, like
+    :func:`force_backend` -- and forwards to ``backend=``; passing both
+    spellings is an error."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, sub_backend=None, **kwargs):
+        global _SUB_BACKEND_WARNED
+        if sub_backend is not None:
+            if "backend" in kwargs:
+                raise TypeError(
+                    f"{fn.__name__}: got both backend= and its deprecated "
+                    "alias sub_backend=; pass backend= only")
+            if not _SUB_BACKEND_WARNED:
+                warnings.warn(
+                    "the sub_backend= keyword is deprecated; compositions "
+                    "now take the same backend= spelling as every other "
+                    "primitive",
+                    DeprecationWarning, stacklevel=2)
+                _SUB_BACKEND_WARNED = True
+            kwargs["backend"] = sub_backend
+        return fn(*args, **kwargs)
+
+    return wrapper
 
 
 def current_backend() -> str:

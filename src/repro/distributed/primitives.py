@@ -138,6 +138,7 @@ def _scan_local(op, xs_loc, *, axis_name, inclusive, backend, policy):
     return out
 
 
+@ki.sub_backend_alias
 def sharded_scan(op, xs, *, axis_name, mesh, inclusive=True,
                  backend="xla", policy=None):
     if mesh is None:
@@ -198,6 +199,7 @@ def _reduce_local(op, vals_loc, *, backend, policy):
     return _fold_axis0(op, vals_loc)
 
 
+@ki.sub_backend_alias
 def sharded_mapreduce(f, op, xs, *, axis_name, mesh, backend="xla",
                       policy=None):
     if mesh is None:
@@ -257,6 +259,7 @@ def _top_k_local(keys_loc, k, *, axis_name, largest, key_bits, backend,
     return mv[:k], mi[:k]
 
 
+@ki.sub_backend_alias
 def sharded_top_k(keys, k, *, axis_name, mesh, largest=True, key_bits=None,
                   backend="xla", policy=None):
     if k == 0:
@@ -336,6 +339,7 @@ def _sort_pairs_local(keys_loc, values_loc, *, axis_name, descending,
     return out_k, out_v
 
 
+@ki.sub_backend_alias
 def sharded_sort_pairs(keys, values, *, axis_name, mesh, descending=False,
                        key_bits=None, backend="xla", policy=None):
     if mesh is None:

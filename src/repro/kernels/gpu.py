@@ -15,13 +15,18 @@ hints) instead of the TPU tile machinery:
   chained single-probe form used here is exact wherever grid steps execute
   in order (the Pallas interpreter, and sequential-grid lowerings), and the
   fence marks the seam where a hardware Triton/Mosaic-GPU lowering inserts
-  the acquire spin on the same mailbox.
+  the acquire spin on the same mailbox.  Until that acquire spin exists the
+  scan kernels **refuse to compile** for real hardware (parallel grid
+  blocks would race the probe) -- see ``HARDWARE_LOOKBACK_READY`` below;
+  the registered routes fall back to xla on a GPU platform instead.
 * :func:`mapreduce_flat_gpu` / :func:`mapreduce_batched_gpu` -- grid-strided
   block reduction to a per-block partials array, folded with the same
   flavored combine outside the kernel (paper §V-A's two-phase form).
 * :func:`matvec_gpu` / :func:`vecmat_gpu` (+ batched) -- strip-mined
-  semiring GEMV: the output block is the accumulator across the sequential
-  reduction grid axis, per-strip reduction via the flavored ``tile_reduce``.
+  semiring GEMV in the same two-phase partials form: each reduction grid
+  step writes its own identity-masked ``tile_reduce`` partial (no block
+  ever revisits an output), and the strip partials fold with the flavored
+  combine outside the kernel -- well-defined on parallel grids.
 * :func:`copy_gpu` -- bandwidth-ceiling tiled copy.
 
 Block sizes come from the shared tuning ladder: a block covers
@@ -49,6 +54,29 @@ def _auto_interpret(interpret: bool | None) -> bool:
     if interpret is None:
         return jax.default_backend() not in ki._GPU_PLATFORMS
     return interpret
+
+
+# The chained single-probe lookback in the scan kernels is exact only when
+# grid steps execute in order (the Pallas interpreter; sequential-grid
+# lowerings).  Triton/Mosaic-GPU run grid programs as parallel blocks with
+# no cross-block ordering or visibility guarantee, so compiling the current
+# form would silently fall back to the operator identity whenever a
+# predecessor has not published yet -- wrong results, not an error.  Until
+# an acquire-spin lookback lands for the hardware lowering the scan kernels
+# refuse to compile (below), and the registered pallas-gpu scan routes
+# (kernels/ops.py) dispatch to the portable xla implementation on a real
+# GPU platform, so the racy path cannot be reached by default.
+HARDWARE_LOOKBACK_READY = False
+
+
+def _require_lookback(interpret: bool, what: str) -> None:
+    if not interpret and not HARDWARE_LOOKBACK_READY:
+        raise NotImplementedError(
+            f"pallas-gpu {what}: the single-probe decoupled lookback is "
+            "exact only under in-order grids; the parallel Triton/"
+            "Mosaic-GPU lowering needs an acquire-spin lookback that is "
+            "not implemented yet.  Pass interpret=True (validation) or "
+            "use the xla backend on GPU hardware.")
 
 
 def _policy(policy: ki.TuningPolicy | None) -> ki.TuningPolicy:
@@ -149,6 +177,7 @@ def scan_flat_gpu(op, xs: Pytree, *, inclusive: bool = True,
                   interpret: bool | None = None) -> Pytree:
     """Single-pass scan over flat ``(n,)`` pytree leaves (lookback form)."""
     interpret = _auto_interpret(interpret)
+    _require_lookback(interpret, "scan_flat")
     policy = _policy(policy)
     leaves, treedef = jax.tree.flatten(xs)
     n = leaves[0].shape[0]
@@ -185,6 +214,7 @@ def scan_batched_gpu(op, xs: Pytree, *, inclusive: bool = True,
     sequence is in order and carries its own mailbox row ``part[b, :]``.
     """
     interpret = _auto_interpret(interpret)
+    _require_lookback(interpret, "scan_batched")
     policy = _policy(policy)
     leaves, treedef = jax.tree.flatten(xs)
     B, n = leaves[0].shape
@@ -311,8 +341,12 @@ def mapreduce_batched_gpu(f, op, xs: Pytree, *,
 
 
 # ---------------------------------------------------------------------------
-# Semiring matvec / vecmat: output block as accumulator over the sequential
-# reduction grid axis, per-strip flavored tile_reduce.
+# Semiring matvec / vecmat: two-phase partials form.  Each reduction grid
+# step writes its own identity-masked tile_reduce partial -- no output
+# block is ever revisited, so (unlike an output-accumulator form) the
+# kernels are exact when grid steps run as parallel blocks -- and the strip
+# partials fold with the same flavored combine outside the kernel, exactly
+# like mapreduce.
 # ---------------------------------------------------------------------------
 
 
@@ -330,7 +364,12 @@ def _out_struct_mv(f, lhs_dtype, rhs_dtype):
 
 
 def _matvec_kernel(f, op, out_treedef, n, rows, cols, batched, *refs):
-    """y[j] = op_i f(x[i], A[i, j]); reduction axis = rows (grid-minor)."""
+    """One partial of y[j] = op_i f(x[i], A[i, j]) per (row-strip, j) block.
+
+    Grid step ``ig`` owns row ``ig`` of the partials output, so parallel
+    blocks never share an output block; the caller folds the strip
+    partials outside the kernel.
+    """
     A_ref, x_ref = refs[0], refs[1]
     o_refs = refs[2:]
     ig = pl.program_id(2 if batched else 1)
@@ -343,19 +382,8 @@ def _matvec_kernel(f, op, out_treedef, n, rows, cols, batched, *refs):
     ridx = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0)
     vals = _mask(ig * rows + ridx < n, vals, ident)
     red = ki.tile_reduce(op, vals, axis=0, flavor="gpu")      # (1, cols)
-
-    ident_acc = op.identity(_likes(out_treedef, (cols,), out_dtypes))
-
-    @pl.when(ig == 0)
-    def _init():
-        for o_ref, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
-            o_ref[...] = ia.reshape(o_ref.shape)
-
-    acc = jax.tree.unflatten(
-        out_treedef, [r[...].reshape(cols) for r in o_refs])
-    acc = op(acc, jax.tree.map(lambda l: l[0], red))
-    for o_ref, a in zip(o_refs, jax.tree.leaves(acc)):
-        o_ref[...] = a.reshape(o_ref.shape)
+    for o_ref, r in zip(o_refs, jax.tree.leaves(red)):
+        o_ref[...] = r.reshape(o_ref.shape)
 
 
 def matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
@@ -366,20 +394,25 @@ def matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
     rows, cols = _mv_blocks(policy, A.dtype, policy.matvec_rows,
                             policy.matvec_cols)
     out_leaves, out_treedef = _out_struct_mv(f, x.dtype, A.dtype)
+    nbi = ki.cdiv(n, rows)
     kernel = functools.partial(
         _matvec_kernel, f, op, out_treedef, n, rows, cols, False)
-    out = pl.pallas_call(
+    parts = pl.pallas_call(
         kernel,
-        grid=(ki.cdiv(p, cols), ki.cdiv(n, rows)),
+        grid=(ki.cdiv(p, cols), nbi),
         in_specs=[pl.BlockSpec((rows, cols), lambda j, i: (i, j)),
                   pl.BlockSpec((rows,), lambda j, i: (i,))],
-        out_specs=[pl.BlockSpec((cols,), lambda j, i: (j,))
+        out_specs=[pl.BlockSpec((1, cols), lambda j, i: (i, j))
                    for _ in out_leaves],
-        out_shape=[jax.ShapeDtypeStruct((p,), l.dtype) for l in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((nbi, p), l.dtype)
+                   for l in out_leaves],
         compiler_params=_cparams(policy, interpret),
         interpret=interpret,
     )(A, x)
-    return jax.tree.unflatten(out_treedef, list(out))
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=0,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[0], folded)
 
 
 def batched_matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
@@ -390,25 +423,34 @@ def batched_matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
     rows, cols = _mv_blocks(policy, A.dtype, policy.matvec_rows,
                             policy.matvec_cols)
     out_leaves, out_treedef = _out_struct_mv(f, x.dtype, A.dtype)
+    nbi = ki.cdiv(n, rows)
     kernel = functools.partial(
         _matvec_kernel, f, op, out_treedef, n, rows, cols, True)
-    out = pl.pallas_call(
+    parts = pl.pallas_call(
         kernel,
-        grid=(B, ki.cdiv(p, cols), ki.cdiv(n, rows)),
+        grid=(B, ki.cdiv(p, cols), nbi),
         in_specs=[pl.BlockSpec((1, rows, cols), lambda b, j, i: (b, i, j)),
                   pl.BlockSpec((1, rows), lambda b, j, i: (b, i))],
-        out_specs=[pl.BlockSpec((1, cols), lambda b, j, i: (b, j))
+        out_specs=[pl.BlockSpec((1, 1, cols), lambda b, j, i: (b, i, j))
                    for _ in out_leaves],
-        out_shape=[jax.ShapeDtypeStruct((B, p), l.dtype)
+        out_shape=[jax.ShapeDtypeStruct((B, nbi, p), l.dtype)
                    for l in out_leaves],
         compiler_params=_cparams(policy, interpret),
         interpret=interpret,
     )(A, x)
-    return jax.tree.unflatten(out_treedef, list(out))
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=1,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[:, 0], folded)
 
 
 def _vecmat_kernel(f, op, out_treedef, p, rows, cols, batched, *refs):
-    """z[i] = op_j f(A[i, j], x[j]); reduction axis = cols (grid-minor)."""
+    """One partial of z[i] = op_j f(A[i, j], x[j]) per (i, col-strip) block.
+
+    Grid step ``jg`` owns row ``jg`` of the partials output, so parallel
+    blocks never share an output block; the caller folds the strip
+    partials outside the kernel.
+    """
     A_ref, x_ref = refs[0], refs[1]
     o_refs = refs[2:]
     jg = pl.program_id(2 if batched else 1)
@@ -421,19 +463,8 @@ def _vecmat_kernel(f, op, out_treedef, p, rows, cols, batched, *refs):
     cidx = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
     vals = _mask(jg * cols + cidx < p, vals, ident)
     red = ki.tile_reduce(op, vals, axis=1, flavor="gpu")      # (rows, 1)
-
-    ident_acc = op.identity(_likes(out_treedef, (rows,), out_dtypes))
-
-    @pl.when(jg == 0)
-    def _init():
-        for o_ref, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
-            o_ref[...] = ia.reshape(o_ref.shape)
-
-    acc = jax.tree.unflatten(
-        out_treedef, [r[...].reshape(rows) for r in o_refs])
-    acc = op(acc, jax.tree.map(lambda l: l[:, 0], red))
-    for o_ref, a in zip(o_refs, jax.tree.leaves(acc)):
-        o_ref[...] = a.reshape(o_ref.shape)
+    for o_ref, r in zip(o_refs, jax.tree.leaves(red)):
+        o_ref[...] = r.reshape(o_ref.shape)
 
 
 def vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
@@ -444,20 +475,25 @@ def vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
     rows, cols = _mv_blocks(policy, A.dtype, policy.vecmat_rows,
                             policy.vecmat_cols)
     out_leaves, out_treedef = _out_struct_mv(f, A.dtype, x.dtype)
+    nbj = ki.cdiv(p, cols)
     kernel = functools.partial(
         _vecmat_kernel, f, op, out_treedef, p, rows, cols, False)
-    out = pl.pallas_call(
+    parts = pl.pallas_call(
         kernel,
-        grid=(ki.cdiv(n, rows), ki.cdiv(p, cols)),
+        grid=(ki.cdiv(n, rows), nbj),
         in_specs=[pl.BlockSpec((rows, cols), lambda i, j: (i, j)),
                   pl.BlockSpec((cols,), lambda i, j: (j,))],
-        out_specs=[pl.BlockSpec((rows,), lambda i, j: (i,))
+        out_specs=[pl.BlockSpec((1, rows), lambda i, j: (j, i))
                    for _ in out_leaves],
-        out_shape=[jax.ShapeDtypeStruct((n,), l.dtype) for l in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((nbj, n), l.dtype)
+                   for l in out_leaves],
         compiler_params=_cparams(policy, interpret),
         interpret=interpret,
     )(A, x)
-    return jax.tree.unflatten(out_treedef, list(out))
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=0,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[0], folded)
 
 
 def batched_vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
@@ -468,21 +504,25 @@ def batched_vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
     rows, cols = _mv_blocks(policy, A.dtype, policy.vecmat_rows,
                             policy.vecmat_cols)
     out_leaves, out_treedef = _out_struct_mv(f, A.dtype, x.dtype)
+    nbj = ki.cdiv(p, cols)
     kernel = functools.partial(
         _vecmat_kernel, f, op, out_treedef, p, rows, cols, True)
-    out = pl.pallas_call(
+    parts = pl.pallas_call(
         kernel,
-        grid=(B, ki.cdiv(n, rows), ki.cdiv(p, cols)),
+        grid=(B, ki.cdiv(n, rows), nbj),
         in_specs=[pl.BlockSpec((1, rows, cols), lambda b, i, j: (b, i, j)),
                   pl.BlockSpec((1, cols), lambda b, i, j: (b, j))],
-        out_specs=[pl.BlockSpec((1, rows), lambda b, i, j: (b, i))
+        out_specs=[pl.BlockSpec((1, 1, rows), lambda b, i, j: (b, j, i))
                    for _ in out_leaves],
-        out_shape=[jax.ShapeDtypeStruct((B, n), l.dtype)
+        out_shape=[jax.ShapeDtypeStruct((B, nbj, n), l.dtype)
                    for l in out_leaves],
         compiler_params=_cparams(policy, interpret),
         interpret=interpret,
     )(A, x)
-    return jax.tree.unflatten(out_treedef, list(out))
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=1,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[:, 0], folded)
 
 
 # ---------------------------------------------------------------------------

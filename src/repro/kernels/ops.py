@@ -6,10 +6,14 @@ each (primitive, layout) route's implementations with the Layer-1 registry
 
 * ``pallas-tpu``       -- the Pallas kernels, compiled by Mosaic (TARGET);
 * ``pallas-gpu``       -- the GPU kernel bodies (kernels/gpu.py):
-                          decoupled-lookback scan, two-phase mapreduce,
-                          strip-mined semiring matvec/vecmat -- compiled by
-                          Triton/Mosaic-GPU on a GPU platform, interpreted
-                          elsewhere (the kernels auto-detect);
+                          decoupled-lookback scan, two-phase (partials)
+                          mapreduce and semiring matvec/vecmat -- compiled
+                          by Triton/Mosaic-GPU on a GPU platform,
+                          interpreted elsewhere (the kernels auto-detect).
+                          The scan routes dispatch to xla on real hardware
+                          until the acquire-spin lookback lands (the
+                          single-probe form is exact only on in-order
+                          grids; see _gpu_lookback_unavailable);
 * ``pallas-interpret`` -- the TPU kernel bodies executed in Python on CPU
                           (correctness validation of the TPU path);
 * ``xla``              -- portable pure-XLA fallbacks (used by the CPU
@@ -125,8 +129,20 @@ def _scan_xla(op, xs, *, axis=0, inclusive=True, reverse=False, policy=None):
 # ---------------------------------------------------------------------------
 
 
+def _gpu_lookback_unavailable(interpret):
+    """True when the lookback scan would have to *compile* for real GPU
+    hardware, where the single-probe form races (kernels/gpu.py): the
+    registered scan routes take the portable xla path instead, so the racy
+    lowering is unreachable by default."""
+    return (not gpu_k._auto_interpret(interpret)
+            and not gpu_k.HARDWARE_LOOKBACK_READY)
+
+
 def _scan_gpu(op, xs, *, axis=0, inclusive=True, reverse=False,
               interpret=None, policy=None):
+    if _gpu_lookback_unavailable(interpret):
+        return _scan_xla(op, xs, axis=axis, inclusive=inclusive,
+                         reverse=reverse, policy=policy)
     leaves = jax.tree.leaves(xs)
     ndim = leaves[0].ndim
     if reverse:
@@ -153,6 +169,9 @@ def _scan_gpu(op, xs, *, axis=0, inclusive=True, reverse=False,
 
 def _batched_scan_gpu(op, xs, *, inclusive=True, reverse=False,
                       interpret=None, policy=None):
+    if _gpu_lookback_unavailable(interpret):
+        return _batched_scan_xla(op, xs, inclusive=inclusive,
+                                 reverse=reverse, policy=policy)
     if reverse:
         xs = jax.tree.map(lambda l: jnp.flip(l, 1), xs)
     out = gpu_k.scan_batched_gpu(op, xs, inclusive=inclusive,
@@ -180,6 +199,8 @@ def _mapreduce_gpu(f, op, xs, *, axis=None, interpret=None, policy=None):
 
 
 def _linrec_gpu(a, b, h0=None, *, reverse=False, interpret=None, policy=None):
+    if _gpu_lookback_unavailable(interpret):
+        return _linrec_xla(a, b, h0, reverse=reverse, policy=policy)
     A, B = _scan_gpu(alg.AFFINE, (a, b), axis=1, inclusive=True,
                      reverse=reverse, interpret=interpret, policy=policy)
     if h0 is None:

@@ -140,6 +140,7 @@ def _from_bits(bits, dtype, kb, descending):
 # ---------------------------------------------------------------------------
 
 
+@ki.sub_backend_alias
 def sort_radix(keys, *, descending=False, key_bits=None, backend="xla",
                policy=None):
     """Stable LSD radix sort of a flat key array (keys only: 2n/pass)."""
@@ -153,6 +154,7 @@ def sort_radix(keys, *, descending=False, key_bits=None, backend="xla",
     return _from_bits(bits, keys.dtype, kb, descending)
 
 
+@ki.sub_backend_alias
 def sort_pairs_radix(keys, values, *, descending=False, key_bits=None,
                      backend="xla", policy=None):
     """Stable key sort carrying an arbitrary pytree payload along."""
@@ -173,6 +175,7 @@ def sort_pairs_radix(keys, values, *, descending=False, key_bits=None,
             jax.tree.unflatten(treedef, list(leaves)))
 
 
+@ki.sub_backend_alias
 def argsort_radix(keys, *, descending=False, key_bits=None,
                   backend="xla", policy=None):
     """Stable sorting permutation (int32), via an index payload."""
@@ -184,6 +187,7 @@ def argsort_radix(keys, *, descending=False, key_bits=None,
     return perm
 
 
+@ki.sub_backend_alias
 def top_k_radix(keys, k, *, largest=True, key_bits=None, backend="xla",
                 policy=None):
     """(values, indices) of the k extreme elements, sorted, ties stable."""
@@ -264,6 +268,7 @@ def _segmented_sort_core(keys, payload_leaves, *, flags, offsets, descending,
     return _from_bits(bits, keys.dtype, kb, descending), leaves, starts
 
 
+@ki.sub_backend_alias
 def segmented_sort_radix(keys, *, flags=None, offsets=None, descending=False,
                          key_bits=None, backend="xla", policy=None):
     """Independent stable sort of every contiguous segment (layout kept)."""
@@ -273,6 +278,7 @@ def segmented_sort_radix(keys, *, flags=None, offsets=None, descending=False,
     return out
 
 
+@ki.sub_backend_alias
 def segmented_sort_pairs_radix(keys, values, *, flags=None, offsets=None,
                                descending=False, key_bits=None,
                                backend="xla", policy=None):
@@ -289,6 +295,7 @@ def segmented_sort_pairs_radix(keys, values, *, flags=None, offsets=None,
     return out, jax.tree.unflatten(treedef, list(out_leaves))
 
 
+@ki.sub_backend_alias
 def segmented_argsort_radix(keys, *, flags=None, offsets=None,
                             descending=False, key_bits=None,
                             backend="xla", policy=None):
@@ -306,6 +313,7 @@ def segmented_argsort_radix(keys, *, flags=None, offsets=None,
     return perm - starts
 
 
+@ki.sub_backend_alias
 def segmented_top_k_radix(keys, k, *, flags=None, offsets=None,
                           num_segments=None, largest=True, key_bits=None,
                           backend="xla", policy=None):

@@ -238,3 +238,56 @@ def test_use_backend_scope_beats_forced_global(fresh_force_backend_state):
     with ki.use_backend("xla"):
         assert ki.current_backend() == "xla"
     assert ki.current_backend() == "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# sub_backend=: the pre-backend-API spelling on the composition entry
+# points (radix sorts, sharded folds), deprecated in favor of the uniform
+# backend= parameter.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fresh_sub_backend_state():
+    saved = ki._SUB_BACKEND_WARNED
+    ki._SUB_BACKEND_WARNED = False
+    yield
+    ki._SUB_BACKEND_WARNED = saved
+
+
+def test_sub_backend_alias_warns_once_and_matches(fresh_sub_backend_state):
+    from repro.kernels import sort as sort_k
+
+    keys = _keys(41)
+    vals = jnp.arange(41, dtype=jnp.int32)
+
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        got = sort_k.sort_radix(keys, sub_backend="xla")
+    deps = [w for w in first if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, "expected exactly one DeprecationWarning"
+    assert "sub_backend" in str(deps[0].message)
+
+    # Later aliased calls (any entry point) stay silent.
+    with warnings.catch_warnings(record=True) as second:
+        warnings.simplefilter("always")
+        gk, gv = sort_k.sort_pairs_radix(keys, vals, sub_backend="xla")
+    assert not [w for w in second
+                if issubclass(w.category, DeprecationWarning)], (
+        "sub_backend alias warned twice")
+
+    # Faithful forwarding: bit-identical to the backend= spelling.
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(sort_k.sort_radix(keys, backend="xla")))
+    wk, wv = sort_k.sort_pairs_radix(keys, vals, backend="xla")
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(wk))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+
+
+def test_sub_backend_alias_rejects_both_spellings(fresh_sub_backend_state):
+    from repro.kernels import sort as sort_k
+
+    with pytest.raises(TypeError, match="both backend= and"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            sort_k.sort_radix(_keys(8), backend="xla", sub_backend="xla")

@@ -4,9 +4,8 @@ Everything goes through the public forge surface with
 ``backend="pallas-gpu"`` (or the scoped ``repro.use_backend``), so the
 whole route -- registry resolution, the ``gpu_interpret`` tuning policy,
 block-size arithmetic, the decoupled-lookback scan kernel, the
-partials-fold mapreduce, the accumulator matvec/vecmat, and the radix
-composition on top of them -- is exercised exactly as a GPU user would
-hit it.  Shapes are fuzzed around the *GPU* block boundary
+partials-fold mapreduce and matvec/vecmat, and the radix composition on
+top of them -- is exercised exactly as a GPU user would hit it.  Shapes are fuzzed around the *GPU* block boundary
 (``gpu_threads * nitem * vec_width``), which is where lookback carries,
 masking and grid arithmetic all change behavior.
 
@@ -26,6 +25,8 @@ from repro.core import intrinsics as ki
 from repro.core import operators as alg
 from repro.core import primitives as forge
 from repro.core.layout import Batched, Segmented
+from repro.kernels import gpu as gpu_k
+from repro.kernels import ops
 from repro.kernels import ref
 
 GPU = "pallas-gpu"
@@ -338,3 +339,47 @@ def test_unknown_backend_errors_name_the_route():
         forge.scan(alg.ADD, x, backend="pallas-rocm")
     with pytest.raises(ValueError, match="unknown backend"):
         repro.use_backend("metal").__enter__()
+
+
+def test_supports_raises_on_unknown_names():
+    # Mirrors dispatch/use_backend: unknown *names* are user errors, not a
+    # quiet False that reads as "would fall back to xla".
+    with pytest.raises(ValueError, match="unknown backend"):
+        repro.supports("scan@flat", "metal")
+    with pytest.raises(ValueError, match="unknown route"):
+        repro.supports("scan@bogus", "xla")
+
+
+# ---------------------------------------------------------------------------
+# Hardware gate: the single-probe lookback is exact only on in-order grids,
+# so it must never compile for parallel hardware -- the kernel entry points
+# refuse, and the registered routes dispatch to xla instead.
+# ---------------------------------------------------------------------------
+
+
+def test_lookback_scan_refuses_to_compile_for_hardware():
+    assert not gpu_k.HARDWARE_LOOKBACK_READY  # flip the gate when it lands
+    x = jnp.arange(8, dtype=jnp.float32)
+    with pytest.raises(NotImplementedError, match="acquire-spin"):
+        gpu_k.scan_flat_gpu(alg.ADD, x, interpret=False)
+    with pytest.raises(NotImplementedError, match="acquire-spin"):
+        gpu_k.scan_batched_gpu(alg.ADD, x[None], interpret=False)
+
+
+def test_scan_routes_fall_back_to_xla_when_lookback_unavailable():
+    # interpret=False is exactly what the registered wrappers resolve on a
+    # real GPU platform; the guard must hand the call to xla, not race.
+    nprng = np.random.default_rng(_seed("gate"))
+    x1 = make_operand("add", nprng, (37,))
+    got = ops._scan_gpu(alg.ADD, x1, inclusive=False, interpret=False)
+    assert_trees_close(got, ref.ref_scan(alg.ADD, x1, inclusive=False),
+                       rtol=1e-5, atol=1e-5)
+    x2 = make_operand("add", nprng, (3, 21))
+    got = ops._batched_scan_gpu(alg.ADD, x2, interpret=False)
+    assert_trees_close(got, ref.ref_batched_scan(alg.ADD, x2),
+                       rtol=1e-5, atol=1e-5)
+    a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, 9, 3)), jnp.float32)
+    b = jnp.asarray(nprng.standard_normal((2, 9, 3)), jnp.float32)
+    got = ops._linrec_gpu(a, b, interpret=False)
+    assert_trees_close(got, ref.ref_linear_recurrence(a, b),
+                       rtol=1e-5, atol=1e-5)

@@ -75,6 +75,56 @@ def vecmat_bytes(n: int, p: int, dtype, out_dtype=None, policy=None) -> int:
     return a_bytes + x_bytes + z_bytes
 
 
+def quantized_matvec_bytes(n: int, p: int, block: int = 64,
+                           policy=None) -> int:
+    """Quantized matvec: 1-byte A values + one f32 scale per ``block`` rows
+    per column, f32 x/y.  Block picks mirror the dense f32 route with the
+    row extent rounded up to whole scale blocks (kernels/ops.py), so the
+    model tracks exactly what the quantized kernel streams."""
+    from repro.kernels.ops import _pick_blocks_matvec
+    policy = policy or ki.resolve_tuning()
+    rn, cp = _pick_blocks_matvec(policy, jnp.zeros((1, 1), jnp.float32), n, p)
+    rn = ki.round_up(rn, block)
+    v_bytes = _pad(n, rn) * _pad(p, cp) * 1
+    s_bytes = (_pad(n, rn) // block) * _pad(p, cp) * 4
+    x_bytes = ki.cdiv(p, cp) * _pad(n, rn) * 4
+    y_bytes = _pad(p, cp) * 4
+    return v_bytes + s_bytes + x_bytes + y_bytes
+
+
+def quantized_vecmat_bytes(n: int, p: int, block: int = 64,
+                           policy=None) -> int:
+    """Quantized vecmat: same (values + scales) streaming model with the
+    vecmat stripe shape; scale blocks still tile the row axis."""
+    from repro.kernels.ops import _pick_blocks_vecmat
+    policy = policy or ki.resolve_tuning()
+    ri, cj = _pick_blocks_vecmat(policy, jnp.zeros((1, 1), jnp.float32), n, p)
+    ri = ki.round_up(ri, block)
+    v_bytes = _pad(n, ri) * _pad(p, cj) * 1
+    s_bytes = (_pad(n, ri) // block) * _pad(p, cj) * 4
+    x_bytes = ki.cdiv(n, ri) * _pad(p, cj) * 4
+    z_bytes = _pad(n, ri) * 4
+    return v_bytes + s_bytes + x_bytes + z_bytes
+
+
+def gpu_quantized_matvec_bytes(n: int, p: int, block: int = 64,
+                               policy=None) -> int:
+    """GPU two-phase quantized matvec: values + scales in, f32 partials
+    round-tripped once, y out (kernels/gpu.py rounds the row strip up to
+    whole scale blocks via lcm)."""
+    import math
+    policy = policy or ki.resolve_tuning("gpu_generic")
+    rows = math.lcm(policy.matvec_rows * ki.WARP, block)
+    cols = max(policy.matvec_cols * ki.vec_width(jnp.float32, flavor="gpu"),
+               1)
+    v_bytes = _pad(n, rows) * _pad(p, cols) * 1
+    s_bytes = (_pad(n, rows) // block) * _pad(p, cols) * 4
+    x_bytes = ki.cdiv(p, cols) * _pad(n, rows) * 4
+    part_bytes = 2 * ki.cdiv(n, rows) * _pad(p, cols) * 4
+    y_bytes = _pad(p, cols) * 4
+    return v_bytes + s_bytes + x_bytes + part_bytes + y_bytes
+
+
 def segmented_scan_bytes(n: int, dtypes, policy=None) -> int:
     """Segmented scan: 2n value movement + one int32 flag read per element
     (scanned flags stay in-register and are never written back)."""

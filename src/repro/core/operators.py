@@ -579,6 +579,250 @@ def unitfloat8_decode(u: jax.Array) -> jax.Array:
     return u.astype(jnp.float32) * (2.0 / 255.0) - 1.0
 
 
+# --------------------------------------------------------------------------
+# Quantized: blockwise-scaled (values, scales) matrices -- the "arbitrary
+# types" stress test on the decode GEMV hot path.  A matrix is stored as a
+# small-dtype values array plus one f32 scale per ``block`` rows per column
+# (blocks tile the leading/reduction axis), so HBM traffic drops ~2-4x vs
+# bf16 while the matvec/vecmat kernels dequantize per tile and accumulate
+# in f32.  The pytree has exactly two leaves (values, scales) of the SAME
+# rank as the plain matrix they replace, so the registry's rank validation
+# and tree surgery (scatter/poison/jit) all work unchanged.
+# --------------------------------------------------------------------------
+
+# mode -> (exponent bits, mantissa bits, exponent bias, max finite value).
+# e4m3 follows the "fn" convention (no inf, 448 max); e5m2 keeps 57344 as
+# its largest finite.  Both are *emulated*: values are stored as uint8 bit
+# patterns and decoded with integer ops + exp2, so the routes work on any
+# backend/jax pin regardless of native float8 support.
+FP8_FORMATS = {"fp8_e4m3": (4, 3, 7, 448.0), "fp8_e5m2": (5, 2, 15, 57344.0)}
+QUANT_MODES = ("int8",) + tuple(FP8_FORMATS)
+
+
+def fp8_decode(u: jax.Array, mode: str) -> jax.Array:
+    """uint8 bit patterns -> f32 (sign/exponent/mantissa field decode).
+
+    Pure integer ops + ``exp2``, so it is safe to call *inside* a Pallas
+    kernel body (the dequant-in-kernel path) as well as on the host.
+    """
+    _, man, bias, _ = FP8_FORMATS[mode]
+    b = u.astype(jnp.int32)
+    sign = jnp.where(b >= 128, -1.0, 1.0).astype(jnp.float32)
+    exp = (b >> man) & ((1 << (7 - man)) - 1)
+    frac = (b & ((1 << man) - 1)).astype(jnp.float32) * (1.0 / (1 << man))
+    # 2**(exp-bias) built as f32 bits: exact, unlike exp2 (which some
+    # backends lower through exp(x*ln2) and round).
+    pow2 = jax.lax.bitcast_convert_type(
+        ((exp - bias + 127) << 23).astype(jnp.int32), jnp.float32)
+    normal = pow2 * (1.0 + frac)
+    subnormal = (2.0 ** (1 - bias)) * frac
+    return sign * jnp.where(exp > 0, normal, subnormal)
+
+
+def fp8_encode(x: jax.Array, mode: str) -> jax.Array:
+    """f32 -> uint8 bit patterns, round-to-nearest onto the fp8 grid,
+    saturating at the format's max finite value (no inf/nan encodings)."""
+    _, man, bias, fmax = FP8_FORMATS[mode]
+    sign = jnp.where(x < 0, jnp.uint8(0x80), jnp.uint8(0))
+    a = jnp.minimum(jnp.abs(x.astype(jnp.float32)), fmax)
+    mant, e = jnp.frexp(a)                 # a == mant * 2**e, mant in [.5, 1)
+    E = e - 1 + bias                       # tentative biased exponent
+    # Normal path: field = round((1.f - 1) * 2^man), carrying into E.
+    nf = jnp.round((mant * 2.0 - 1.0) * (1 << man)).astype(jnp.int32)
+    E = jnp.where(nf >= (1 << man), E + 1, E)
+    nf = jnp.where(nf >= (1 << man), 0, nf)
+    # Subnormal path (E <= 0): field = round(a / 2^(1-bias) * 2^man); a
+    # field of 2^man is exactly the smallest normal.
+    sf = jnp.round(a * (2.0 ** (bias - 1 + man))).astype(jnp.int32)
+    sub = sf < (1 << man)
+    bits = jnp.where(
+        E <= 0,
+        jnp.where(sub, sf, (1 << man)),              # 1<<man == E=1, field 0
+        (jnp.minimum(E, (1 << (7 - man)) - 1) << man) | nf)
+    # Saturate anything that rounded past fmax back to the max finite code.
+    maxcode = _fp8_max_code(mode)
+    bits = jnp.where(a >= fmax, maxcode, jnp.minimum(bits, maxcode))
+    bits = jnp.where(a == 0.0, 0, bits)
+    return (bits.astype(jnp.uint8) | sign).astype(jnp.uint8)
+
+
+@functools.lru_cache(maxsize=None)
+def _fp8_max_code(mode: str) -> int:
+    """Bit pattern of the largest finite value (exponent all-usable-ones,
+    mantissa at the format's top finite field).  Pure host float math --
+    every grid value is exactly representable in double -- so it stays
+    concrete even when ``fp8_encode`` is first reached inside a trace
+    (jit / eval_shape)."""
+    _, man, bias, fmax = FP8_FORMATS[mode]
+    for code in range(127, -1, -1):                  # positive half suffices
+        exp = code >> man
+        frac = (code & ((1 << man) - 1)) / (1 << man)
+        v = ((2.0 ** (exp - bias)) * (1.0 + frac) if exp > 0
+             else (2.0 ** (1 - bias)) * frac)
+        if v == fmax:
+            return code
+    raise AssertionError(f"fmax {fmax} not on the {mode} grid")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """Blockwise-quantized matrix operand: ``values`` is int8 (mode
+    ``"int8"``) or uint8 fp8 bit patterns, ``scales`` holds one f32 per
+    ``block`` rows per column -- shape ``(ceil(n/block), p)`` for an
+    ``(n, p)`` matrix, ``(B, ceil(n/block), p)`` batched, i.e. the same
+    rank as ``values`` so registry rank validation passes untouched.
+
+    ``dequantize()`` is the reference semantics every kernel must match:
+    ``decode(values) * scales`` with scales repeated ``block``-wise along
+    the row axis.  ``error_bound()`` is the per-element dequantization
+    error bound the conformance oracles integrate (kernels/ref.py).
+    """
+
+    values: jax.Array
+    scales: jax.Array
+    block: int = 64
+    mode: str = "int8"
+
+    def tree_flatten(self):
+        return (self.values, self.scales), (self.block, self.mode)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        # The *compute* dtype: kernels dequantize to f32 before applying f,
+        # so shape/dtype probes (zero-extent guards, einsum fast paths) see
+        # the matrix this object stands in for.
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def qtag(self) -> str:
+        """Tuning-key dtype tag: distinct from the plain dtypes so cached
+        block choices never leak between quantized and dense routes."""
+        return f"{self.mode}q{self.block}"
+
+    def _expanded_scales(self) -> jax.Array:
+        s = self.scales
+        nb, p = s.shape[-2], s.shape[-1]
+        lead = s.shape[:-2]
+        e = jnp.broadcast_to(s[..., :, None, :], lead + (nb, self.block, p))
+        return e.reshape(lead + (nb * self.block, p))[
+            ..., : self.values.shape[-2], :]
+
+    def decoded(self) -> jax.Array:
+        """values -> f32 on the quantization grid (scales NOT applied)."""
+        if self.mode == "int8":
+            return self.values.astype(jnp.float32)
+        return fp8_decode(self.values, self.mode)
+
+    def dequantize(self) -> jax.Array:
+        return self.decoded() * self._expanded_scales()
+
+    def error_bound(self) -> jax.Array:
+        """Per-element bound on |original - dequantize()| for a matrix
+        produced by :func:`quantize`: half a quantization step.  int8 steps
+        are uniform (scale); fp8 steps are relative for normals plus the
+        subnormal absolute step, both scaled by the block scale."""
+        s = self._expanded_scales()
+        if self.mode == "int8":
+            return 0.5 * s
+        _, man, bias, _ = FP8_FORMATS[self.mode]
+        rel = jnp.abs(self.decoded()) * (2.0 ** -man)
+        sub_step = 2.0 ** (1 - bias - man)
+        return (0.5 * rel + 0.5 * sub_step) * s
+
+
+def quantize(A: jax.Array, *, mode: str = "int8", block: int = 64) -> Quantized:
+    """Blockwise-quantize ``A`` along its row (reduction) axis.
+
+    Each ``(block, 1)`` column strip gets scale ``absmax / QMAX`` so the
+    scaled values fill the representable range; encode is round-to-nearest
+    (int8) or round-onto-the-fp8-grid, giving the half-step error bound
+    :meth:`Quantized.error_bound` advertises.  Works on ``(n, p)`` and
+    batched ``(B, n, p)`` operands.
+    """
+    if mode not in QUANT_MODES:
+        raise ValueError(f"mode {mode!r} not in {QUANT_MODES}")
+    if block < 1:
+        raise ValueError(f"block must be positive, got {block}")
+    A = jnp.asarray(A, jnp.float32)
+    n, p = A.shape[-2], A.shape[-1]
+    lead = A.shape[:-2]
+    nb = -(-n // block) if n else 0
+    pad = nb * block - n
+    Ap = jnp.pad(A, [(0, 0)] * len(lead) + [(0, pad), (0, 0)])
+    blocks = Ap.reshape(lead + (nb, block, p))
+    absmax = jnp.max(jnp.abs(blocks), axis=-2)            # (..., nb, p)
+    qmax = 127.0 if mode == "int8" else FP8_FORMATS[mode][3]
+    scales = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / qmax
+    scaled = Ap / jnp.repeat(scales, block, axis=-2)
+    scaled = scaled[..., :n, :]
+    if mode == "int8":
+        values = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    else:
+        values = fp8_encode(scaled, mode)
+    return Quantized(values, scales, block=block, mode=mode)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVQuant:
+    """Per-vector quantized KV-cache leaf (serving's ``quantize_kv=`` mode).
+
+    ``values`` holds int8 (mode ``"int8"``) or uint8 fp8 bit patterns with
+    the cached vector on the last axis; ``scales`` holds one f32 per vector
+    (same shape with a trailing 1).  Unlike :class:`Quantized` -- whose
+    scales tile the reduction axis of a matrix in ``block``-row strips --
+    this is the cache-resident form: one scale per (token, head) vector, so
+    slot scatter / ring updates address values and scales with the *same*
+    index arithmetic as the unquantized leaf.  ``mode`` is static aux data,
+    so it survives jit/eval_shape and the decode read can branch on it.
+    """
+
+    values: jax.Array
+    scales: jax.Array
+    mode: str = "int8"
+
+    def tree_flatten(self):
+        return (self.values, self.scales), (self.mode,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        dec = (self.values.astype(jnp.float32) if self.mode == "int8"
+               else fp8_decode(self.values, self.mode))
+        return (dec * self.scales).astype(dtype)
+
+
+def quantize_kv(x: jax.Array, mode: str = "int8") -> KVQuant:
+    """Quantize cache vectors along the last axis, one scale per vector."""
+    if mode not in QUANT_MODES:
+        raise ValueError(f"mode {mode!r} not in {QUANT_MODES}")
+    a = jnp.asarray(x, jnp.float32)
+    absmax = jnp.max(jnp.abs(a), axis=-1, keepdims=True)
+    qmax = 127.0 if mode == "int8" else FP8_FORMATS[mode][3]
+    scales = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / qmax
+    scaled = a / scales
+    if mode == "int8":
+        values = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    else:
+        values = fp8_encode(scaled, mode)
+    return KVQuant(values, scales, mode=mode)
+
+
 STD_OPS = {
     op.name: op
     for op in [ADD, MUL, MAX, MIN, LOGSUMEXP, AFFINE, MAXPLUS_AFFINE,

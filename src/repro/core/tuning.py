@@ -101,7 +101,12 @@ def _recipe_keyer(route: "ki.RouteDef") -> Callable:
                    else getattr(args[op_arg], "name", "?"))
         leaves = jax.tree.leaves(args[data_arg])
         lead = leaves[0]
-        dtype = str(jax.numpy.result_type(lead))
+        # Quantized operands carry their own dtype tag ("int8q64",
+        # "fp8_e4m3q64", ...): the raw storage dtype would collide across
+        # quantization modes and block sizes, leaking cached block winners
+        # between routes with different dequant footprints.
+        qtag = getattr(args[data_arg], "qtag", None)
+        dtype = qtag if qtag is not None else str(jax.numpy.result_type(lead))
         topo = _mesh_topology(kwargs) if sharded else None
         if recipe.dims == "flat":
             return (op_name, dtype, sum(int(l.size) for l in leaves),

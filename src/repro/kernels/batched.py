@@ -232,3 +232,75 @@ def batched_vecmat_pallas(f, op, A: jax.Array, x: jax.Array, *,
         interpret=interpret,
     )(x.reshape(B, 1, p), A)
     return jax.tree.unflatten(out_treedef, [o.reshape(B, n) for o in out])
+
+
+def batched_matvec_quantized_pallas(f, op, q, x: jax.Array, *,
+                                    block_rows: int, block_cols: int,
+                                    interpret: bool = False) -> Pytree:
+    """Batched matvec over a ``Quantized`` (B, n, p) matrix operand: the
+    scale tiles ride the same (batch, stripe) grid as the value tiles, and
+    the shared quantized kernel body dequantizes per tile (f32 accumulate).
+    ``block_rows`` must be a multiple of ``q.block``."""
+    B, n, p = q.shape
+    rn, cp = block_rows, block_cols
+    rpb = matvec_k._check_quant_blocks(rn, q)
+    out_leaves, out_treedef = matvec_k._out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), x.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32))
+
+    grid = (B, ki.cdiv(p, cp), ki.cdiv(n, rn))
+    kernel = functools.partial(
+        matvec_k._matvec_q_kernel, f, op, out_treedef, n, rn, q.block,
+        q.mode, True)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rn, 1), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, rn, cp), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, rpb, cp), lambda b, j, i: (b, i, j)),
+        ],
+        out_specs=[pl.BlockSpec((1, 1, cp), lambda b, j, i: (b, 0, j))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((B, 1, p), l.dtype)
+                   for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(B, n, 1), q.values, q.scales)
+    return jax.tree.unflatten(out_treedef, [o.reshape(B, p) for o in out])
+
+
+def batched_vecmat_quantized_pallas(f, op, q, x: jax.Array, *,
+                                    block_rows: int, block_cols: int,
+                                    interpret: bool = False) -> Pytree:
+    """Batched vecmat over a ``Quantized`` (B, n, p) matrix operand; scale
+    blocks tile the row axis exactly as in the flat quantized vecmat."""
+    B, n, p = q.shape
+    ri, cj = block_rows, block_cols
+    rpb = matvec_k._check_quant_blocks(ri, q)
+    out_leaves, out_treedef = matvec_k._out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), x.dtype))
+
+    grid = (B, ki.cdiv(n, ri), ki.cdiv(p, cj))
+    kernel = functools.partial(
+        matvec_k._vecmat_q_kernel, f, op, out_treedef, p, cj, ri, q.block,
+        q.mode, True)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, cj), lambda b, i, j: (b, 0, j)),
+            pl.BlockSpec((1, ri, cj), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, rpb, cj), lambda b, i, j: (b, i, j)),
+        ],
+        out_specs=[pl.BlockSpec((1, ri, 1), lambda b, i, j: (b, i, 0))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((B, n, 1), l.dtype)
+                   for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(B, 1, p), q.values, q.scales)
+    return jax.tree.unflatten(out_treedef, [o.reshape(B, n) for o in out])

@@ -38,12 +38,15 @@ bodies run under the Pallas interpreter -- CI's ``gpu-interpret`` job.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import intrinsics as ki
+from repro.core import operators as alg
+from repro.kernels import matvec as matvec_k
 from repro.kernels.pallas_compat import gpu_compiler_params, pl
 
 Pytree = Any
@@ -388,6 +391,9 @@ def _matvec_kernel(f, op, out_treedef, n, rows, cols, batched, *refs):
 
 def matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
                interpret: bool | None = None):
+    if isinstance(A, alg.Quantized):
+        return matvec_quantized_gpu(f, op, A, x, policy=policy,
+                                    interpret=interpret)
     interpret = _auto_interpret(interpret)
     policy = _policy(policy)
     n, p = A.shape
@@ -417,6 +423,9 @@ def matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
 
 def batched_matvec_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
                        interpret: bool | None = None):
+    if isinstance(A, alg.Quantized):
+        return batched_matvec_quantized_gpu(f, op, A, x, policy=policy,
+                                            interpret=interpret)
     interpret = _auto_interpret(interpret)
     policy = _policy(policy)
     B, n, p = A.shape
@@ -469,6 +478,9 @@ def _vecmat_kernel(f, op, out_treedef, p, rows, cols, batched, *refs):
 
 def vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
                interpret: bool | None = None):
+    if isinstance(A, alg.Quantized):
+        return vecmat_quantized_gpu(f, op, A, x, policy=policy,
+                                    interpret=interpret)
     interpret = _auto_interpret(interpret)
     policy = _policy(policy)
     n, p = A.shape
@@ -498,6 +510,9 @@ def vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
 
 def batched_vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
                        interpret: bool | None = None):
+    if isinstance(A, alg.Quantized):
+        return batched_vecmat_quantized_gpu(f, op, A, x, policy=policy,
+                                            interpret=interpret)
     interpret = _auto_interpret(interpret)
     policy = _policy(policy)
     B, n, p = A.shape
@@ -519,6 +534,197 @@ def batched_vecmat_gpu(f, op, A, x, *, policy: ki.TuningPolicy | None = None,
         compiler_params=_cparams(policy, interpret),
         interpret=interpret,
     )(A, x)
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=1,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[:, 0], folded)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-operand matvec / vecmat: the same two-phase partials form over a
+# ``Quantized`` (values, scales) matrix.  Each strip loads int8/fp8 value
+# tiles plus the per-(block, column) scale rows covering them, dequantizes in
+# registers (f32), and proceeds exactly like the dense kernels -- the HBM
+# traffic for A drops to ~1 byte/element + scales.  The row strip is rounded
+# to a multiple of ``q.block`` so every strip owns whole scale rows.
+# ---------------------------------------------------------------------------
+
+
+def _q_rows(rows: int, qblock: int) -> int:
+    """Round the row-strip extent up so it covers whole scale blocks."""
+    return math.lcm(rows, qblock)
+
+
+def _matvec_q_kernel_gpu(f, op, out_treedef, n, rows, cols, qblock, qmode,
+                         batched, *refs):
+    v_ref, s_ref, x_ref = refs[0], refs[1], refs[2]
+    o_refs = refs[3:]
+    ig = pl.program_id(2 if batched else 1)
+
+    A = matvec_k._dequant_tile(
+        v_ref[...].reshape(rows, cols),
+        s_ref[...].reshape(rows // qblock, cols), qblock, qmode)
+    x = x_ref[...].reshape(rows)
+    vals = f(x[:, None], A)
+    out_dtypes = [r.dtype for r in o_refs]
+    ident = op.identity(_likes(out_treedef, (rows, cols), out_dtypes))
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0)
+    vals = _mask(ig * rows + ridx < n, vals, ident)
+    red = ki.tile_reduce(op, vals, axis=0, flavor="gpu")      # (1, cols)
+    for o_ref, r in zip(o_refs, jax.tree.leaves(red)):
+        o_ref[...] = r.reshape(o_ref.shape)
+
+
+def matvec_quantized_gpu(f, op, q, x, *,
+                         policy: ki.TuningPolicy | None = None,
+                         interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    policy = _policy(policy)
+    n, p = q.shape
+    rows, cols = _mv_blocks(policy, q.dtype, policy.matvec_rows,
+                            policy.matvec_cols)
+    rows = _q_rows(rows, q.block)
+    rpb = rows // q.block
+    out_leaves, out_treedef = _out_struct_mv(f, x.dtype, jnp.float32)
+    nbi = ki.cdiv(n, rows)
+    kernel = functools.partial(
+        _matvec_q_kernel_gpu, f, op, out_treedef, n, rows, cols, q.block,
+        q.mode, False)
+    parts = pl.pallas_call(
+        kernel,
+        grid=(ki.cdiv(p, cols), nbi),
+        in_specs=[pl.BlockSpec((rows, cols), lambda j, i: (i, j)),
+                  pl.BlockSpec((rpb, cols), lambda j, i: (i, j)),
+                  pl.BlockSpec((rows,), lambda j, i: (i,))],
+        out_specs=[pl.BlockSpec((1, cols), lambda j, i: (i, j))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((nbi, p), l.dtype)
+                   for l in out_leaves],
+        compiler_params=_cparams(policy, interpret),
+        interpret=interpret,
+    )(q.values, q.scales, x)
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=0,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[0], folded)
+
+
+def batched_matvec_quantized_gpu(f, op, q, x, *,
+                                 policy: ki.TuningPolicy | None = None,
+                                 interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    policy = _policy(policy)
+    B, n, p = q.shape
+    rows, cols = _mv_blocks(policy, q.dtype, policy.matvec_rows,
+                            policy.matvec_cols)
+    rows = _q_rows(rows, q.block)
+    rpb = rows // q.block
+    out_leaves, out_treedef = _out_struct_mv(f, x.dtype, jnp.float32)
+    nbi = ki.cdiv(n, rows)
+    kernel = functools.partial(
+        _matvec_q_kernel_gpu, f, op, out_treedef, n, rows, cols, q.block,
+        q.mode, True)
+    parts = pl.pallas_call(
+        kernel,
+        grid=(B, ki.cdiv(p, cols), nbi),
+        in_specs=[pl.BlockSpec((1, rows, cols), lambda b, j, i: (b, i, j)),
+                  pl.BlockSpec((1, rpb, cols), lambda b, j, i: (b, i, j)),
+                  pl.BlockSpec((1, rows), lambda b, j, i: (b, i))],
+        out_specs=[pl.BlockSpec((1, 1, cols), lambda b, j, i: (b, i, j))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((B, nbi, p), l.dtype)
+                   for l in out_leaves],
+        compiler_params=_cparams(policy, interpret),
+        interpret=interpret,
+    )(q.values, q.scales, x)
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=1,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[:, 0], folded)
+
+
+def _vecmat_q_kernel_gpu(f, op, out_treedef, p, rows, cols, qblock, qmode,
+                         batched, *refs):
+    v_ref, s_ref, x_ref = refs[0], refs[1], refs[2]
+    o_refs = refs[3:]
+    jg = pl.program_id(2 if batched else 1)
+
+    A = matvec_k._dequant_tile(
+        v_ref[...].reshape(rows, cols),
+        s_ref[...].reshape(rows // qblock, cols), qblock, qmode)
+    x = x_ref[...].reshape(cols)
+    vals = f(A, x[None, :])
+    out_dtypes = [r.dtype for r in o_refs]
+    ident = op.identity(_likes(out_treedef, (rows, cols), out_dtypes))
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    vals = _mask(jg * cols + cidx < p, vals, ident)
+    red = ki.tile_reduce(op, vals, axis=1, flavor="gpu")      # (rows, 1)
+    for o_ref, r in zip(o_refs, jax.tree.leaves(red)):
+        o_ref[...] = r.reshape(o_ref.shape)
+
+
+def vecmat_quantized_gpu(f, op, q, x, *,
+                         policy: ki.TuningPolicy | None = None,
+                         interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    policy = _policy(policy)
+    n, p = q.shape
+    rows, cols = _mv_blocks(policy, q.dtype, policy.vecmat_rows,
+                            policy.vecmat_cols)
+    rows = _q_rows(rows, q.block)
+    rpb = rows // q.block
+    out_leaves, out_treedef = _out_struct_mv(f, jnp.float32, x.dtype)
+    nbj = ki.cdiv(p, cols)
+    kernel = functools.partial(
+        _vecmat_q_kernel_gpu, f, op, out_treedef, p, rows, cols, q.block,
+        q.mode, False)
+    parts = pl.pallas_call(
+        kernel,
+        grid=(ki.cdiv(n, rows), nbj),
+        in_specs=[pl.BlockSpec((rows, cols), lambda i, j: (i, j)),
+                  pl.BlockSpec((rpb, cols), lambda i, j: (i, j)),
+                  pl.BlockSpec((cols,), lambda i, j: (j,))],
+        out_specs=[pl.BlockSpec((1, rows), lambda i, j: (j, i))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((nbj, n), l.dtype)
+                   for l in out_leaves],
+        compiler_params=_cparams(policy, interpret),
+        interpret=interpret,
+    )(q.values, q.scales, x)
+    folded = ki.tile_reduce(
+        op, jax.tree.unflatten(out_treedef, list(parts)), axis=0,
+        flavor="gpu")
+    return jax.tree.map(lambda l: l[0], folded)
+
+
+def batched_vecmat_quantized_gpu(f, op, q, x, *,
+                                 policy: ki.TuningPolicy | None = None,
+                                 interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    policy = _policy(policy)
+    B, n, p = q.shape
+    rows, cols = _mv_blocks(policy, q.dtype, policy.vecmat_rows,
+                            policy.vecmat_cols)
+    rows = _q_rows(rows, q.block)
+    rpb = rows // q.block
+    out_leaves, out_treedef = _out_struct_mv(f, jnp.float32, x.dtype)
+    nbj = ki.cdiv(p, cols)
+    kernel = functools.partial(
+        _vecmat_q_kernel_gpu, f, op, out_treedef, p, rows, cols, q.block,
+        q.mode, True)
+    parts = pl.pallas_call(
+        kernel,
+        grid=(B, ki.cdiv(n, rows), nbj),
+        in_specs=[pl.BlockSpec((1, rows, cols), lambda b, i, j: (b, i, j)),
+                  pl.BlockSpec((1, rpb, cols), lambda b, i, j: (b, i, j)),
+                  pl.BlockSpec((1, cols), lambda b, i, j: (b, j))],
+        out_specs=[pl.BlockSpec((1, 1, rows), lambda b, i, j: (b, j, i))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((B, nbj, n), l.dtype)
+                   for l in out_leaves],
+        compiler_params=_cparams(policy, interpret),
+        interpret=interpret,
+    )(q.values, q.scales, x)
     folded = ki.tile_reduce(
         op, jax.tree.unflatten(out_treedef, list(parts)), axis=1,
         flavor="gpu")

@@ -35,6 +35,7 @@ from jax.experimental import pallas as pl
 from repro.kernels.pallas_compat import pltpu
 
 from repro.core import intrinsics as ki
+from repro.core import operators as alg
 
 Pytree = Any
 
@@ -42,6 +43,31 @@ Pytree = Any
 def _out_struct(f, x_like, a_like):
     out = jax.eval_shape(lambda xx, aa: f(xx, aa), x_like, a_like)
     return jax.tree.flatten(out)
+
+
+def _dequant_tile(values, scales, block: int, mode: str) -> jax.Array:
+    """In-kernel blockwise dequant of a ``(rn, cp)`` values tile.
+
+    ``scales`` is the matching ``(rn // block, cp)`` tile; each scale row is
+    broadcast over its ``block`` value rows (broadcast + reshape -- the
+    sublane axis only ever merges with a new unit axis, which lowers to a
+    plain relayout on TPU and is exact in interpret mode).  Output is f32:
+    the accumulation dtype of every quantized route.
+    """
+    rpb, cp = scales.shape
+    dec = (values.astype(jnp.float32) if mode == "int8"
+           else alg.fp8_decode(values, mode))
+    se = jnp.broadcast_to(scales[:, None, :], (rpb, block, cp))
+    return dec * se.reshape(rpb * block, cp)
+
+
+def _check_quant_blocks(rn: int, q) -> int:
+    if rn % q.block:
+        raise ValueError(
+            f"quantized matvec/vecmat needs the row-tile extent ({rn}) to "
+            f"be a multiple of the quantization block ({q.block}); the "
+            "ops.py block pickers round it up -- fix the caller")
+    return rn // q.block
 
 
 def _matvec_kernel(f, op, out_treedef, n, rn, n_out, batched, *refs):
@@ -116,6 +142,85 @@ def matvec_pallas(f, op, A: jax.Array, x: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x.reshape(n, 1), A)
+    return jax.tree.unflatten(out_treedef, [o.reshape(p) for o in out])
+
+
+def _matvec_q_kernel(f, op, out_treedef, n, rn, block, mode, batched, *refs):
+    """Quantized column-stripe matvec body: :func:`_matvec_kernel` with the
+    A tile rebuilt from (values, scales) before ``f`` -- scales broadcast
+    per block inside the tile, products accumulated in f32."""
+    x_ref, v_ref, s_ref = refs[0], refs[1], refs[2]
+    o_refs = refs[3:]
+    i = pl.program_id(2 if batched else 1)
+    cp = v_ref.shape[-1]
+    rpb = rn // block
+
+    acc_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((1, cp), r.dtype) for r in o_refs])
+    ident_acc = op.identity(acc_like)
+
+    @pl.when(i == 0)
+    def _init():
+        for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
+            orf[...] = ia.reshape(orf.shape)
+
+    x = x_ref[...].reshape(rn, 1)
+    a = _dequant_tile(v_ref[...].reshape(rn, cp),
+                      s_ref[...].reshape(rpb, cp), block, mode)
+    v = f(x, a)               # pytree of (rn, cp), f32 accumulation
+
+    tile_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((rn, cp), r.dtype) for r in o_refs])
+    ident_tile = op.identity(tile_like)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (rn, cp), 0)
+    valid = (i * rn + ridx) < n
+    v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
+
+    part = ki.tile_reduce(op, v, axis=0)        # (1, cp), in-order
+    acc = jax.tree.unflatten(
+        out_treedef, [orf[...].reshape(1, cp) for orf in o_refs])
+    acc = op(acc, part)
+    for orf, l in zip(o_refs, jax.tree.leaves(acc)):
+        orf[...] = l.reshape(orf.shape)
+
+
+def matvec_quantized_pallas(f, op, q, x: jax.Array, *,
+                            block_rows: int, block_cols: int,
+                            interpret: bool = False) -> Pytree:
+    """y[j] = op_i f(x[i], deq(A)[i, j]) for a ``Quantized`` matrix operand.
+
+    Same grid/stripe protocol as :func:`matvec_pallas`; HBM moves the int8/
+    fp8 values plus one f32 scale per ``q.block`` rows per column instead of
+    the dense matrix.  ``block_rows`` must be a multiple of ``q.block``.
+    """
+    n, p = q.shape
+    rn = block_rows
+    cp = block_cols
+    rpb = _check_quant_blocks(rn, q)
+    out_leaves, out_treedef = _out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), x.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32))
+
+    grid = (ki.cdiv(p, cp), ki.cdiv(n, rn))
+    kernel = functools.partial(
+        _matvec_q_kernel, f, op, out_treedef, n, rn, q.block, q.mode, False)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rn, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((rn, cp), lambda j, i: (i, j)),
+            pl.BlockSpec((rpb, cp), lambda j, i: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((1, cp), lambda j, i: (0, j))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((1, p), l.dtype) for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(n, 1), q.values, q.scales)
     return jax.tree.unflatten(out_treedef, [o.reshape(p) for o in out])
 
 
@@ -306,4 +411,85 @@ def vecmat_pallas(f, op, A: jax.Array, x: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x.reshape(1, p), A)
+    return jax.tree.unflatten(out_treedef, [o.reshape(n) for o in out])
+
+
+def _vecmat_q_kernel(f, op, out_treedef, p, cj, ri, block, mode, batched,
+                     *refs):
+    """Quantized row-stripe vecmat body: dequant-in-kernel, f32 accumulate.
+
+    The scale blocks tile the *row* axis (a property of the stored matrix,
+    not of the reduction), so the expansion is identical to matvec even
+    though vecmat reduces along lanes."""
+    x_ref, v_ref, s_ref = refs[0], refs[1], refs[2]
+    o_refs = refs[3:]
+    j = pl.program_id(2 if batched else 1)
+    rpb = ri // block
+
+    acc_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((ri, 1), r.dtype) for r in o_refs])
+    ident_acc = op.identity(acc_like)
+
+    @pl.when(j == 0)
+    def _init():
+        for orf, ia in zip(o_refs, jax.tree.leaves(ident_acc)):
+            orf[...] = ia.reshape(orf.shape)
+
+    x = x_ref[...].reshape(1, cj)
+    a = _dequant_tile(v_ref[...].reshape(ri, cj),
+                      s_ref[...].reshape(rpb, cj), block, mode)
+    v = f(a, x)               # pytree of (ri, cj), f32 accumulation
+
+    tile_like = jax.tree.unflatten(
+        out_treedef,
+        [jax.ShapeDtypeStruct((ri, cj), r.dtype) for r in o_refs])
+    ident_tile = op.identity(tile_like)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (ri, cj), 1)
+    valid = (j * cj + cidx) < p
+    v = jax.tree.map(lambda l, id_: jnp.where(valid, l, id_), v, ident_tile)
+
+    part = ki.tile_reduce(op, v, axis=1)        # (ri, 1), in-order
+    acc = jax.tree.unflatten(
+        out_treedef, [orf[...].reshape(ri, 1) for orf in o_refs])
+    acc = op(acc, part)
+    for orf, l in zip(o_refs, jax.tree.leaves(acc)):
+        orf[...] = l.reshape(orf.shape)
+
+
+def vecmat_quantized_pallas(f, op, q, x: jax.Array, *,
+                            block_rows: int, block_cols: int,
+                            interpret: bool = False) -> Pytree:
+    """z[i] = op_j f(deq(A)[i, j], x[j]) for a ``Quantized`` matrix operand.
+
+    ``block_rows`` must be a multiple of ``q.block`` (row-axis scale tiling,
+    as in :func:`matvec_quantized_pallas`)."""
+    n, p = q.shape
+    ri = block_rows
+    cj = block_cols
+    _check_quant_blocks(ri, q)
+    rpb = ri // q.block
+    out_leaves, out_treedef = _out_struct(
+        f, jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), x.dtype))
+
+    grid = (ki.cdiv(n, ri), ki.cdiv(p, cj))
+    kernel = functools.partial(
+        _vecmat_q_kernel, f, op, out_treedef, p, cj, ri, q.block, q.mode,
+        False)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cj), lambda i, j: (0, j)),
+            pl.BlockSpec((ri, cj), lambda i, j: (i, j)),
+            pl.BlockSpec((rpb, cj), lambda i, j: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((ri, 1), lambda i, j: (i, 0))
+                   for _ in out_leaves],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), l.dtype) for l in out_leaves],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x.reshape(1, p), q.values, q.scales)
     return jax.tree.unflatten(out_treedef, [o.reshape(n) for o in out])

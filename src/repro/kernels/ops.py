@@ -356,9 +356,21 @@ def _pick_blocks_vecmat(policy, A, n, p):
     return ri, cj
 
 
+def _quant_row_block(bn: int, q) -> int:
+    """Round a picked row-block extent up to whole ``q.block`` scale rows so
+    every value tile owns complete scale rows (kernels/matvec.py enforces
+    the invariant)."""
+    return ki.round_up(bn, q.block)
+
+
 def _matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
     n, p = A.shape
+    if isinstance(A, alg.Quantized):
+        rn, cp = _pick_blocks_matvec(policy, A, n, p)
+        rn = _quant_row_block(rn, A)
+        return matvec_k.matvec_quantized_pallas(
+            f, op, A, x, block_rows=rn, block_cols=cp, interpret=interpret)
     if p <= 64 and n >= 4 * ki.LANES and getattr(op, "commutative", False):
         # Tall-narrow: lane-packed kernel (EXPERIMENTS.md §Kernel gap fix) --
         # g = 128//p row groups share the lanes instead of padding p to 128.
@@ -375,11 +387,17 @@ def _vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
     n, p = A.shape
     ri, cj = _pick_blocks_vecmat(policy, A, n, p)
+    if isinstance(A, alg.Quantized):
+        ri = _quant_row_block(ri, A)
+        return matvec_k.vecmat_quantized_pallas(
+            f, op, A, x, block_rows=ri, block_cols=cj, interpret=interpret)
     return matvec_k.vecmat_pallas(f, op, A, x, block_rows=ri, block_cols=cj,
                                   interpret=interpret)
 
 
 def _matvec_xla(f, op, A, x, *, policy=None):
+    if isinstance(A, alg.Quantized):
+        A = A.dequantize()      # reference lowering: dequantize, then dense
     if op.name == "add" and _is_arithmetic(f, x, A):
         # Standard semiring -> MXU-friendly contraction.
         return jnp.einsum("n,np->p", x, A)
@@ -387,6 +405,8 @@ def _matvec_xla(f, op, A, x, *, policy=None):
 
 
 def _vecmat_xla(f, op, A, x, *, policy=None):
+    if isinstance(A, alg.Quantized):
+        A = A.dequantize()
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("np,p->n", A, x)
     return ref.ref_vecmat(f, op, A, x)
@@ -470,6 +490,10 @@ def _batched_mapreduce_xla(f, op, xs, *, policy=None):
 def _batched_matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
     rn, cp = _pick_blocks_matvec(policy, A, A.shape[1], A.shape[2])
+    if isinstance(A, alg.Quantized):
+        rn = _quant_row_block(rn, A)
+        return batched_k.batched_matvec_quantized_pallas(
+            f, op, A, x, block_rows=rn, block_cols=cp, interpret=interpret)
     return batched_k.batched_matvec_pallas(
         f, op, A, x, block_rows=rn, block_cols=cp, interpret=interpret)
 
@@ -477,11 +501,17 @@ def _batched_matvec_pallas(f, op, A, x, *, interpret=False, policy=None):
 def _batched_vecmat_pallas(f, op, A, x, *, interpret=False, policy=None):
     policy = policy or ki.resolve_tuning("interpret" if interpret else None)
     ri, cj = _pick_blocks_vecmat(policy, A, A.shape[1], A.shape[2])
+    if isinstance(A, alg.Quantized):
+        ri = _quant_row_block(ri, A)
+        return batched_k.batched_vecmat_quantized_pallas(
+            f, op, A, x, block_rows=ri, block_cols=cj, interpret=interpret)
     return batched_k.batched_vecmat_pallas(
         f, op, A, x, block_rows=ri, block_cols=cj, interpret=interpret)
 
 
 def _batched_matvec_xla(f, op, A, x, *, policy=None):
+    if isinstance(A, alg.Quantized):
+        A = A.dequantize()
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("bn,bnp->bp", x, A)
     vals = f(x[:, :, None], A)
@@ -490,6 +520,8 @@ def _batched_matvec_xla(f, op, A, x, *, policy=None):
 
 
 def _batched_vecmat_xla(f, op, A, x, *, policy=None):
+    if isinstance(A, alg.Quantized):
+        A = A.dequantize()
     if op.name == "add" and _is_arithmetic(f, x, A):
         return jnp.einsum("bnp,bp->bn", A, x)
     vals = f(A, x[:, None, :])

@@ -72,6 +72,33 @@ def ref_vecmat(f, op, A: jax.Array, x: jax.Array) -> Pytree:
     return jax.tree.map(lambda l: l[:, -1], scanned)
 
 
+# ---------------------------------------------------------------------------
+# Quantized-operand oracles.  The conformance contract for a Quantized
+# matrix operand has two halves:
+#
+# * exact-grid: the route's output must match the flat oracle applied to
+#   ``q.dequantize()`` at ordinary float tolerance (the kernel dequantizes
+#   the same (values, scales) data, just tile-by-tile);
+# * error-bounded: against the *unquantized* f32 oracle the route may only
+#   deviate by the integrated dequantization error -- for an additive
+#   reduction over products, |sum_i x_i (A - deq)_ij| <= sum_i |x_i| eb_ij,
+#   with eb the per-element half-step bound from Quantized.error_bound()
+#   (derived from the block max-abs via the stored scales).
+# ---------------------------------------------------------------------------
+
+
+def ref_quantized_matvec_bound(q, x: jax.Array) -> jax.Array:
+    """Per-output atol for matvec(f=*, op=ADD) vs the f32 oracle: (p,)."""
+    return jnp.einsum("...n,...np->...p", jnp.abs(x.astype(jnp.float32)),
+                      q.error_bound())
+
+
+def ref_quantized_vecmat_bound(q, x: jax.Array) -> jax.Array:
+    """Per-output atol for vecmat(f=*, op=ADD) vs the f32 oracle: (n,)."""
+    return jnp.einsum("...np,...p->...n", q.error_bound(),
+                      jnp.abs(x.astype(jnp.float32)))
+
+
 def ref_linear_recurrence(a: jax.Array, b: jax.Array, h0=None,
                           axis: int = 1, reverse: bool = False) -> jax.Array:
     """h_t = a_t * h_{t-1} + b_t along ``axis`` (h_{-1} = h0 or 0)."""

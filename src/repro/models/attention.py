@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import operators as alg
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -209,6 +210,41 @@ def is_vector_pos(pos) -> bool:
     return getattr(pos, "ndim", 0) == 1
 
 
+def _kv_scatter(leaf, new, bidx, slot, dtype):
+    """Per-row slot write of ``new`` (B, K, hd) at ``[bidx, slot]``.
+
+    Returns ``(stored, readable)``: the cache-resident form to carry
+    forward and the dense form attention reads.  A ``KVQuant`` leaf stores
+    values and scales with the same index arithmetic as the dense leaf and
+    dequantizes the whole cache at read (quantize-at-write / dequant-at-read
+    is the serving contract for ``quantize_kv=``).
+    """
+    if isinstance(leaf, alg.KVQuant):
+        qn = alg.quantize_kv(new, leaf.mode)
+        stored = alg.KVQuant(
+            leaf.values.at[bidx, slot].set(qn.values),
+            leaf.scales.at[bidx, slot].set(qn.scales), leaf.mode)
+        return stored, stored.dequantize(dtype)
+    stored = leaf.at[bidx, slot].set(new.astype(leaf.dtype))
+    return stored, stored
+
+
+def _kv_update_seq(leaf, new, slot, dtype):
+    """Aligned-batch slot write of ``new`` (B, 1, K, hd) at sequence
+    position ``slot``; same (stored, readable) contract as _kv_scatter."""
+    if isinstance(leaf, alg.KVQuant):
+        qn = alg.quantize_kv(new, leaf.mode)
+        stored = alg.KVQuant(
+            jax.lax.dynamic_update_slice_in_dim(
+                leaf.values, qn.values, slot, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(
+                leaf.scales, qn.scales, slot, axis=1), leaf.mode)
+        return stored, stored.dequantize(dtype)
+    stored = jax.lax.dynamic_update_slice_in_dim(
+        leaf, new.astype(leaf.dtype), slot, axis=1)
+    return stored, stored
+
+
 def gqa_decode(params, cfg, x, cache, pos, *, is_local):
     """One-token decode.  x: (B,1,D); pos: scalar position, or a (B,)
     per-slot position vector (continuous batching: every row of the batch
@@ -238,12 +274,13 @@ def gqa_decode(params, cfg, x, cache, pos, *, is_local):
         # Per-row ring-slot scatter; the flash-decode sharded path is
         # scalar-pos only (its owner-shard cache update keys on one slot).
         bidx = jnp.arange(B)
-        kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-        vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
-        out = decode_attention(q, kc, vc, key_valid=key_valid,
+        kc, kread = _kv_scatter(cache["k"], k[:, 0], bidx, slot, dtype)
+        vc, vread = _kv_scatter(cache["v"], v[:, 0], bidx, slot, dtype)
+        out = decode_attention(q, kread, vread, key_valid=key_valid,
                                softcap=cfg.attn_softcap)
     elif rules and rules.get("decode_kv_shard") and _mesh is not None \
-            and Lc % _msize == 0:
+            and Lc % _msize == 0 \
+            and not isinstance(cache["k"], alg.KVQuant):
         # Flash-decoding: cache sequence sharded over "model", partial
         # softmaxes merged with the SOFTMAX_MERGE algebra, and the cache
         # update done owner-shard-locally (a jnp-level update at a traced
@@ -258,11 +295,9 @@ def gqa_decode(params, cfg, x, cache, pos, *, is_local):
             mesh, q, cache["k"], cache["v"], k, v, slot, key_valid,
             softcap=cfg.attn_softcap, batch_sharded=B % dp_total == 0)
     else:
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-        out = decode_attention(q, kc, vc, key_valid=key_valid,
+        kc, kread = _kv_update_seq(cache["k"], k, slot, dtype)
+        vc, vread = _kv_update_seq(cache["v"], v, slot, dtype)
+        out = decode_attention(q, kread, vread, key_valid=key_valid,
                                softcap=cfg.attn_softcap)
     out = out.reshape(B, 1, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))

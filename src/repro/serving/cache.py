@@ -97,6 +97,40 @@ def slot_position(slot_idx, pos, window: int):
     return pos - (pos - slot_idx) % window
 
 
+def quantize_kv_tree(caches, mode: str):
+    """Replace every attention KV leaf with a ``KVQuant`` (values, scales)
+    node -- the opt-in ``quantize_kv=`` cache form.
+
+    Attention KV leaves are the ``"k"``/``"v"`` dict entries of rank >= 4
+    ((slot, pos, kv_head, head_dim), plus a leading layer axis under the
+    ``units`` stacking); everything else -- MLA latents, recurrent states,
+    conv tails -- stays dense.  Because ``KVQuant`` is a registered pytree
+    whose children share the leaf's leading axes, :func:`scatter_slot`,
+    :func:`poison_slot` and the ring address math above work on the
+    quantized tree unchanged.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            return {
+                key: (alg.quantize_kv(val, mode)
+                      if key in ("k", "v") and getattr(val, "ndim", 0) >= 4
+                      else walk(val))
+                for key, val in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(caches)
+
+
+class SlotError(IndexError):
+    """A slot index outside ``[0, num_slots)`` reached the ledger.
+
+    Raised instead of letting numpy's negative-index wraparound silently
+    redirect the update into another live slot's length accounting."""
+
+
 class SlotLedger:
     """Host-side ragged length accounting for the live slots.
 
@@ -111,16 +145,28 @@ class SlotLedger:
         self.cache_len = cache_len
         self.lengths = np.zeros(num_slots, np.int64)
 
+    def _check_slot(self, slot: int) -> int:
+        slot = int(slot)
+        if not 0 <= slot < self.num_slots:
+            raise SlotError(
+                f"slot {slot} outside [0, {self.num_slots}): negative or "
+                "out-of-range slots would wrap into another slot's ledger "
+                "entry")
+        return slot
+
     def occupy(self, slot: int, length: int):
+        slot = self._check_slot(slot)
         if not 0 <= length <= self.cache_len:
             raise ValueError(
                 f"slot {slot}: length {length} outside [0, {self.cache_len}]")
         self.lengths[slot] = length
 
     def advance(self, slot: int, by: int = 1):
+        slot = self._check_slot(slot)
         self.lengths[slot] = min(self.lengths[slot] + by, self.cache_len)
 
     def free(self, slot: int):
+        slot = self._check_slot(slot)
         self.lengths[slot] = 0
 
     def offsets(self) -> jax.Array:
@@ -130,6 +176,7 @@ class SlotLedger:
 
     def segment_of(self, slot: int) -> tuple[int, int]:
         """[start, end) of ``slot``'s segment in the flat CSR stream."""
+        slot = self._check_slot(slot)
         start = int(self.lengths[:slot].sum())
         return start, start + int(self.lengths[slot])
 
@@ -144,10 +191,19 @@ def compact_ragged(buf, counts):
     own primitive.  Host-side drain helper: runs eagerly on small arrays.
     """
     B, T = buf.shape
+    # The flat extent must be a host int (it shapes the gather).  When the
+    # counts are already concrete -- the ledger hands over host numpy --
+    # summing them locally avoids the blocking device->host sync that
+    # ``int(incl[-1])`` forces, keeping the drain path on the module's
+    # no-sync promise; only genuinely device-resident counts pay the wait.
+    host_counts = None if isinstance(counts, jax.Array) else np.asarray(counts)
     counts = jnp.asarray(counts, jnp.int32)
     incl = forge.scan(alg.ADD, counts, layout=Flat())        # (B,) inclusive
     starts = incl - counts                                   # exclusive form
-    total = int(incl[-1]) if B else 0
+    if host_counts is not None:
+        total = int(host_counts.sum()) if B else 0
+    else:
+        total = int(incl[-1]) if B else 0
     offsets = jnp.concatenate(
         [starts.astype(jnp.int32), jnp.asarray([total], jnp.int32)])
     # Gather: flat[k] = buf[b, k - starts[b]] for k in [starts[b], incl[b]).

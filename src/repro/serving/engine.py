@@ -96,6 +96,19 @@ def sample_tokens(base_key, logits, seeds, steps, *, temperature, top_k,
     Greedy when ``temperature <= 0``; otherwise per-row Gumbel-argmax with
     counter-based keys (see module docstring), filtered through the
     segmented top-k / batched nucleus-cutoff primitives when configured.
+
+    **Nucleus semantics**: the top-p cutoff is measured on the softmax
+    *renormalized over the k retained candidates* (``top_k``, or
+    ``top_p_candidates`` when only top-p is set), not on the full-vocab
+    distribution.  Consequences this module pins with conformance tests,
+    so alternative logits paths (e.g. quantized decode) cannot silently
+    change them: (a) the first (highest) candidate always survives -- its
+    exclusive prefix mass is 0 < top_p; (b) when the candidates' full-vocab
+    mass is below ``top_p`` the renormalized masses still sum to 1, so the
+    cutoff binds at the same prefix as if the tail mass were redistributed
+    -- in particular every candidate survives iff the renormalized
+    exclusive prefix stays below ``top_p``, regardless of how little
+    full-vocab mass the k candidates carry.
     """
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -133,7 +146,8 @@ class Engine:
     def __init__(self, cfg, mesh, params, *, cache_len: int, batch_size: int,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
                  top_p_candidates: int = 64, seed: int = 0,
-                 max_new_cap: int | None = None, poison_on_evict: bool = False):
+                 max_new_cap: int | None = None, poison_on_evict: bool = False,
+                 quantize_kv: str | None = None):
         self.cfg = cfg
         self.mesh = mesh
         self.params = params
@@ -145,6 +159,12 @@ class Engine:
         self.top_p_candidates = top_p_candidates
         self.max_new_cap = max_new_cap or cache_len
         self.poison_on_evict = poison_on_evict
+        if quantize_kv == "fp8":              # spelling alias: default format
+            quantize_kv = "fp8_e4m3"
+        if quantize_kv is not None and quantize_kv not in alg.QUANT_MODES:
+            raise ValueError(
+                f"quantize_kv={quantize_kv!r} not in {alg.QUANT_MODES}")
+        self.quantize_kv = quantize_kv
         self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
             TS.make_prefill_step(cfg, mesh, cache_len) if mesh is not None
@@ -199,6 +219,12 @@ class Engine:
         _, cache_shape = jax.eval_shape(
             self._prefill, self.params,
             self._make_batch(np.zeros((B, 1), np.int32)))
+        if self.quantize_kv is not None:
+            # Shape-level transform: the resident tree holds KVQuant
+            # (values, scales) nodes for every attention KV leaf.
+            cache_shape = jax.eval_shape(
+                functools.partial(CA.quantize_kv_tree, mode=self.quantize_kv),
+                cache_shape)
         return {
             "caches": jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), cache_shape),
@@ -222,6 +248,8 @@ class Engine:
                             jnp.zeros((1,), jnp.int32))[0]
         lp1 = chosen_logprobs(logits1, tok1[None])[0]
         st = dict(state)
+        if self.quantize_kv is not None:
+            caches1 = CA.quantize_kv_tree(caches1, mode=self.quantize_kv)
         st["caches"] = CA.scatter_slot(state["caches"], caches1, slot)
         st["tok"] = state["tok"].at[slot].set(tok1)
         st["pos"] = state["pos"].at[slot].set(pos0)

@@ -171,6 +171,28 @@ def test_ledger_rejects_overlong():
         led.occupy(0, 9)
 
 
+@pytest.mark.parametrize("slot", [-1, 4, 100])
+def test_ledger_rejects_out_of_range_slot(slot):
+    """Regression: slot = -1 used to wrap (numpy negative indexing) into the
+    LAST live slot's ledger entry -- a silent cross-request length
+    corruption.  Every mutating entry point must raise SlotError instead."""
+    led = CA.SlotLedger(4, cache_len=16)
+    led.occupy(3, 5)                       # the slot -1 would alias into
+    for fn in (lambda: led.occupy(slot, 2),
+               lambda: led.advance(slot),
+               lambda: led.free(slot),
+               lambda: led.segment_of(slot)):
+        with pytest.raises(CA.SlotError):
+            fn()
+    assert led.lengths[3] == 5             # the aliased slot is untouched
+
+
+def test_slot_error_is_index_error():
+    """SlotError subclasses IndexError so pre-existing except IndexError
+    handlers keep working."""
+    assert issubclass(CA.SlotError, IndexError)
+
+
 # ---------------------------------------------------------------------------
 # compact_ragged -- CSR drain of ragged slot buffers.
 # ---------------------------------------------------------------------------
@@ -195,6 +217,37 @@ def test_compact_ragged_all_empty():
                                       np.zeros(3, np.int32))
     assert flat.shape == (0,)
     np.testing.assert_array_equal(np.asarray(offsets), [0, 0, 0, 0])
+
+
+def test_compact_ragged_host_counts_skip_device_sync(monkeypatch):
+    """Regression for the drain path's no-sync promise: with concrete host
+    counts (what the ledger hands over), the flat extent must come from the
+    host sum, never from ``int(device_scalar)``.  jax's transfer guard is
+    blind on the CPU backend (zero-copy), so the check is structural: shadow
+    ``int`` in the module namespace and fail if it ever receives a device
+    array while counts are host-side."""
+    real_int = int
+
+    def guarded_int(x=0, *args):
+        assert not isinstance(x, jax.Array), (
+            "compact_ragged forced a device->host sync despite concrete "
+            "host counts")
+        return real_int(x, *args)
+
+    monkeypatch.setattr(CA, "int", guarded_int, raising=False)
+    buf = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    flat, offsets = CA.compact_ragged(buf, np.asarray([2, 0, 3], np.int32))
+    np.testing.assert_array_equal(np.asarray(flat), [0, 1, 8, 9, 10])
+    np.testing.assert_array_equal(np.asarray(offsets), [0, 2, 2, 5])
+
+
+def test_compact_ragged_device_counts_still_work():
+    """Genuinely device-resident counts take the (blocking) int(incl[-1])
+    path and must produce the same CSR drain."""
+    buf = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    flat, offsets = CA.compact_ragged(buf, jnp.asarray([2, 0, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(flat), [0, 1, 8, 9, 10])
+    np.testing.assert_array_equal(np.asarray(offsets), [0, 2, 2, 5])
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +276,33 @@ def test_recycled_slot_no_stale_bleed(arch):
 
     fresh = Engine(cfg, None, params, cache_len=32, batch_size=1,
                    temperature=0.7, top_k=8)
+    out_fresh = fresh.generate([rb])
+    assert out_both[1] == out_fresh[0]
+    assert not np.isnan(eng.last_scores).any()
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+def test_recycled_slot_no_stale_bleed_quantized_kv(mode):
+    """Slot hygiene must survive the quantized KV cache form: the KVQuant
+    (values, scales) leaves ride the same scatter/poison/ring address math,
+    so a recycled slot under quantize_kv= must still match a fresh engine
+    bit-for-bit (and poison on the scales leaf keeps stale reads loud)."""
+    from repro.configs import base as C
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+
+    cfg = C.get_config("gemma2-27b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ra = Request([3, 1, 4], max_new_tokens=5, seed=7)
+    rb = Request([2, 7, 2], max_new_tokens=5, seed=9)
+
+    eng = Engine(cfg, None, params, cache_len=32, batch_size=1,
+                 temperature=0.7, top_k=8, poison_on_evict=True,
+                 quantize_kv=mode)
+    out_both = eng.generate([ra, rb])          # rb recycles ra's slot
+
+    fresh = Engine(cfg, None, params, cache_len=32, batch_size=1,
+                   temperature=0.7, top_k=8, quantize_kv=mode)
     out_fresh = fresh.generate([rb])
     assert out_both[1] == out_fresh[0]
     assert not np.isnan(eng.last_scores).any()

@@ -260,6 +260,135 @@ def test_batched_linear_recurrence_conformance(backend):
 
 
 # ---------------------------------------------------------------------------
+# Quantized matrix operand: the same matvec/vecmat routes, a Quantized
+# (values, scales) pytree in the matrix slot, dequantize-in-kernel.  Two
+# oracles per case: a *tight* check against the dense reference on the
+# decoded matrix (the kernel must reproduce its own codec exactly, up to
+# f32 association order), and an *error-bounded* check against the dense
+# f32 reference on the original matrix, using the analytic per-output
+# bound from kernels/ref.py -- the codec's accuracy contract.
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = ["int8", "fp8_e4m3", "fp8_e5m2"]
+_Q_BLOCK = 32
+
+
+def _q_shapes():
+    """Flat (n, p): quantization-block boundary +-1 on the row axis.
+
+    n = 0 is excluded: the flat matvec contract requires a non-empty
+    reduction axis (the @batched routes own the zero-extent guard)."""
+    b = _Q_BLOCK
+    return [(1, 1), (b - 1, 5), (b, 2), (b + 1, 7), (40, 130)]
+
+
+def _q_batched_shapes():
+    b = _Q_BLOCK
+    return [(0, 5, 4), (2, 0, 4), (1, 1, 1), (2, b - 1, 5), (1, b, 2),
+            (2, b + 1, 7), (1, 40, 130)]
+
+
+def _assert_within_bound(got, dense, bound, err):
+    gap = np.abs(np.asarray(got) - np.asarray(dense))
+    limit = np.asarray(bound) + 1e-5
+    assert np.all(gap <= limit), (
+        f"{err}: quantization error {gap.max():.3e} exceeds analytic "
+        f"bound {limit.max():.3e}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantized_matvec_conformance(mode, backend):
+    nprng = np.random.default_rng(_seed("qmv", mode, backend))
+    for n, p in _q_shapes():
+        A = jnp.asarray(nprng.normal(size=(n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(n,)) * 0.2, jnp.float32)
+        q = alg.quantize(A, mode=mode, block=_Q_BLOCK)
+        got = forge.matvec(lambda xv, av: xv * av, alg.ADD, q, x,
+                           backend=backend)
+        want = ref.ref_matvec(lambda xv, av: xv * av, alg.ADD,
+                              q.dequantize(), x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"quantized matvec {mode} {n}x{p}")
+        dense = ref.ref_matvec(lambda xv, av: xv * av, alg.ADD, A, x)
+        _assert_within_bound(got, dense, ref.ref_quantized_matvec_bound(q, x),
+                             f"quantized matvec {mode} {n}x{p}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantized_vecmat_conformance(mode, backend):
+    nprng = np.random.default_rng(_seed("qvm", mode, backend))
+    for n, p in _q_shapes():
+        A = jnp.asarray(nprng.normal(size=(n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(p,)) * 0.2, jnp.float32)
+        q = alg.quantize(A, mode=mode, block=_Q_BLOCK)
+        got = forge.vecmat(lambda av, xv: av * xv, alg.ADD, q, x,
+                           backend=backend)
+        want = ref.ref_vecmat(lambda av, xv: av * xv, alg.ADD,
+                              q.dequantize(), x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"quantized vecmat {mode} {n}x{p}")
+        dense = ref.ref_vecmat(lambda av, xv: av * xv, alg.ADD, A, x)
+        _assert_within_bound(got, dense, ref.ref_quantized_vecmat_bound(q, x),
+                             f"quantized vecmat {mode} {n}x{p}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", ["int8", "fp8_e4m3"])
+def test_quantized_batched_matvec_conformance(mode, backend):
+    nprng = np.random.default_rng(_seed("qbmv", mode, backend))
+    for B, n, p in _q_batched_shapes():
+        A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(B, n)) * 0.2, jnp.float32)
+        q = alg.quantize(A, mode=mode, block=_Q_BLOCK)
+        got = forge.matvec(lambda xv, av: xv * av, alg.ADD, q, x,
+                           layout=Batched(), backend=backend)
+        want = ref.ref_batched_matvec(lambda xv, av: xv * av, alg.ADD,
+                                      q.dequantize(), x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"quantized batched_matvec {mode} {B}x{n}x{p}")
+        dense = ref.ref_batched_matvec(lambda xv, av: xv * av, alg.ADD, A, x)
+        _assert_within_bound(got, dense, ref.ref_quantized_matvec_bound(q, x),
+                             f"quantized batched_matvec {mode} {B}x{n}x{p}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", ["int8", "fp8_e4m3"])
+def test_quantized_batched_vecmat_conformance(mode, backend):
+    nprng = np.random.default_rng(_seed("qbvm", mode, backend))
+    for B, n, p in _q_batched_shapes():
+        A = jnp.asarray(nprng.normal(size=(B, n, p)) * 0.2, jnp.float32)
+        x = jnp.asarray(nprng.normal(size=(B, p)) * 0.2, jnp.float32)
+        q = alg.quantize(A, mode=mode, block=_Q_BLOCK)
+        got = forge.vecmat(lambda av, xv: av * xv, alg.ADD, q, x,
+                           layout=Batched(), backend=backend)
+        want = ref.ref_batched_vecmat(lambda av, xv: av * xv, alg.ADD,
+                                      q.dequantize(), x)
+        assert_trees_close(got, want, rtol=1e-3, atol=1e-3,
+                           err=f"quantized batched_vecmat {mode} {B}x{n}x{p}")
+        dense = ref.ref_batched_vecmat(lambda av, xv: av * xv, alg.ADD, A, x)
+        _assert_within_bound(got, dense, ref.ref_quantized_vecmat_bound(q, x),
+                             f"quantized batched_vecmat {mode} {B}x{n}x{p}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quantized_matvec_arbitrary_operator(backend):
+    """The quantized operand composes with non-arithmetic algebra: tropical
+    max-plus matvec on a decoded int8 matrix (tight oracle only -- the
+    additive error-bound model applies to sum-of-products reductions)."""
+    nprng = np.random.default_rng(_seed("qtrop", backend))
+    A = jnp.asarray(nprng.normal(size=(40, 13)), jnp.float32)
+    x = jnp.asarray(nprng.normal(size=(40,)), jnp.float32)
+    q = alg.quantize(A, mode="int8", block=_Q_BLOCK)
+    got = forge.matvec(lambda xv, av: xv + av, alg.MAX, q, x,
+                       backend=backend)
+    want = ref.ref_matvec(lambda xv, av: xv + av, alg.MAX, q.dequantize(), x)
+    assert_trees_close(got, want, rtol=1e-4, atol=1e-4,
+                       err="quantized tropical matvec")
+
+
+# ---------------------------------------------------------------------------
 # Cross-backend agreement: interpret and xla must agree with each other,
 # not merely each be close to the oracle.
 # ---------------------------------------------------------------------------

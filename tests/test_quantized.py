@@ -1,0 +1,82 @@
+"""Quantized codec unit tests (int8 / emulated fp8 blockwise matrices,
+per-vector KV quantization) -- the algebra-level contracts the kernel
+conformance suite (tests/test_conformance.py) builds on.  Deliberately
+hypothesis-free so the codecs stay tested where that dependency is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as alg
+
+
+# ---------------------------------------------------------------------------
+# Quantized codecs (int8 / emulated fp8): the algebra-level contracts the
+# kernel conformance suite builds on.
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = ["int8", "fp8_e4m3", "fp8_e5m2"]
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantize_within_error_bound(mode):
+    """|dequantize(quantize(A)) - A| <= error_bound(), elementwise, across
+    block-boundary shapes, batch ranks, and wildly mixed magnitudes."""
+    rng = np.random.default_rng(5)
+    for shape in [(1, 1), (31, 3), (32, 4), (33, 5), (2, 40, 7)]:
+        A = jnp.asarray(rng.normal(size=shape) *
+                        rng.uniform(0.01, 10.0, shape), jnp.float32)
+        q = alg.quantize(A, mode=mode, block=32)
+        assert q.shape == A.shape
+        assert q.qtag == f"{mode}q32"
+        err = np.abs(np.asarray(q.dequantize()) - np.asarray(A))
+        bound = np.asarray(q.error_bound())
+        assert (err <= bound + 1e-7).all(), (
+            f"{mode} {shape}: max excess {float((err - bound).max()):.3e}")
+
+
+@pytest.mark.parametrize("mode", ["fp8_e4m3", "fp8_e5m2"])
+def test_fp8_codes_are_canonical(mode):
+    """encode(decode(code)) == code for every code quantize emits: the
+    encoder picks the nearest representable, so re-encoding a decoded
+    value must be the identity (no drift under repeated round-trips)."""
+    rng = np.random.default_rng(11)
+    A = jnp.asarray(rng.normal(size=(64, 5)) * 3.0, jnp.float32)
+    q = alg.quantize(A, mode=mode, block=16)
+    re = alg.fp8_encode(alg.fp8_decode(q.values, mode), mode)
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(q.values))
+
+
+def test_quantized_pytree_static_aux_survives_jit():
+    A = jnp.asarray(np.arange(24, dtype=np.float32).reshape(8, 3))
+    q = alg.quantize(A, mode="fp8_e5m2", block=4)
+    leaves, treedef = jax.tree.flatten(q)
+    q2 = jax.tree.unflatten(treedef, leaves)
+    assert (q2.mode, q2.block) == ("fp8_e5m2", 4)
+    got = jax.jit(lambda t: t.dequantize())(q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(q.dequantize()))
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_kv_quant_roundtrip_and_pytree(mode):
+    """Per-vector KV codec: scales are per trailing vector, the round-trip
+    error obeys the mode's half-ulp bound, and the (values, scales) node
+    survives tree flatten/unflatten with its static mode."""
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(2, 6, 3, 8)) * 2.0, jnp.float32)
+    kv = alg.quantize_kv(x, mode)
+    assert kv.shape == x.shape
+    err = np.abs(np.asarray(kv.dequantize()) - np.asarray(x))
+    scales = np.asarray(kv.scales)
+    if mode == "int8":
+        bound = 0.5 * scales
+    else:
+        man = alg.FP8_FORMATS[mode][1]
+        # decoded magnitude <= qmax => relative half-ulp of 2**-man, plus
+        # the subnormal absolute floor, all scaled back up.
+        bound = (np.abs(np.asarray(x)) * (2.0 ** -man)) + scales
+    assert (err <= bound + 1e-6).all()
+    leaves, treedef = jax.tree.flatten(kv)
+    kv2 = jax.tree.unflatten(treedef, leaves)
+    assert kv2.mode == mode and len(leaves) == 2

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import base as C
 from repro.models import lm
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, Request, sample_tokens
 
 
 @pytest.fixture(scope="module")
@@ -89,6 +89,62 @@ def test_tiny_topp_equals_greedy(setup):
     topp = Engine(cfg, None, params, cache_len=64, batch_size=2,
                   temperature=0.9, top_p=1e-6, seed=7).generate(reqs)
     assert greedy == topp
+
+
+# ---------------------------------------------------------------------------
+# Nucleus (top-p) semantics conformance: sample_tokens' docstring pins the
+# cutoff to the softmax *renormalized over the retained candidates*; these
+# tests pin the documented consequences directly against the sampler, so an
+# alternative logits path (quantized decode, a new kernel) that silently
+# switched to full-vocab-mass semantics would fail here, not in production.
+# ---------------------------------------------------------------------------
+
+
+def _sample_draws(logits_row, *, top_k, top_p, n=256, temperature=1.0):
+    """n independent draws from one logits row (distinct per-row seeds)."""
+    logits = jnp.tile(jnp.asarray(logits_row, jnp.float32)[None, :], (n, 1))
+    toks = sample_tokens(
+        jax.random.PRNGKey(0), logits, jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros(n, jnp.int32), temperature=temperature, top_k=top_k,
+        top_p=top_p, top_p_candidates=64)
+    return np.asarray(toks)
+
+
+def test_nucleus_all_candidates_survive_on_renormalized_mass():
+    """8 equal-probability candidates, top_p=0.95: the renormalized
+    exclusive prefix tops out at 7/8 < 0.95, so ALL candidates stay in the
+    nucleus -- even though the candidates carry only ~5% of the *full-vocab*
+    probability mass here.  Full-vocab-mass semantics would keep every
+    below-cutoff token instead; the renormalized contract is what the
+    docstring promises."""
+    V = 1024
+    logits = np.full(V, 3.0, np.float32)
+    cands = np.arange(0, 80, 10)               # 8 spread-out candidate ids
+    logits[cands] = 5.0
+    draws = _sample_draws(logits, top_k=8, top_p=0.95)
+    assert set(draws) == set(cands.tolist())   # all 8 survive & get sampled
+
+
+def test_nucleus_truncates_on_renormalized_prefix():
+    """Candidate renormalized masses ~[0.7, 0.1, 0.1, 0.1] with top_p=0.75:
+    the exclusive prefix is [0, 0.7, 0.8, 0.9], so exactly the first two
+    candidates survive the cum < top_p filter -- the third token (prefix
+    0.8) must never be sampled."""
+    V = 64
+    logits = np.full(V, -30.0, np.float32)
+    logits[7] = np.log(0.7)
+    logits[[13, 21, 34]] = np.log(0.1)
+    draws = _sample_draws(logits, top_k=4, top_p=0.75)
+    assert set(draws) == {7, 13}
+
+
+def test_nucleus_first_candidate_always_survives():
+    """top_p below any achievable prefix mass still keeps the argmax: its
+    exclusive prefix mass is exactly 0 < top_p."""
+    rng = np.random.default_rng(3)
+    logits = rng.normal(size=128).astype(np.float32)
+    draws = _sample_draws(logits, top_k=8, top_p=1e-6)
+    assert (draws == int(np.argmax(logits))).all()
 
 
 @pytest.fixture

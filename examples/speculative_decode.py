@@ -1,0 +1,84 @@
+"""Speculative decoding demo: draft-and-verify on the serving engine.
+
+    PYTHONPATH=src python examples/speculative_decode.py [--k 4]
+
+A small draft model proposes ``k`` tokens per round; the target verifies
+them in one combined scan and accepts the longest exact-match prefix.  The
+acceptance rule is *lossless*: the emitted stream is bit-identical to the
+vanilla engine at the same seeds -- speculation only changes how many
+target-forward rounds the stream costs.  The demo runs the same requests
+through a vanilla engine and a speculative engine (twice: once with the
+target itself as a "perfect" draft, once with an independently initialized
+draft), checks the streams match, and prints the acceptance telemetry.
+
+Uses reduced (smoke) configs so it runs on any host; on real hardware the
+draft would be a genuinely smaller architecture sharing the tokenizer.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import base as C
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.strategies import Speculative
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b", choices=C.list_archs())
+    ap.add_argument("--k", type=int, default=4,
+                    help="draft proposals per round")
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default; a perfect draft then accepts "
+                         "nearly everything). Nonzero temperatures stay "
+                         "bit-identical too, but exact-match acceptance is "
+                         "rare because draft and target sample from "
+                         "different key streams.")
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch, smoke=True)
+    print(f"[spec] arch={args.arch} (reduced config: {cfg.n_layers}L "
+          f"d={cfg.d_model}), k={args.k}")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    draft_params = lm.init_params(jax.random.PRNGKey(7), cfg)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
+                    max_new_tokens=args.max_new, seed=i)
+            for i, n in enumerate(rng.integers(3, 12, size=4))]
+    kw = dict(cache_len=128, batch_size=4, temperature=args.temperature,
+              top_k=40, seed=0)
+
+    van = Engine(cfg, None, params, **kw)
+    t0 = time.time()
+    base = van.generate(reqs)
+    print(f"[spec] vanilla: {van.last_stats['decode_steps']} loop rounds "
+          f"({time.time() - t0:.1f}s incl. compile)")
+
+    for label, dp in (("perfect draft (target params)", params),
+                      ("independent draft", draft_params)):
+        eng = Engine(cfg, None, params, **kw,
+                     strategy=Speculative(cfg, dp, k=args.k))
+        t0 = time.time()
+        outs = eng.generate(reqs)
+        st = eng.last_stats
+        match = "bit-identical" if outs == base else "MISMATCH (bug!)"
+        print(f"[spec] {label}: {st['spec_rounds']} rounds, "
+              f"acceptance {st['spec_acceptance_rate']:.2f} "
+              f"({st['spec_accepted']}/{st['spec_proposed']} draft tokens), "
+              f"streams {match} ({time.time() - t0:.1f}s incl. compile)")
+        assert outs == base
+
+    print("[spec] sample stream:", base[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

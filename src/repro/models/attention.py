@@ -150,8 +150,14 @@ def _project_qkv(params, cfg, x, positions, dtype, is_local=True):
 
 
 def gqa_forward(params, cfg, x, positions, *, is_local, causal=True,
-                return_cache_len=0):
-    """Full-sequence forward.  positions: (S,).  Returns (y, cache|None)."""
+                return_cache_len=0, valid_len=None):
+    """Full-sequence forward.  positions: (S,).  Returns (y, cache|None).
+
+    ``valid_len``: valid leading length of ``x`` (prompt bucketing).  The
+    attention outputs at valid positions are already exact under right-
+    padding -- the causal mask keeps every pad key (position >= valid_len)
+    out of every valid query's window -- so only cache construction uses it.
+    """
     dtype = x.dtype
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, cfg, x, positions, dtype, is_local)
@@ -163,22 +169,45 @@ def gqa_forward(params, cfg, x, positions, *, is_local, causal=True,
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
     cache = None
     if return_cache_len:
-        cache = _build_cache(k, v, return_cache_len, S, is_local, cfg)
+        cache = _build_cache(k, v, return_cache_len, S, is_local, cfg,
+                             valid_len=valid_len)
     return y, cache
 
 
-def _build_cache(k, v, cache_len, seq_len, is_local, cfg):
-    """Build a decode cache from prefill K/V (ring layout for local)."""
+def _build_cache(k, v, cache_len, seq_len, is_local, cfg, valid_len=None):
+    """Build a decode cache from prefill K/V (ring layout for local).
+
+    ``valid_len``: valid leading K/V length (scalar, may be traced) under
+    prompt bucketing.  Global caches need no masking -- pad K/V lands at
+    slots >= valid_len, and decode both writes each slot before its
+    ``slot <= pos`` validity window reaches it, so garbage is overwritten
+    before it is ever readable.  Local rings DO need it: the ring must hold
+    the last ``W`` *valid* positions, not the last ``W`` rows of the padded
+    sequence.
+    """
     B, S, K, hd = k.shape
     assert is_local or cache_len >= S, (
         f"global-attention cache_len={cache_len} < prefill length {S}")
     if is_local:
         W = min(cache_len, cfg.local_window)
-        # Ring: slot = t % W for the last W positions.
-        last = k[:, max(S - W, 0):]
-        lastv = v[:, max(S - W, 0):]
-        t0 = max(S - W, 0)
-        slots = (t0 + jnp.arange(last.shape[1])) % W
+        if valid_len is None:
+            # Ring: slot = t % W for the last W positions.
+            last = k[:, max(S - W, 0):]
+            lastv = v[:, max(S - W, 0):]
+            t0 = max(S - W, 0)
+            slots = (t0 + jnp.arange(last.shape[1])) % W
+        else:
+            # Last W valid positions end at a traced boundary: left-pad W
+            # zero rows so padded row (t + W) is original row t, then slice
+            # rows [valid_len - W, valid_len).  Rows with t < 0 are the
+            # left-pad zeros and write zeros into slots the exact-length
+            # path leaves at init (also zeros) -- bit-identical cache.
+            kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+            last = jax.lax.dynamic_slice_in_dim(kp, valid_len, W, axis=1)
+            lastv = jax.lax.dynamic_slice_in_dim(vp, valid_len, W, axis=1)
+            t = valid_len - W + jnp.arange(W)
+            slots = jnp.mod(t, W)
         kc = jnp.zeros((B, W, K, hd), k.dtype).at[:, slots].set(last)
         vc = jnp.zeros((B, W, K, hd), v.dtype).at[:, slots].set(lastv)
         return {"k": kc, "v": vc}

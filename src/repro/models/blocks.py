@@ -69,8 +69,15 @@ def init_block(key, kind, cfg, dtype=jnp.float32):
 
 
 def _mixer_apply(params, kind, cfg, x, positions, *, mode, cache, pos,
-                 enc_out, cache_len):
-    """Dispatch the sequence mixer.  Returns (y, new_cache)."""
+                 enc_out, cache_len, valid_len=None):
+    """Dispatch the sequence mixer.  Returns (y, new_cache).
+
+    ``valid_len``: (prefill) valid leading length of ``x`` under prompt
+    bucketing -- attention layers snapshot their caches at it; recurrent
+    layers freeze/neutralize their state past it.  Causality already keeps
+    right-pads out of every valid position's *output*, so only state
+    construction needs it.
+    """
     is_local = kind == "attn_local"
     if kind in _ATTN_KINDS:
         causal = kind != "enc_attn"
@@ -80,10 +87,14 @@ def _mixer_apply(params, kind, cfg, x, positions, *, mode, cache, pos,
         return A.gqa_forward(
             params["attn"], cfg, x, positions, is_local=is_local,
             causal=causal,
-            return_cache_len=cache_len if mode == "prefill" else 0)
+            return_cache_len=cache_len if mode == "prefill" else 0,
+            valid_len=valid_len)
     if kind.startswith("mla"):
         if mode == "decode":
             return A.mla_decode(params["attn"], cfg, x, cache, pos)
+        # MLA caches are written at [0, S) and decode masks slots > pos, so
+        # right-pad garbage is overwritten before it ever becomes readable
+        # -- the padded cache is already exact, no valid_len plumbing.
         return A.mla_forward(
             params["attn"], cfg, x, positions,
             return_cache_len=cache_len if mode == "prefill" else 0)
@@ -91,22 +102,26 @@ def _mixer_apply(params, kind, cfg, x, positions, *, mode, cache, pos,
         if mode == "decode":
             return R.rglru_decode(params["mixer"], cfg, x, cache)
         return R.rglru_forward(params["mixer"], cfg, x,
-                               return_cache=mode == "prefill")
+                               return_cache=mode == "prefill",
+                               valid_len=valid_len)
     if kind == "mlstm":
         if mode == "decode":
             return R.mlstm_decode(params["mixer"], cfg, x, cache)
         return R.mlstm_forward(params["mixer"], cfg, x,
-                               return_cache=mode == "prefill")
+                               return_cache=mode == "prefill",
+                               valid_len=valid_len)
     if kind == "slstm":
         if mode == "decode":
             return R.slstm_decode(params["mixer"], cfg, x, cache)
         return R.slstm_forward(params["mixer"], cfg, x,
-                               return_cache=mode == "prefill")
+                               return_cache=mode == "prefill",
+                               valid_len=valid_len)
     raise ValueError(kind)
 
 
 def block_forward(params, kind, cfg, x, positions, *, mode="train",
-                  cache=None, pos=None, enc_out=None, cache_len=0):
+                  cache=None, pos=None, enc_out=None, cache_len=0,
+                  valid_len=None):
     """Returns (x, new_cache, aux)."""
     aux = dict(ZERO_AUX)
     x = L.shard(x, "batch", "seq_sp", None)
@@ -116,7 +131,8 @@ def block_forward(params, kind, cfg, x, positions, *, mode="train",
         self_cache = cache["self"] if mode == "decode" else None
         h, new_self = _mixer_apply(
             params, "attn_global", cfg, h, positions, mode=mode,
-            cache=self_cache, pos=pos, enc_out=None, cache_len=cache_len)
+            cache=self_cache, pos=pos, enc_out=None, cache_len=cache_len,
+            valid_len=valid_len)
         x = x + h
         hc = L.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
         if mode == "decode":
@@ -133,7 +149,7 @@ def block_forward(params, kind, cfg, x, positions, *, mode="train",
         h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
         h, new_cache = _mixer_apply(
             params, kind, cfg, h, positions, mode=mode, cache=cache, pos=pos,
-            enc_out=enc_out, cache_len=cache_len)
+            enc_out=enc_out, cache_len=cache_len, valid_len=valid_len)
         if cfg.post_norm:
             h = L.rmsnorm(params["post_norm1"], h, cfg.norm_eps)
         x = x + h

@@ -67,8 +67,15 @@ def _init_stack(key, spec, cfg, dtype):
 
 
 def _run_stack(params, spec, cfg, h, positions, *, mode, caches=None,
-               pos=None, enc_out=None, cache_len=0, remat="full"):
-    """Returns (h, new_caches, aux)."""
+               pos=None, enc_out=None, cache_len=0, remat="full",
+               valid_len=None):
+    """Returns (h, new_caches, aux).
+
+    ``valid_len``: (prefill only) number of valid leading positions of ``h``
+    -- the rest is right-padding from prompt-length bucketing.  Threaded to
+    every block so cache construction snapshots the state *at* ``valid_len``
+    instead of at the padded end (see serving engine ``prefill_buckets``).
+    """
     prefix, unit, n_units, suffix = spec
     aux = dict(BK.ZERO_AUX)
     new_caches = {"prefix": [], "units": None, "suffix": []}
@@ -80,7 +87,8 @@ def _run_stack(params, spec, cfg, h, positions, *, mode, caches=None,
         c = caches["prefix"][i] if mode == "decode" else None
         h, nc, ax = BK.block_forward(
             params["prefix"][i], kind, cfg, h, positions, mode=mode, cache=c,
-            pos=pos, enc_out=enc_out, cache_len=cache_len)
+            pos=pos, enc_out=enc_out, cache_len=cache_len,
+            valid_len=valid_len)
         aux = acc(aux, ax)
         new_caches["prefix"].append(nc)
 
@@ -96,7 +104,8 @@ def _run_stack(params, spec, cfg, h, positions, *, mode, caches=None,
                 cj = uc[j] if mode == "decode" else None
                 hh, nc, ax = BK.block_forward(
                     up[j], kind, cfg, hh, positions, mode=mode, cache=cj,
-                    pos=pos, enc_out=enc_out, cache_len=cache_len)
+                    pos=pos, enc_out=enc_out, cache_len=cache_len,
+                    valid_len=valid_len)
                 aux_c = acc(aux_c, ax)
                 ncs.append(nc)
             ys = tuple(ncs) if mode != "train" else None
@@ -119,7 +128,8 @@ def _run_stack(params, spec, cfg, h, positions, *, mode, caches=None,
         c = caches["suffix"][i] if mode == "decode" else None
         h, nc, ax = BK.block_forward(
             params["suffix"][i], kind, cfg, h, positions, mode=mode, cache=c,
-            pos=pos, enc_out=enc_out, cache_len=cache_len)
+            pos=pos, enc_out=enc_out, cache_len=cache_len,
+            valid_len=valid_len)
         aux = acc(aux, ax)
         new_caches["suffix"].append(nc)
 
@@ -262,8 +272,16 @@ def _mtp_loss(params, cfg, h, tokens, labels, positions):
 
 
 def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
-            vision_embeds=None):
+            vision_embeds=None, valid_len=None):
     """Full-sequence forward building decode caches.
+
+    ``valid_len``: number of valid leading *token* positions (scalar; may be
+    traced) when ``tokens`` is right-padded to a bucket length -- the caches
+    and returned logits are exactly those of a ``valid_len``-length prefill
+    (causality keeps the pads out of every valid position's state; cache
+    snapshots and the logit read move to ``valid_len``).  None = the whole
+    sequence is valid (the historical exact-length path, byte-identical
+    lowering).
 
     Returns (last_logits (B, vocab), caches).
     """
@@ -271,10 +289,13 @@ def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
     if cfg.is_encdec:
         enc_out = _encode(params, cfg, src_embeds)
     h, positions, n_prefix = _embed_inputs(params, cfg, tokens, vision_embeds)
+    vl = None if valid_len is None else valid_len + n_prefix
     h, caches, _ = _run_stack(params["decoder"], _dec_spec(cfg), cfg, h,
                               positions, mode="prefill", enc_out=enc_out,
-                              cache_len=cache_len)
-    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+                              cache_len=cache_len, valid_len=vl)
+    h_last = (h[:, -1:] if vl is None
+              else jax.lax.dynamic_slice_in_dim(h, vl - 1, 1, axis=1))
+    h = L.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
     logits = L.unembed(params["embed"], h, cfg.final_softcap)
     return logits[:, 0], caches
 

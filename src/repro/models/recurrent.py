@@ -141,8 +141,14 @@ def _rglru_gates(params, u):
     return a, i, mult
 
 
-def rglru_forward(params, cfg, x, *, return_cache=False):
-    """x: (B, T, D) -> (y, cache|None).  The scan primitive carries h."""
+def rglru_forward(params, cfg, x, *, return_cache=False, valid_len=None):
+    """x: (B, T, D) -> (y, cache|None).  The scan primitive carries h.
+
+    ``valid_len``: valid leading length of ``x`` (prompt bucketing).  The
+    recurrence runs over the whole padded sequence -- outputs at valid
+    positions only depend on earlier positions, so they are exact -- and
+    the cache snapshots the state *at* ``valid_len`` instead of at ``T``.
+    """
     dtype = x.dtype
     u_pre = jnp.einsum("btd,dw->btw", x, params["wx"].astype(dtype))
     gate_branch = jnp.einsum("btd,dw->btw", x, params["wy"].astype(dtype))
@@ -156,14 +162,30 @@ def rglru_forward(params, cfg, x, *, return_cache=False):
                    params["wo"].astype(dtype))
     cache = None
     if return_cache:
-        cache = {"h": h[:, -1].astype(jnp.float32),
-                 "conv": _conv_tail(cfg, u_pre)}
+        if valid_len is None:
+            h_last = h[:, -1]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(
+                h, valid_len - 1, 1, axis=1)[:, 0]
+        cache = {"h": h_last.astype(jnp.float32),
+                 "conv": _conv_tail(cfg, u_pre, valid_len)}
     return y, cache
 
 
-def _conv_tail(cfg, u_pre):
+def _conv_tail(cfg, u_pre, valid_len=None):
+    """Last ``conv_width - 1`` inputs ending at ``valid_len`` (or ``T``).
+
+    With a traced ``valid_len`` the slice start is dynamic: left-pad
+    ``W - 1`` zero rows so padded row ``t + W - 1`` is original row ``t``,
+    then slice ``W - 1`` rows starting at ``valid_len``.  Short prompts
+    (``valid_len < W - 1``) pick up the left-pad zeros, matching the static
+    path's explicit zero-padding.
+    """
     W = cfg.conv_width
     B, T, w = u_pre.shape
+    if valid_len is not None:
+        padded = jnp.pad(u_pre, ((0, 0), (W - 1, 0), (0, 0)))
+        return jax.lax.dynamic_slice_in_dim(padded, valid_len, W - 1, axis=1)
     tail = u_pre[:, max(T - (W - 1), 0):]
     if tail.shape[1] < W - 1:
         tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
@@ -345,8 +367,15 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
     return h, (Cf, nf)
 
 
-def mlstm_forward(params, cfg, x, *, return_cache=False):
-    """x: (B, T, D) -> (y, cache|None)."""
+def mlstm_forward(params, cfg, x, *, return_cache=False, valid_len=None):
+    """x: (B, T, D) -> (y, cache|None).
+
+    ``valid_len``: valid leading length under prompt bucketing.  Reuses the
+    chunk-padding neutral-gate trick with the effective length: positions at
+    or past ``valid_len`` get ``i' = 0`` / ``f' = 1``, so the (C, n) state
+    after the full padded scan equals the state after ``valid_len`` real
+    steps, and the cached stabilizer/conv tail are sliced at ``valid_len``.
+    """
     dtype = x.dtype
     B, T_in, D = x.shape
     H = cfg.n_heads
@@ -374,8 +403,9 @@ def mlstm_forward(params, cfg, x, *, return_cache=False):
     li = jnp.einsum("btd,dh->bth", xf, params["w_igate"]) + params["b_igate"]
     lf = jax.nn.log_sigmoid(
         jnp.einsum("btd,dh->bth", xf, params["w_fgate"]) + params["b_fgate"])
-    if pad:
-        tmask = (jnp.arange(T) < T_in)[None, :, None]
+    eff_len = T_in if valid_len is None else valid_len
+    if pad or valid_len is not None:
+        tmask = (jnp.arange(T) < eff_len)[None, :, None]
         li = jnp.where(tmask, li, -1e30)   # i' = 0: pads never write state
         lf = jnp.where(tmask, lf, 0.0)     # f' = 1: pads never decay state
     m = _mlstm_stabilizer(lf, li)                     # core.scan (MAXPLUS)
@@ -396,8 +426,13 @@ def mlstm_forward(params, cfg, x, *, return_cache=False):
     cache = None
     if return_cache:
         Cf, nf = state
-        cache = {"C": Cf, "n": nf, "m": m[:, T_in - 1],
-                 "conv": _conv_tail(cfg, u[:, :T_in])}
+        if valid_len is None:
+            m_last = m[:, T_in - 1]
+        else:
+            m_last = jax.lax.dynamic_slice_in_dim(
+                m, valid_len - 1, 1, axis=1)[:, 0]
+        cache = {"C": Cf, "n": nf, "m": m_last,
+                 "conv": _conv_tail(cfg, u[:, :T_in], valid_len)}
     return y, cache
 
 
@@ -493,18 +528,34 @@ def _slstm_cell(params, cfg, xg, carry):
     return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
 
 
-def slstm_forward(params, cfg, x, *, return_cache=False):
+def slstm_forward(params, cfg, x, *, return_cache=False, valid_len=None):
+    """``valid_len``: freeze the carry past it (prompt bucketing) -- the
+    scan still runs ``T`` steps, but steps at or beyond ``valid_len`` keep
+    the previous state, so the returned cache is the state after exactly
+    ``valid_len`` real steps.  The ``None`` path is byte-identical to the
+    unmasked scan."""
     dtype = x.dtype
     B, T, D = x.shape
     xg = jnp.einsum("btd,dgk->btgk", x, params["w_in"].astype(dtype))
 
-    def step(carry, xt):
-        new = _slstm_cell(params, cfg, xt, carry)
-        return new, new["h"]
-
     carry0 = init_slstm_cache(cfg, B)
     carry0.pop("conv", None)
-    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(xg, 1, 0))
+    if valid_len is None:
+        def step(carry, xt):
+            new = _slstm_cell(params, cfg, xt, carry)
+            return new, new["h"]
+
+        carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(xg, 1, 0))
+    else:
+        def step(carry, inp):
+            xt, t = inp
+            new = _slstm_cell(params, cfg, xt, carry)
+            new = jax.tree.map(
+                lambda a, b: jnp.where(t < valid_len, a, b), new, carry)
+            return new, new["h"]
+
+        carry, hs = jax.lax.scan(
+            step, carry0, (jnp.moveaxis(xg, 1, 0), jnp.arange(T)))
     h = jnp.moveaxis(hs, 0, 1).astype(dtype)                   # (B, T, D)
     y = jnp.einsum("btd,de->bte", h, params["w_out"].astype(dtype))
     y = y + L.mlp(params["ffn"], y, "gelu")

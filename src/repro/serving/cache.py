@@ -59,6 +59,47 @@ def scatter_slot(live, single, slot):
     return out
 
 
+def select_slots(mask, new, old):
+    """Per-slot select between two full-batch cache trees.
+
+    ``mask`` is (B,) bool over the slot axis; leaf ``l`` takes ``new``'s
+    slot where ``mask`` holds, ``old``'s otherwise.  This is the cache
+    *rollback* primitive of speculative decoding: the post-verify commit
+    keeps the advanced cache only on slots whose proposal was accepted,
+    broadcast per leaf over the slot axis (axis 0 for prefix/suffix leaves,
+    axis 1 under the ``units`` layer stacking).
+    """
+    def sel(axis):
+        def leaf(nw, od):
+            shape = [1] * nw.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), nw, od)
+        return leaf
+
+    out = dict(old)
+    for part in ("prefix", "suffix"):
+        out[part] = jax.tree.map(sel(0), new[part], old[part])
+    out["units"] = jax.tree.map(sel(1), new["units"], old["units"])
+    return out
+
+
+def gather_slots(live, rows):
+    """Reindex the slot axis: slot ``i`` of the result is slot ``rows[i]``
+    of ``live`` (``rows``: (B,) int32; identity rows leave a slot alone).
+
+    This is beam search's beam-reorder move: after the per-round top-k over
+    beam x vocab candidates, each surviving beam inherits the cache of the
+    beam it extends -- one gather over the slot axis of every leaf.
+    """
+    out = dict(live)
+    for part in ("prefix", "suffix"):
+        out[part] = jax.tree.map(
+            lambda l: jnp.take(l, rows, axis=0), live[part])
+    out["units"] = jax.tree.map(
+        lambda l: jnp.take(l, rows, axis=1), live["units"])
+    return out
+
+
 def poison_slot(live, slot, value=float("nan")):
     """Overwrite every leaf of ``slot``'s state with ``value``.
 

@@ -4,24 +4,36 @@ Two execution paths share one model, one sampler and one RNG discipline:
 
 **Continuous (the serving path, ``generate`` / ``serve``)** -- a host-side
 FIFO scheduler (serving/scheduler.py) admits requests into live batch
-*slots*; each admission prefilles the request alone at its exact prompt
-length and scatters the resulting caches into its slot (serving/cache.py).
-Decode then runs **on device** as one ``lax.while_loop`` whose carry holds
-the caches, per-slot positions, sampled tokens, EOS/length state and the
-output buffers -- between prefill and completion there is *zero* host<->
-device token traffic: the all-done predicate is a ``mapreduce`` over the
-active flags, EOS masking and per-slot length tracking are elementwise over
-the slot axis, and per-request ``seq_logprob`` is a masked
-``mapreduce(layout=Batched())`` over the (slots, steps) log-prob buffer.
-Slots free as requests hit EOS / ``max_new_tokens``; the scheduler recycles
-them for waiting arrivals (open-loop traffic), so the batch is continuously
-full instead of padded to the slowest request.
+*slots*; each admission prefilles the request alone (at its exact prompt
+length, or right-padded to a bucket length with ``prefill_buckets=`` so a
+handful of compiled prefill shapes covers every prompt) and scatters the
+resulting caches into its slot (serving/cache.py).  Decode then runs **on
+device** as one ``lax.while_loop`` whose carry holds the caches, per-slot
+positions, sampled tokens, EOS/length state and the output buffers --
+between prefill and completion there is *zero* host<->device token traffic:
+the all-done predicate is a ``mapreduce`` over the active flags, and every
+per-token decision (sampling, EOS masking, length caps, logprob
+accumulation) happens inside the loop body.  Slots free as requests hit EOS
+/ ``max_new_tokens``; the scheduler recycles them for waiting arrivals
+(open-loop traffic), so the batch is continuously full instead of padded to
+the slowest request.
+
+**What the loop body does is a pluggable policy**: a
+:class:`~repro.serving.strategies.DecodeStrategy` (``Engine(strategy=...)``)
+owns the device state layout, the admission scatter, the loop-body step and
+the drain rendering -- greedy/top-k/top-p is the trivial default
+(``strategies.Vanilla``), and speculative decoding, beam search and
+grammar-constrained sampling ride the same while-loop/scheduler machinery
+(serving/strategies/).  The engine keeps the policy-free parts: scheduler,
+prefill admission, the loop *condition* (any-active / budget /
+stop-on-free), the transfer-guard dispatch seam, and stats.
 
 **Padded (the reference oracle, ``generate_padded``)** -- the original
 fixed-batch host loop: one prefill over the left-padded batch, one decode
 dispatch + host sync per token.  It stays as the differential oracle for the
 parity suite (tests/test_serving_parity.py): same requests, same seeds =>
-identical token streams.
+identical token streams.  It is a *vanilla-sampling* oracle and refuses to
+run under any other strategy.
 
 Cross-path determinism is anchored in counter-based sampling keys: the key
 for request ``r``'s ``j``-th token is ``fold_in(fold_in(base, seed_r), j)``
@@ -29,16 +41,9 @@ for request ``r``'s ``j``-th token is ``fold_in(fold_in(base, seed_r), j)``
 of batch composition, admission order, or which engine runs it.  Batch rows
 never mix inside the model (attention/recurrence are row-local), so a
 request's stream depends only on its own prompt + seed; that is what makes
-continuous-vs-padded parity exact and staggered admission safe.
-
-Sampling: ``temperature > 0`` with ``top_k``/``top_p`` set filters each
-step's logits through ``top_k(..., layout=Segmented(offsets=...))`` over
-the flat per-request vocab stream (uniform V-sized segments -- the batched
-layout in segment clothing; a future ragged/per-request vocab mask is a
-descriptor change, not a new code path) plus a ``scan(..., layout=
-Batched())`` nucleus cutoff over the (B, k) candidate grid.  These run
-*inside* the while-loop body -- the whole decode hot path, sampler
-included, lives in the compiled layer.
+continuous-vs-padded parity exact, staggered admission safe, and exact-match
+speculative verification bit-identical (strategies/speculative.py).  The
+sampler itself lives in serving/sampling.py (re-exported here).
 """
 from __future__ import annotations
 
@@ -52,9 +57,12 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
-from repro.core.layout import Batched, Flat, Segmented
+from repro.core.layout import Flat
 from repro.models import lm
 from repro.serving import cache as CA
+from repro.serving import strategies as ST
+from repro.serving.sampling import (  # noqa: F401  (re-exported API)
+    chosen_logprobs, request_step_keys, sample_tokens)
 from repro.serving.scheduler import Scheduler
 from repro.training import train_step as TS
 
@@ -70,72 +78,6 @@ class Request:
     seed: int | None = None
 
 
-# ---------------------------------------------------------------------------
-# Sampling (shared by both paths; all batched, no per-request host loops)
-# ---------------------------------------------------------------------------
-
-
-def request_step_keys(base_key, seeds, steps):
-    """(B,) per-row keys: fold_in(fold_in(base, seed_b), step_b)."""
-    def fold(s, t):
-        return jax.random.fold_in(jax.random.fold_in(base_key, s), t)
-
-    return jax.vmap(fold)(seeds.astype(jnp.uint32), steps.astype(jnp.uint32))
-
-
-def chosen_logprobs(logits, tok):
-    """log p of each batch row's sampled token under this step's logits."""
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    return jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
-
-
-def sample_tokens(base_key, logits, seeds, steps, *, temperature, top_k,
-                  top_p, top_p_candidates):
-    """Sample one token per batch row.  Returns (B,) int32.
-
-    Greedy when ``temperature <= 0``; otherwise per-row Gumbel-argmax with
-    counter-based keys (see module docstring), filtered through the
-    segmented top-k / batched nucleus-cutoff primitives when configured.
-
-    **Nucleus semantics**: the top-p cutoff is measured on the softmax
-    *renormalized over the k retained candidates* (``top_k``, or
-    ``top_p_candidates`` when only top-p is set), not on the full-vocab
-    distribution.  Consequences this module pins with conformance tests,
-    so alternative logits paths (e.g. quantized decode) cannot silently
-    change them: (a) the first (highest) candidate always survives -- its
-    exclusive prefix mass is 0 < top_p; (b) when the candidates' full-vocab
-    mass is below ``top_p`` the renormalized masses still sum to 1, so the
-    cutoff binds at the same prefix as if the tail mass were redistributed
-    -- in particular every candidate survives iff the renormalized
-    exclusive prefix stays below ``top_p``, regardless of how little
-    full-vocab mass the k candidates carry.
-    """
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    keys = request_step_keys(base_key, seeds, steps)
-    B, V = logits.shape
-    if top_k or top_p < 1.0:
-        k = min(top_k if top_k else top_p_candidates, V)
-        flat = logits.astype(jnp.float32).reshape(-1)
-        offsets = jnp.arange(B + 1, dtype=jnp.int32) * V
-        vals, idx = forge.top_k(flat, k, layout=Segmented(offsets=offsets))
-        scaled = vals / temperature                   # (B, k) descending
-        # Keep the shortest prefix whose mass reaches top_p (the first
-        # candidate always survives: its exclusive prefix mass is 0).  The
-        # (B, k) candidate grid is exactly the batched-scan layout: one
-        # launch scans every request's row, whatever the batch size.
-        probs = jax.nn.softmax(scaled, axis=-1)
-        cum = forge.scan(alg.ADD, probs, inclusive=False, layout=Batched())
-        filtered = jnp.where(cum < top_p, scaled, -jnp.inf)
-        g = jax.vmap(lambda kk: jax.random.gumbel(kk, (k,), jnp.float32))(keys)
-        choice = jnp.argmax(filtered + g, axis=-1)
-        return jnp.take_along_axis(
-            idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
-    g = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(keys)
-    return jnp.argmax(logits.astype(jnp.float32) / temperature + g,
-                      axis=-1).astype(jnp.int32)
-
-
 def _has_global_attn(cfg) -> bool:
     kinds = tuple(cfg.prefix) + tuple(cfg.unit) + tuple(cfg.suffix)
     return any(k not in ("attn_local", "rglru", "mlstm", "slstm")
@@ -147,7 +89,8 @@ class Engine:
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
                  top_p_candidates: int = 64, seed: int = 0,
                  max_new_cap: int | None = None, poison_on_evict: bool = False,
-                 quantize_kv: str | None = None):
+                 quantize_kv: str | None = None, strategy=None,
+                 prefill_buckets=None):
         self.cfg = cfg
         self.mesh = mesh
         self.params = params
@@ -165,6 +108,13 @@ class Engine:
             raise ValueError(
                 f"quantize_kv={quantize_kv!r} not in {alg.QUANT_MODES}")
         self.quantize_kv = quantize_kv
+        self.strategy = ST.resolve_strategy(strategy)
+        if cfg.is_encdec and self.strategy.name != "vanilla":
+            raise NotImplementedError(
+                f"strategy {self.strategy.name!r} requires the continuous "
+                "decode loop; enc-dec archs route through the padded "
+                "vanilla oracle only")
+        self.prefill_buckets = self._resolve_buckets(prefill_buckets)
         self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
             TS.make_prefill_step(cfg, mesh, cache_len) if mesh is not None
@@ -175,6 +125,8 @@ class Engine:
         self._sample = functools.partial(
             sample_tokens, temperature=self.temperature, top_k=self.top_k,
             top_p=self.top_p, top_p_candidates=self.top_p_candidates)
+        self.strategy.bind(self)
+        self._strategy_params = self.strategy.loop_params(self)
         self._admit_fn = jax.jit(self._admit_impl)
         self._loop_fn = {
             stop_on_free: jax.jit(functools.partial(
@@ -183,16 +135,42 @@ class Engine:
         self.last_stats: dict = {}
         self.last_scores = np.zeros((0,), np.float32)
 
+    def _resolve_buckets(self, spec):
+        """Normalize ``prefill_buckets`` to a sorted tuple (or None).
+
+        ``"pow2"`` generates powers of two up to the cache budget; an
+        explicit sequence is validated against it.  Prompts longer than the
+        largest bucket fall back to exact-length prefill.
+        """
+        limit = self.cache_len - self.cfg.num_prefix_embeds
+        if spec is None:
+            return None
+        if spec == "pow2":
+            out, b = [], 8
+            while b < limit:
+                out.append(b)
+                b *= 2
+            out.append(limit)
+            return tuple(out)
+        buckets = sorted({int(b) for b in spec})
+        if not buckets or buckets[0] < 1 or buckets[-1] > limit:
+            raise ValueError(
+                f"prefill_buckets={spec!r} must be nonempty ints in "
+                f"[1, {limit}] (cache_len minus prefix embeds)")
+        return tuple(buckets)
+
     def _plain_prefill(self, params, batch, *, cache_len):
         kwargs = {}
         if self.cfg.is_encdec:
             kwargs["src_embeds"] = batch["src_embeds"]
         if self.cfg.num_prefix_embeds:
             kwargs["vision_embeds"] = batch["vision_embeds"]
+        if "valid_len" in batch:
+            kwargs["valid_len"] = batch["valid_len"]
         return lm.prefill(params, self.cfg, batch["tokens"],
                           cache_len=cache_len, **kwargs)
 
-    def _make_batch(self, toks: np.ndarray) -> dict:
+    def _make_batch(self, toks: np.ndarray, valid_len=None) -> dict:
         cfg = self.cfg
         B, plen = toks.shape
         batch = {"tokens": jnp.asarray(toks)}
@@ -201,33 +179,50 @@ class Engine:
         if cfg.num_prefix_embeds:
             batch["vision_embeds"] = jnp.zeros(
                 (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+        if valid_len is not None:
+            batch["valid_len"] = jnp.asarray(valid_len, jnp.int32)
         return batch
+
+    def _pad_prompt(self, prompt):
+        """Right-pad a prompt to its bucket length.  Returns (toks (1, L)
+        int32, valid_len | None); None = exact-length (no bucketing, or the
+        prompt exceeds the largest bucket)."""
+        plen = len(prompt)
+        if self.prefill_buckets:
+            for b in self.prefill_buckets:
+                if b >= plen:
+                    toks = np.zeros((1, b), np.int32)
+                    toks[0, :plen] = prompt
+                    return toks, (plen if b > plen else None)
+        return np.asarray(prompt, np.int32)[None, :], None
 
     # -----------------------------------------------------------------------
     # Continuous-batching path
     # -----------------------------------------------------------------------
 
-    def _fresh_state(self) -> dict:
-        """Device-resident engine state: caches + per-slot control arrays.
-
-        The cache tree is shaped/dtyped via ``eval_shape`` of the prefill
-        (batched to ``batch_size``) so slot scatters are always exact-dtype
+    def _cache_zeros(self, batch: int):
+        """Zeroed decode-cache tree for ``batch`` slots, shaped/dtyped via
+        ``eval_shape`` of the prefill so slot scatters are always exact-dtype
         -- mixed-precision caches (f32 recurrent states riding bf16 KV) get
-        no silent casts.
-        """
-        B, T = self.batch_size, self.max_new_cap
+        no silent casts."""
         _, cache_shape = jax.eval_shape(
             self._prefill, self.params,
-            self._make_batch(np.zeros((B, 1), np.int32)))
+            self._make_batch(np.zeros((batch, 1), np.int32)))
         if self.quantize_kv is not None:
             # Shape-level transform: the resident tree holds KVQuant
             # (values, scales) nodes for every attention KV leaf.
             cache_shape = jax.eval_shape(
                 functools.partial(CA.quantize_kv_tree, mode=self.quantize_kv),
                 cache_shape)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cache_shape)
+
+    def _base_state(self, *, cache_batch: int | None = None) -> dict:
+        """The standard device-resident state: caches + per-slot control
+        arrays.  Strategies with richer state extend (or replace) this."""
+        B, T = self.batch_size, self.max_new_cap
         return {
-            "caches": jax.tree.map(
-                lambda s: jnp.zeros(s.shape, s.dtype), cache_shape),
+            "caches": self._cache_zeros(cache_batch or B),
             "tok": jnp.zeros((B,), jnp.int32),
             "pos": jnp.zeros((B,), jnp.int32),
             "emitted": jnp.zeros((B,), jnp.int32),
@@ -239,43 +234,30 @@ class Engine:
             "eos": jnp.full((B,), -1, jnp.int32),
         }
 
-    def _admit_impl(self, state, caches1, logits1, slot, seed, max_new, eos,
-                    pos0):
-        """Scatter a prefilled request into ``slot`` + sample its first token
-        -- all on device; the token never visits the host."""
-        T = self.max_new_cap
-        tok1 = self._sample(self._base_key, logits1, seed[None],
-                            jnp.zeros((1,), jnp.int32))[0]
-        lp1 = chosen_logprobs(logits1, tok1[None])[0]
-        st = dict(state)
+    def _fresh_state(self) -> dict:
+        return self.strategy.init_state(self)
+
+    def _admit_impl(self, state, caches1, logits1, extras, slot, seed,
+                    max_new, eos, pos0):
+        """Admission, delegated to the strategy -- all on device; the first
+        token never visits the host."""
         if self.quantize_kv is not None:
             caches1 = CA.quantize_kv_tree(caches1, mode=self.quantize_kv)
-        st["caches"] = CA.scatter_slot(state["caches"], caches1, slot)
-        st["tok"] = state["tok"].at[slot].set(tok1)
-        st["pos"] = state["pos"].at[slot].set(pos0)
-        st["emitted"] = state["emitted"].at[slot].set(1)
-        st["active"] = state["active"].at[slot].set(
-            (tok1 != eos) & (max_new > 1))
-        st["out"] = state["out"].at[slot].set(
-            jnp.zeros((T,), jnp.int32).at[0].set(tok1))
-        st["logps"] = state["logps"].at[slot].set(
-            jnp.zeros((T,), jnp.float32).at[0].set(lp1))
-        st["seeds"] = state["seeds"].at[slot].set(seed)
-        st["max_new"] = state["max_new"].at[slot].set(max_new)
-        st["eos"] = state["eos"].at[slot].set(eos)
-        return st
+        return self.strategy.admit(
+            self, state, caches1, logits1, extras, slot=slot, seed=seed,
+            max_new=max_new, eos=eos, pos0=pos0)
 
-    def _loop_impl(self, params, state, budget, *, stop_on_free):
+    def _loop_impl(self, params, sparams, state, budget, *, stop_on_free):
         """The device-resident decode loop: ONE ``lax.while_loop`` dispatch.
 
         Runs until every live slot is done (EOS or length cap), or until
         ``budget`` steps have executed (the scheduler bounds a dispatch at
         the next arrival event), or -- with ``stop_on_free`` (waiters are
-        queued) -- as soon as any slot frees.  Returns (state, steps_run).
+        queued) -- as soon as any slot frees.  The body is the strategy's
+        ``step``; the condition stays policy-free.  Returns (state,
+        steps_run).
         """
-        B = self.batch_size
         active0 = state["active"]
-        bidx = jnp.arange(B)
 
         def cond(carry):
             st, t = carry
@@ -291,29 +273,7 @@ class Engine:
 
         def body(carry):
             st, t = carry
-            was_active = st["active"]
-            logits, caches = self._decode(
-                params, st["caches"], st["tok"][:, None], st["pos"])
-            nxt = self._sample(self._base_key, logits, st["seeds"],
-                               st["emitted"])
-            lp = chosen_logprobs(logits, nxt)
-            widx = jnp.minimum(st["emitted"], self.max_new_cap - 1)
-            out = st["out"].at[bidx, widx].set(
-                jnp.where(was_active, nxt, st["out"][bidx, widx]))
-            logps = st["logps"].at[bidx, widx].set(
-                jnp.where(was_active, lp, st["logps"][bidx, widx]))
-            emitted = st["emitted"] + was_active
-            hit_eos = was_active & (nxt == st["eos"])
-            hit_cap = emitted >= st["max_new"]
-            new = dict(st)
-            new["caches"] = caches
-            new["tok"] = jnp.where(was_active, nxt, st["tok"])
-            new["pos"] = st["pos"] + was_active
-            new["emitted"] = emitted
-            new["active"] = was_active & ~hit_eos & ~hit_cap
-            new["out"] = out
-            new["logps"] = logps
-            return new, t + 1
+            return self.strategy.step(self, params, sparams, st), t + 1
 
         state, steps = jax.lax.while_loop(
             cond, body, (state, jnp.zeros((), jnp.int32)))
@@ -323,18 +283,8 @@ class Engine:
         """One device-loop dispatch (separate method so tests can wrap it in
         a transfer guard: nothing here may sync tokens to host)."""
         return self._loop_fn[stop_on_free](
-            self.params, state, jnp.asarray(budget, jnp.int32))
-
-    def _seq_logprobs(self, state):
-        """Per-slot sequence scores over the ragged (slots, steps) buffer:
-        one masked ``mapreduce(layout=Batched())`` launch, identity at
-        masked steps -- identical code path at any live-slot count."""
-        T = self.max_new_cap
-        mask = (jnp.arange(T, dtype=jnp.int32)[None, :]
-                < state["emitted"][:, None]).astype(jnp.int32)
-        return forge.mapreduce(
-            lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD,
-            (state["logps"], mask), layout=Batched())
+            self.params, self._strategy_params, state,
+            jnp.asarray(budget, jnp.int32))
 
     def _validate_request(self, r: Request):
         plen = len(r.prompt) + self.cfg.num_prefix_embeds
@@ -358,10 +308,11 @@ class Engine:
 
         ``arrivals``: iterable of ``(arrival_step, Request)`` (or bare
         ``Request``s, all arriving at step 0); the step clock is the decode-
-        step clock -- arrivals between device dispatches are admitted into
-        whatever slots have freed.  Returns the scheduler's completed
-        ``RequestState`` records in submission order (tokens, seq_logprob,
-        submit/admit/finish steps).
+        step clock (one step = one loop iteration; a speculative iteration
+        may emit several tokens) -- arrivals between device dispatches are
+        admitted into whatever slots have freed.  Returns the scheduler's
+        completed ``RequestState`` records in submission order (tokens,
+        seq_logprob, submit/admit/finish steps).
         """
         if self.cfg.is_encdec:
             raise NotImplementedError(
@@ -397,12 +348,13 @@ class Engine:
                     sched.complete(rec.slot, step=now)
                     continue
                 t0 = time.time()
-                toks = np.asarray(r.prompt, np.int32)[None, :]
+                toks, vlen = self._pad_prompt(r.prompt)
                 logits1, caches1 = self._prefill(
-                    self.params, self._make_batch(toks))
-                pos0 = toks.shape[1] + self.cfg.num_prefix_embeds
+                    self.params, self._make_batch(toks, valid_len=vlen))
+                extras = self.strategy.host_prefill(self, toks, vlen)
+                pos0 = len(r.prompt) + self.cfg.num_prefix_embeds
                 state = self._admit_fn(
-                    state, caches1, logits1,
+                    state, caches1, logits1, extras,
                     jnp.asarray(rec.slot, jnp.int32),
                     jnp.asarray(rec.seed, jnp.int32),
                     jnp.asarray(r.max_new_tokens, jnp.int32),
@@ -450,6 +402,7 @@ class Engine:
         stats["seq_logprob"] = [rec.seq_logprob for rec in recs]
         stats["total_tokens"] = n_tok
         stats["final_step"] = now
+        stats.update(self.strategy.stats(self, state))
         self.last_stats = stats
         self.last_scores = np.asarray(
             [rec.seq_logprob for rec in recs], np.float32)
@@ -462,18 +415,22 @@ class Engine:
                       if not bool(state["active"][s])]
         if not done_slots:
             return state
-        seq_lp = self._seq_logprobs(state)
-        flat, offsets = CA.compact_ragged(state["out"], state["emitted"])
+        outs = self.strategy.outputs(self, state)
+        seq_lp = outs["seq_logprob"]
+        flat, offsets = CA.compact_ragged(outs["out"], outs["emitted"])
         flat = np.asarray(flat)
         offsets = np.asarray(offsets)
+        meta = outs.get("meta", {})
         for slot in done_slots:
             rec = sched.complete(slot, step=now)
             rec.tokens = [int(t) for t in flat[offsets[slot]:offsets[slot + 1]]]
             rec.seq_logprob = float(seq_lp[slot])
+            for key, per_slot in meta.items():
+                rec.meta[key] = np.asarray(per_slot[slot]).item()
             if self.poison_on_evict:
                 state = dict(state)
-                state["caches"] = CA.poison_slot(
-                    state["caches"], jnp.asarray(slot, jnp.int32))
+                state["caches"] = self.strategy.poison(
+                    self, state["caches"], jnp.asarray(slot, jnp.int32))
         return state
 
     def generate(self, requests: list) -> list:
@@ -485,13 +442,20 @@ class Engine:
         return [rec.tokens for rec in recs]
 
     # -----------------------------------------------------------------------
-    # Padded-batch reference path (the parity oracle)
+    # Padded-batch reference path (the vanilla parity oracle)
     # -----------------------------------------------------------------------
 
     def generate_padded(self, requests: list) -> list:
         """Fixed-batch reference: pad to ``batch_size``, left-align prompts,
         one decode dispatch + host sync per token.  Kept as the differential
-        oracle; same seeds => bit-identical tokens vs the continuous path."""
+        oracle for *vanilla sampling*; same seeds => bit-identical tokens vs
+        the continuous path.  Non-vanilla strategies have their own
+        reference decoders (strategies/ref.py) and refuse this path."""
+        if self.strategy.name != "vanilla":
+            raise NotImplementedError(
+                "generate_padded is the vanilla-sampling parity oracle; "
+                f"strategy {self.strategy.name!r} has its own reference "
+                "decoder in serving/strategies/ref.py")
         cfg = self.cfg
         B = self.batch_size
         n_req = len(requests)
@@ -552,14 +516,11 @@ class Engine:
         # per request, masked to its realized length -- a single launch over
         # (n_req, steps) with no per-request host loop or flatten, and the
         # identical code path whether n_req is 1 or the full batch.
-        lengths = jnp.asarray([len(o) for o in outputs[:n_req]], jnp.int32)
+        lengths = [len(o) for o in outputs[:n_req]]
         lp = jnp.stack(step_logps, axis=1)[:n_req]      # (n_req, steps)
-        steps = lp.shape[1]
-        mask = (jnp.arange(steps, dtype=jnp.int32)[None, :]
-                < lengths[:, None]).astype(jnp.int32)
-        seq_logprob = forge.mapreduce(
-            lambda t: jnp.where(t[1] != 0, t[0], 0.0), alg.ADD,
-            (lp.astype(jnp.float32), mask), layout=Batched())
+        from repro.serving.sampling import masked_seq_logprobs
+        seq_logprob = masked_seq_logprobs(
+            lp.astype(jnp.float32), jnp.asarray(lengths, jnp.int32))
         self.last_scores = np.asarray(seq_logprob)
 
         self.last_stats = {

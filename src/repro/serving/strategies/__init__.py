@@ -1,0 +1,66 @@
+"""Pluggable decoding strategies for the continuous-batching engine.
+
+The registry mirrors the primitive backend registry's shape: strategies
+register under a short name, lookups fail with a uniform ValueError listing
+what is available, and ``Engine(strategy=...)`` accepts a name (for
+zero-config strategies), a :class:`DecodeStrategy` instance (for strategies
+with required arguments -- a draft model, a beam width, a token grammar),
+or None for the vanilla default.
+"""
+from __future__ import annotations
+
+from repro.serving.strategies.base import DecodeStrategy, Vanilla
+
+_STRATEGIES: dict = {}
+
+
+def register_strategy(cls):
+    """Class decorator: register a DecodeStrategy subclass under its
+    ``name``."""
+    _STRATEGIES[cls.name] = cls
+    return cls
+
+
+def available_strategies():
+    return sorted(_STRATEGIES)
+
+
+def get_strategy(name: str):
+    """Look up a registered strategy class by name."""
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r} "
+            f"(available: {', '.join(available_strategies())})") from None
+
+
+def resolve_strategy(spec):
+    """Normalize ``Engine(strategy=...)``: None -> Vanilla(), a name ->
+    that class constructed with no arguments, an instance -> itself."""
+    if spec is None:
+        return Vanilla()
+    if isinstance(spec, str):
+        return get_strategy(spec)()
+    if isinstance(spec, DecodeStrategy):
+        return spec
+    raise TypeError(
+        f"strategy must be None, a registered name, or a DecodeStrategy "
+        f"instance; got {type(spec).__name__}")
+
+
+register_strategy(Vanilla)
+
+from repro.serving.strategies.speculative import Speculative  # noqa: E402
+from repro.serving.strategies.beam import BeamSearch          # noqa: E402
+from repro.serving.strategies.constrained import Constrained  # noqa: E402
+
+register_strategy(Speculative)
+register_strategy(BeamSearch)
+register_strategy(Constrained)
+
+__all__ = [
+    "DecodeStrategy", "Vanilla", "Speculative", "BeamSearch", "Constrained",
+    "register_strategy", "available_strategies", "get_strategy",
+    "resolve_strategy",
+]

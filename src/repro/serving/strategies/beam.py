@@ -1,0 +1,259 @@
+"""Deterministic beam search on the slot cache and the sort primitives.
+
+A slot holds ``width`` beams: the cache tree is allocated at
+``batch_size * width`` rows and slot ``b``'s beams live at rows
+``b*width .. (b+1)*width - 1`` -- admission tiles the batch-1 prefill
+``width`` ways into those rows through the ordinary slot scatter, and the
+per-round beam reorder is one gather over the slot axis
+(:func:`repro.serving.cache.gather_slots`), so beam state management is
+pure slot-cache address math, no new kernels.
+
+Each round scores every ``beam x vocab`` continuation and ranks the
+``width * V`` candidates per slot with ONE ``sort_pairs`` launch under
+``Segmented(offsets=...)`` -- the slots are equal-width contiguous segments
+of the flat candidate stream (stable LSD radix over f32 keys, so the -inf
+sentinels of dead beams order deterministically).  The top ``2*width``
+candidates are retained: since each source beam contributes at most one EOS
+continuation, at most ``width`` of them are EOS, so at least ``width``
+non-EOS candidates survive -- the classic 2W-candidate guarantee.  EOS
+candidates move to the per-slot finished store (merged with the incumbents
+by a second segmented ``sort_pairs`` over the ``3*width`` pool); non-EOS
+candidates become the next beams, their rank among non-EOS candidates
+computed as a batched exclusive ``scan`` over the non-EOS flags.
+
+Ties are deterministic and mirrored exactly by the numpy reference
+(strategies/ref.py): ascending stable sort read backwards, so equal scores
+prefer the *higher* candidate id; the final answer prefers finished over
+continuing hypotheses at equal score.
+
+Beam search is score-maximizing and therefore deterministic: ``bind``
+rejects ``temperature > 0`` engines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Batched, Flat, Segmented
+from repro.serving import cache as CA
+from repro.serving.strategies.base import DecodeStrategy
+
+NEG_INF = -jnp.inf
+
+
+def _sort_rows(keys, values):
+    """Per-row stable ascending ``sort_pairs`` of a (B, N) batch, lowered as
+    one segmented launch over the flat ``B * N`` stream (equal-width
+    contiguous segments)."""
+    B, N = keys.shape
+    seg = Segmented(offsets=jnp.arange(B + 1, dtype=jnp.int32) * N)
+    sk, sv = forge.sort_pairs(
+        keys.reshape(B * N), values.reshape(B * N), layout=seg)
+    return sk.reshape(B, N), sv.reshape(B, N)
+
+
+class BeamSearch(DecodeStrategy):
+    """Beam search over the continuous-batching engine (``width`` beams per
+    slot).  Requests finish when every beam slot's finished store dominates
+    the best continuation, or at the length cap; the answer is the highest-
+    scoring hypothesis (finished preferred on ties), its score reported as
+    ``seq_logprob``."""
+
+    name = "beam"
+
+    def __init__(self, width: int = 4):
+        if width < 1:
+            raise ValueError(f"beam width must be >= 1, got {width}")
+        self.width = width
+
+    def bind(self, eng):
+        if eng.temperature > 0:
+            raise ValueError(
+                "beam search is deterministic: construct the Engine with "
+                f"temperature=0 (got temperature={eng.temperature})")
+
+    def init_state(self, eng) -> dict:
+        B, W, T = eng.batch_size, self.width, eng.max_new_cap
+        return {
+            "caches": eng._cache_zeros(B * W),
+            "scores": jnp.full((B, W), NEG_INF, jnp.float32),
+            "btok": jnp.zeros((B, W), jnp.int32),
+            "hyp": jnp.zeros((B, W, T), jnp.int32),
+            "fin_scores": jnp.full((B, W), NEG_INF, jnp.float32),
+            "fin_toks": jnp.zeros((B, W, T), jnp.int32),
+            "fin_lens": jnp.zeros((B, W), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "emitted": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), bool),
+            "max_new": jnp.zeros((B,), jnp.int32),
+            "eos": jnp.full((B,), -1, jnp.int32),
+        }
+
+    def admit(self, eng, state, caches1, logits1, extras, *, slot, seed,
+              max_new, eos, pos0):
+        W, T = self.width, eng.max_new_cap
+        # Tile the batch-1 prefill W ways into rows slot*W .. slot*W+W-1
+        # (scatter_slot's dynamic_update_slice takes any width).
+        tiledc = {
+            part: jax.tree.map(
+                lambda l: jnp.repeat(l, W, axis=0), caches1[part])
+            for part in ("prefix", "suffix")}
+        tiledc["units"] = jax.tree.map(
+            lambda l: jnp.repeat(l, W, axis=1), caches1["units"])
+        st = dict(state)
+        st["caches"] = CA.scatter_slot(state["caches"], tiledc, slot * W)
+
+        # Initial expansion: the top-W first tokens of the prompt's
+        # distribution seed the W beams.
+        logp = jax.nn.log_softmax(logits1.astype(jnp.float32), axis=-1)[0]
+        vals, idx = forge.top_k(logp, W, layout=Flat())
+        is_eos = idx == eos
+        cont = jnp.where(is_eos, NEG_INF, vals)
+        st["scores"] = state["scores"].at[slot].set(cont)
+        st["btok"] = state["btok"].at[slot].set(idx)
+        hyp0 = jnp.zeros((W, T), jnp.int32).at[:, 0].set(idx)
+        st["hyp"] = state["hyp"].at[slot].set(hyp0)
+        st["fin_scores"] = state["fin_scores"].at[slot].set(
+            jnp.where(is_eos, vals, NEG_INF))
+        st["fin_toks"] = state["fin_toks"].at[slot].set(hyp0)
+        st["fin_lens"] = state["fin_lens"].at[slot].set(
+            jnp.where(is_eos, 1, 0))
+        st["pos"] = state["pos"].at[slot].set(pos0)
+        st["emitted"] = state["emitted"].at[slot].set(1)
+        st["max_new"] = state["max_new"].at[slot].set(max_new)
+        st["eos"] = state["eos"].at[slot].set(eos)
+
+        max_cont = jnp.max(cont)
+        min_fin = jnp.min(jnp.where(is_eos, vals, NEG_INF))
+        stop = (max_cont == NEG_INF) | (min_fin >= max_cont)
+        st["active"] = state["active"].at[slot].set(
+            (max_new > 1) & ~stop)
+        return st
+
+    def step(self, eng, params, sparams, st):
+        B, W, T = eng.batch_size, self.width, eng.max_new_cap
+        was_active = st["active"]
+        bidx = jnp.arange(B, dtype=jnp.int32)
+
+        # Decode every beam row; score all beam x vocab continuations.
+        pos_rows = jnp.repeat(st["pos"], W)
+        logits, caches2 = eng._decode(
+            params, st["caches"], st["btok"].reshape(B * W, 1), pos_rows)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        V = logp.shape[-1]
+        cand = (st["scores"][:, :, None] + logp.reshape(B, W, V)
+                ).reshape(B, W * V)
+
+        # ONE segmented sort ranks each slot's W*V candidates; the last 2W
+        # columns, read backwards, are the top-2W descending (ties: higher
+        # candidate id -- the rule ref.py mirrors).
+        ids = jnp.broadcast_to(
+            jnp.arange(W * V, dtype=jnp.int32)[None, :], (B, W * V))
+        skeys, sids = _sort_rows(cand, ids)
+        top_s = skeys[:, -2 * W:][:, ::-1]                  # (B, 2W) desc
+        top_i = sids[:, -2 * W:][:, ::-1]
+        c_src = top_i // V
+        c_tok = top_i % V
+        c_eos = c_tok == st["eos"][:, None]
+
+        # Continuing beams: the first W non-EOS candidates; each one's rank
+        # among non-EOS candidates is the batched exclusive scan over the
+        # non-EOS flags (the 2W-candidate guarantee: >= W of them exist).
+        rank = forge.scan(alg.ADD, (~c_eos).astype(jnp.int32),
+                          inclusive=False, layout=Batched())
+        keep = ~c_eos & (rank < W)
+        dest = jnp.where(keep, rank, W)                     # W = spill column
+        def place(vals, fill, dtype):
+            buf = jnp.full((B, W + 1), fill, dtype)
+            return buf.at[bidx[:, None], dest].set(
+                jnp.where(keep, vals, fill))[:, :W]
+        new_scores = place(top_s, NEG_INF, jnp.float32)
+        new_btok = place(c_tok, 0, jnp.int32)
+        new_src = place(c_src, 0, jnp.int32)
+
+        # Beam reorder: each surviving beam inherits the advanced cache of
+        # the beam it extends -- a gather over the slot axis, identity on
+        # inactive slots.
+        ident = jnp.broadcast_to(
+            jnp.arange(W, dtype=jnp.int32)[None, :], (B, W))
+        src_rows = jnp.where(was_active[:, None],
+                             bidx[:, None] * W + new_src,
+                             bidx[:, None] * W + ident).reshape(B * W)
+        caches3 = CA.gather_slots(caches2, src_rows)
+
+        # Hypothesis buffers follow the same reorder + append.
+        hyp_g = jnp.take_along_axis(st["hyp"], new_src[:, :, None], axis=1)
+        at_t = (jnp.arange(T, dtype=jnp.int32)[None, None, :]
+                == st["emitted"][:, None, None])
+        new_hyp = jnp.where(at_t, new_btok[:, :, None], hyp_g)
+
+        # Finished store: merge incumbents (pool ids 0..W-1) with this
+        # round's EOS candidates (ids W..3W-1, non-EOS masked to -inf) and
+        # keep the top W -- the second batched sort of the round.
+        cand_hyp = jnp.take_along_axis(st["hyp"], c_src[:, :, None], axis=1)
+        cand_hyp = jnp.where(at_t, c_tok[:, :, None], cand_hyp)
+        pool_s = jnp.concatenate(
+            [st["fin_scores"], jnp.where(c_eos, top_s, NEG_INF)], axis=1)
+        pool_ids = jnp.broadcast_to(
+            jnp.arange(3 * W, dtype=jnp.int32)[None, :], (B, 3 * W))
+        pkeys, pids = _sort_rows(pool_s, pool_ids)
+        fin_sel = pids[:, -W:][:, ::-1]                     # (B, W) desc
+        fin_scores2 = pkeys[:, -W:][:, ::-1]
+        pool_toks = jnp.concatenate([st["fin_toks"], cand_hyp], axis=1)
+        pool_lens = jnp.concatenate(
+            [st["fin_lens"],
+             jnp.broadcast_to((st["emitted"] + 1)[:, None], (B, 2 * W))],
+            axis=1)
+        fin_toks2 = jnp.take_along_axis(
+            pool_toks, fin_sel[:, :, None], axis=1)
+        fin_lens2 = jnp.take_along_axis(pool_lens, fin_sel, axis=1)
+
+        emitted2 = st["emitted"] + 1
+        max_cont = new_scores[:, 0]                         # desc order
+        min_fin = fin_scores2[:, -1]
+        stop = (min_fin >= max_cont) | (max_cont == NEG_INF)
+        active2 = was_active & (emitted2 < st["max_new"]) & ~stop
+
+        # Commit only on active slots (the loop decodes dead rows too, but
+        # their state must stay frozen for the drain).
+        def commit(nw, old, bdims):
+            m = was_active.reshape((B,) + (1,) * (bdims - 1))
+            return jnp.where(m, nw, old)
+        new = dict(st)
+        new["caches"] = CA.select_slots(
+            jnp.repeat(was_active, W), caches3, st["caches"])
+        new["scores"] = commit(new_scores, st["scores"], 2)
+        new["btok"] = commit(new_btok, st["btok"], 2)
+        new["hyp"] = commit(new_hyp, st["hyp"], 3)
+        new["fin_scores"] = commit(fin_scores2, st["fin_scores"], 2)
+        new["fin_toks"] = commit(fin_toks2, st["fin_toks"], 3)
+        new["fin_lens"] = commit(fin_lens2, st["fin_lens"], 2)
+        new["pos"] = st["pos"] + was_active
+        new["emitted"] = commit(emitted2, st["emitted"], 1)
+        new["active"] = active2
+        return new
+
+    def outputs(self, eng, state):
+        B, W = eng.batch_size, self.width
+        # Answer pool: finished hypotheses first (so argmax's first-max
+        # rule prefers finished at equal score), then live continuations
+        # (the length-cap fallback).
+        all_s = jnp.concatenate([state["fin_scores"], state["scores"]],
+                                axis=1)
+        all_t = jnp.concatenate([state["fin_toks"], state["hyp"]], axis=1)
+        all_l = jnp.concatenate(
+            [state["fin_lens"],
+             jnp.broadcast_to(state["emitted"][:, None], (B, W))], axis=1)
+        best = jnp.argmax(all_s, axis=1)
+        out = jnp.take_along_axis(
+            all_t, best[:, None, None], axis=1)[:, 0]
+        emitted = jnp.take_along_axis(all_l, best[:, None], axis=1)[:, 0]
+        score = jnp.take_along_axis(all_s, best[:, None], axis=1)[:, 0]
+        return {"out": out, "emitted": emitted, "seq_logprob": score}
+
+    def poison(self, eng, caches, slot):
+        for w in range(self.width):
+            caches = CA.poison_slot(caches, slot * self.width + w)
+        return caches

@@ -1,0 +1,98 @@
+"""Grammar/JSON-constrained sampling: a token-level DFA masks the vocab.
+
+The grammar is compiled (offline, by the caller) to a token-level DFA over
+two dense device tables:
+
+* ``allowed``: (n_states, V) bool -- which tokens may be emitted from each
+  state;
+* ``transitions``: (n_states, V) int32 -- the state reached after emitting
+  each token.
+
+Each slot carries its DFA state in the while-loop carry; every step gathers
+its state's ``allowed`` row and masks the logits to ``-inf`` outside it
+*before* the ordinary sampler runs -- the masked logits then flow through
+the exact same ``top_k(layout=Segmented)`` + nucleus ``scan(layout=
+Batched())`` path as vanilla sampling (masked entries sort to the bottom
+under the pinned f32 key order and carry zero probability mass), so
+constrained decoding is a logits transform, not a sampler fork.  The first
+token is constrained too: admission masks the prefill logits with the start
+state's row.
+
+Reported ``seq_logprob`` is the sequence's log-probability under the
+*constrained* (renormalized) distribution -- ``chosen_logprobs`` runs on
+the masked logits, which is the quantity nucleus/temperature sampling
+actually sampled from.
+
+``bind`` validates the tables host-side: every state must allow at least
+one token (a dead state would force the sampler to pick an argmax over all
+``-inf`` -- a silent grammar violation), and transitions must stay in
+range.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.strategies.base import Vanilla, vanilla_admit
+
+
+class Constrained(Vanilla):
+    """DFA-constrained sampling riding the vanilla state layout (the DFA
+    state is one extra (B,) int32 in the carry)."""
+
+    name = "constrained"
+
+    def __init__(self, allowed, transitions, *, start_state: int = 0):
+        allowed = np.asarray(allowed, bool)
+        transitions = np.asarray(transitions, np.int32)
+        if allowed.ndim != 2 or transitions.shape != allowed.shape:
+            raise ValueError(
+                f"allowed {allowed.shape} and transitions "
+                f"{transitions.shape} must both be (n_states, vocab)")
+        n_states = allowed.shape[0]
+        dead = np.where(~allowed.any(axis=1))[0]
+        if dead.size:
+            raise ValueError(
+                f"DFA states {dead.tolist()} allow no token: every state "
+                "must keep at least one continuation or sampling would "
+                "pick an argmax over an all-masked vocabulary")
+        if transitions.min() < 0 or transitions.max() >= n_states:
+            raise ValueError(
+                f"transitions must map into [0, {n_states}); got range "
+                f"[{transitions.min()}, {transitions.max()}]")
+        if not 0 <= start_state < n_states:
+            raise ValueError(
+                f"start_state {start_state} outside [0, {n_states})")
+        self.start_state = start_state
+        self._allowed = jnp.asarray(allowed)
+        self._trans = jnp.asarray(transitions)
+
+    def bind(self, eng):
+        if self._allowed.shape[1] != eng.cfg.vocab_size:
+            raise ValueError(
+                f"DFA tables cover a vocab of {self._allowed.shape[1]} but "
+                f"the model's vocab_size is {eng.cfg.vocab_size}")
+
+    def init_state(self, eng) -> dict:
+        st = eng._base_state()
+        st["cstate"] = jnp.full(
+            (eng.batch_size,), self.start_state, jnp.int32)
+        return st
+
+    def admit(self, eng, state, caches1, logits1, extras, *, slot, seed,
+              max_new, eos, pos0):
+        logits1 = jnp.where(self._allowed[self.start_state][None, :],
+                            logits1, -jnp.inf)
+        st = vanilla_admit(eng, state, caches1, logits1, slot=slot,
+                           seed=seed, max_new=max_new, eos=eos, pos0=pos0)
+        st["cstate"] = state["cstate"].at[slot].set(
+            self._trans[self.start_state, st["tok"][slot]])
+        return st
+
+    def _adjust_logits(self, eng, st, logits):
+        return jnp.where(self._allowed[st["cstate"]], logits, -jnp.inf)
+
+    def _post_step(self, eng, st, new, nxt, was_active):
+        new["cstate"] = jnp.where(
+            was_active, self._trans[st["cstate"], nxt], st["cstate"])
+        return new

@@ -1,0 +1,154 @@
+"""Host-side reference decoders for the strategy conformance suite.
+
+These mirror the pattern of ``kernels/ref.py``: slow, obviously-correct
+oracles the device strategies are differential-tested against.  Each oracle
+drives the *engine's own* prefill/decode programs one hypothesis at a time
+(batch-1 caches, a plain Python loop, numpy control flow), so the model
+numerics are shared and only the decoding policy differs:
+
+* :func:`reference_beam` -- NMT-style beam search with explicit hypothesis
+  lists, mirroring the device tie rules exactly (stable ascending sort read
+  backwards => equal scores prefer the higher candidate id; finished beats
+  continuing at equal score);
+* :func:`reference_constrained` -- DFA-masked sampling with the shared
+  counter-key sampler.
+
+**Speculative decoding needs no oracle of its own**: its acceptance rule is
+lossless, so the reference for ``strategy=Speculative(...)`` is the vanilla
+engine itself -- the differential test asserts bit-identical token streams
+at the same seeds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import sampling as SP
+
+
+def _prefill1(eng, prompt):
+    """Batch-1 prefill of ``prompt`` through the engine's own program."""
+    toks = np.asarray(prompt, np.int32)[None, :]
+    logits, caches = eng._prefill(eng.params, eng._make_batch(toks))
+    pos0 = len(prompt) + eng.cfg.num_prefix_embeds
+    return np.asarray(logits, np.float32), caches, pos0
+
+
+def _decode1(eng, caches, tok, pos):
+    """One batch-1 decode step; returns (np logits (V,), caches)."""
+    logits, caches = eng._decode(
+        eng.params, caches, jnp.asarray([[tok]], jnp.int32),
+        jnp.asarray([pos], jnp.int32))
+    return np.asarray(logits, np.float32)[0], caches
+
+
+def _log_softmax(x):
+    x = x - x.max()
+    return x - np.log(np.exp(x).sum())
+
+
+def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
+    """NMT-style beam search oracle; returns (tokens, score).
+
+    Keeps explicit per-hypothesis batch-1 caches; each round scores every
+    beam x vocab continuation, retains the top ``2*width`` (ties: higher
+    candidate id), routes EOS continuations into the finished pool (top
+    ``width`` kept, ties: later pool entry) and extends with the first
+    ``width`` non-EOS candidates.  Stops when the worst finished hypothesis
+    dominates the best continuation, or at ``max_new``; the answer is the
+    best of finished + continuing, finished preferred on ties.
+    """
+    logits1, cache1, pos0 = _prefill1(eng, prompt)
+    logp = _log_softmax(logits1[0])
+    order = np.argsort(-logp, kind="stable")[:width]   # desc, low id on ties
+    beams = []          # (tokens tuple, score, cache, pos)
+    finished = []       # (tokens tuple, score); index order = pool id order
+    for tok in order:
+        if tok == eos_id:
+            finished.append(((int(tok),), float(logp[tok])))
+        else:
+            beams.append(([int(tok)], float(logp[tok]), cache1, pos0))
+    finished = sorted(finished, key=lambda h: h[1], reverse=True)[:width]
+
+    while beams and len(beams[0][0]) < max_new:
+        best_cont = max(b[1] for b in beams)
+        if best_cont == float("-inf"):
+            break
+        if len(finished) == width and \
+                min(h[1] for h in finished) >= best_cont:
+            break
+        # Score all beam x vocab candidates; device tie rule: ascending
+        # stable sort read backwards == higher candidate id wins ties.
+        cands = []          # (score, cand_id, src, tok)
+        steps = []
+        for w, (toks, score, cache, pos) in enumerate(beams):
+            logits, cache2 = _decode1(eng, cache, toks[-1], pos)
+            steps.append(cache2)
+            lp = _log_softmax(logits)
+            for v in range(lp.shape[0]):
+                cands.append((score + float(lp[v]), w * lp.shape[0] + v,
+                              w, v))
+        cands.sort(key=lambda c: (c[0], c[1]))          # ascending, stable
+        top = cands[-2 * width:][::-1]
+        # EOS candidates -> finished pool (incumbents get lower pool ids;
+        # ties prefer the *higher* pool id, i.e. this round's entry --
+        # matching the device's reversed stable sort).
+        pool = [(s, i, toks) for i, (toks, s) in enumerate(finished)]
+        base = len(pool)
+        new_hyps = []
+        for j, (score, _, src, tok) in enumerate(top):
+            if tok == eos_id:
+                pool.append((score, base + j,
+                             tuple(beams[src][0]) + (tok,)))
+            elif len(new_hyps) < width:
+                new_hyps.append((beams[src][0] + [tok], score,
+                                 steps[src], beams[src][3] + 1))
+        pool.sort(key=lambda p: (p[0], p[1]))
+        finished = [(toks, s) for s, _, toks in pool[-width:][::-1]]
+        beams = new_hyps
+        if not beams:
+            break
+
+    # Final answer: finished first (wins ties), then continuations.
+    candidates = [(s, 0, toks) for toks, s in finished]
+    candidates += [(s, 1, tuple(toks)) for toks, s, _, _ in beams]
+    if not candidates:
+        return [], float("-inf")
+    best = max(candidates, key=lambda c: (c[0], -c[1]))
+    return list(best[2]), float(best[0])
+
+
+def reference_constrained(eng, prompt, seed, *, allowed, transitions,
+                          max_new, eos_id=-1, start_state=0):
+    """DFA-constrained decode oracle; returns (tokens, states_visited).
+
+    Batch-1 incremental decode with the shared counter-key sampler
+    (``sampling.sample_tokens`` with the engine's own temperature/top-k/
+    top-p), logits masked to -inf outside the current DFA state's allowed
+    row -- the same quantity the device strategy samples from.
+    """
+    allowed = np.asarray(allowed, bool)
+    transitions = np.asarray(transitions, np.int32)
+    seeds = jnp.asarray([seed], jnp.int32)
+
+    def sample(logits_np, state, j):
+        masked = np.where(allowed[state], logits_np, -np.inf)
+        tok = eng._sample(eng._base_key, jnp.asarray(masked[None, :]),
+                          seeds, jnp.asarray([j], jnp.int32))
+        return int(np.asarray(tok)[0])
+
+    logits1, caches, pos0 = _prefill1(eng, prompt)
+    state = start_state
+    tok = sample(logits1[0], state, 0)
+    tokens, states = [tok], [state]
+    state = int(transitions[state, tok])
+    pos = pos0
+    while len(tokens) < max_new and tokens[-1] != eos_id:
+        logits, caches = _decode1(eng, caches, tokens[-1], pos)
+        tok = sample(logits, state, len(tokens))
+        tokens.append(tok)
+        states.append(state)
+        state = int(transitions[state, tok])
+        pos += 1
+    return tokens, states

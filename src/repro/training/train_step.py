@@ -154,6 +154,8 @@ def make_prefill_step(cfg, mesh, cache_len):
                 kwargs["src_embeds"] = batch["src_embeds"]
             if cfg.num_prefix_embeds:
                 kwargs["vision_embeds"] = batch["vision_embeds"]
+            if batch.get("valid_len") is not None:
+                kwargs["valid_len"] = batch["valid_len"]
             p_low = jax.tree.map(
                 lambda x: x.astype(jnp.bfloat16)
                 if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

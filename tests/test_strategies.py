@@ -1,0 +1,457 @@
+"""Decoding-strategy conformance: speculative / beam / constrained vs their
+pure-Python references, plus the strategy registry, the counter-key stream
+discipline, prompt-length bucketing parity, and the zero-sync loop property
+for every strategy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as C
+from repro.models import lm
+from repro.serving import sampling as SP
+from repro.serving.engine import Engine, Request
+from repro.serving.strategies import (
+    BeamSearch, Constrained, Speculative, Vanilla, available_strategies,
+    get_strategy, resolve_strategy)
+from repro.serving.strategies.ref import (
+    reference_beam, reference_constrained)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.get_config("gemma2-27b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    draft_params = lm.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params, draft_params
+
+
+REQS = [Request(prompt=[1, 2, 3, 4], max_new_tokens=8, seed=0),
+        Request(prompt=[9, 8], max_new_tokens=6, seed=1)]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_all_strategies():
+    names = available_strategies()
+    for n in ("vanilla", "speculative", "beam", "constrained"):
+        assert n in names
+
+
+def test_registry_unknown_name_is_actionable():
+    with pytest.raises(ValueError, match="available"):
+        get_strategy("nonexistent")
+
+
+def test_resolve_strategy_forms(setup):
+    assert isinstance(resolve_strategy(None), Vanilla)
+    inst = BeamSearch(width=2)
+    assert resolve_strategy(inst) is inst
+    assert isinstance(resolve_strategy("vanilla"), Vanilla)
+    with pytest.raises(TypeError):
+        resolve_strategy(42)
+
+
+# ---------------------------------------------------------------------------
+# Speculative: the reference is the vanilla engine itself (lossless rule)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_speculative_bit_identical_greedy(setup, k):
+    """Exact-match acceptance is lossless: any draft, any k, greedy streams
+    are bit-identical to vanilla at the same seeds."""
+    cfg, params, draft_params = setup
+    van = Engine(cfg, None, params, cache_len=64, batch_size=2).generate(REQS)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Speculative(cfg, draft_params, k=k))
+    assert eng.generate(REQS) == van
+
+
+def test_speculative_bit_identical_sampled(setup):
+    """temperature>0: the verify stream uses the *untagged* counter keys, so
+    sampled streams match vanilla bit-for-bit too."""
+    cfg, params, draft_params = setup
+    kw = dict(cache_len=64, batch_size=2, temperature=1.0, top_k=5, seed=3)
+    van = Engine(cfg, None, params, **kw).generate(REQS)
+    eng = Engine(cfg, None, params, **kw,
+                 strategy=Speculative(cfg, draft_params, k=3))
+    assert eng.generate(REQS) == van
+
+
+def test_speculative_perfect_draft_accepts(setup):
+    """Draft == target under greedy: proposals always match, so the stream
+    completes in ~ceil(tokens / (k+1)) rounds with high acceptance."""
+    cfg, params, _ = setup
+    van_eng = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    van = van_eng.generate(REQS)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Speculative(cfg, params, k=4))
+    assert eng.generate(REQS) == van
+    st = eng.last_stats
+    n_loop_tokens = sum(len(o) for o in van) - len(REQS)  # 1st at admission
+    assert st["spec_rounds"] < n_loop_tokens   # strictly fewer rounds
+    assert st["spec_acceptance_rate"] > 0.5
+    assert st["spec_accepted"] <= st["spec_proposed"]
+
+
+def test_speculative_mismatched_draft_still_exact(setup):
+    """A draft from different random init almost never matches greedy target
+    argmaxes -- acceptance collapses but the stream stays exact."""
+    cfg, params, draft_params = setup
+    van = Engine(cfg, None, params, cache_len=64, batch_size=2).generate(REQS)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Speculative(cfg, draft_params, k=4))
+    assert eng.generate(REQS) == van
+    assert eng.last_stats["spec_acceptance_rate"] < 0.5
+
+
+def test_speculative_validation(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="k must be"):
+        Speculative(cfg, params, k=0)
+
+
+# ---------------------------------------------------------------------------
+# Counter-key discipline (satellite S2): the draft stream is a tagged fork
+# of the base key; the recipe is pinned so a refactor cannot silently change
+# sampled streams.
+# ---------------------------------------------------------------------------
+
+
+def test_draft_stream_key_recipe_pinned():
+    assert SP.DRAFT_STREAM == 0x5D1A_F7
+    base = jax.random.PRNGKey(11)
+    expect = jax.random.fold_in(base, jnp.uint32(SP.DRAFT_STREAM))
+    got = SP.stream_key(base, SP.DRAFT_STREAM)
+    assert jnp.array_equal(got, expect)
+    # The tagged stream must actually differ from the untagged one.
+    assert not jnp.array_equal(got, base)
+
+
+def test_draft_keys_batch_composition_independent(setup):
+    """Per-request acceptance counts (rec.meta) are a pure function of
+    (engine seed, request seed, prompt): the same request accepted the same
+    number of draft tokens alone and inside a batch."""
+    cfg, params, draft_params = setup
+    kw = dict(cache_len=64, batch_size=2, temperature=1.0, top_k=5, seed=3)
+
+    def spec_meta(reqs):
+        eng = Engine(cfg, None, params, **kw,
+                     strategy=Speculative(cfg, draft_params, k=3))
+        recs = eng.serve([(0, r) for r in reqs])
+        return {tuple(r.request.prompt): r.meta["spec_accepted"]
+                for r in recs}
+
+    alone = spec_meta([REQS[0]])
+    batched = spec_meta(REQS)
+    key = tuple(REQS[0].prompt)
+    assert alone[key] == batched[key]
+
+
+# ---------------------------------------------------------------------------
+# Beam search vs the NMT-style reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [2, 3])
+def test_beam_matches_reference(setup, width):
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=BeamSearch(width=width))
+    outs = eng.generate(REQS)
+    scores = eng.last_stats["seq_logprob"]
+    for r, o, s in zip(REQS, outs, scores):
+        ref_toks, ref_score = reference_beam(
+            eng, r.prompt, width=width, max_new=r.max_new_tokens)
+        assert list(o) == ref_toks
+        assert s == pytest.approx(ref_score, abs=2e-4)
+
+
+def test_beam_eos_routes_to_finished(setup):
+    """With eos set to a token the width-2 beam actually reaches, the device
+    search must agree with the reference's finished-pool handling."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=BeamSearch(width=2))
+    probe = eng.generate([Request(prompt=[5, 6, 7], max_new_tokens=5)])[0]
+    eos = probe[2]
+    req = Request(prompt=[5, 6, 7], max_new_tokens=7, eos_id=eos)
+    out = eng.generate([req])[0]
+    score = eng.last_stats["seq_logprob"][0]
+    ref_toks, ref_score = reference_beam(
+        eng, req.prompt, width=2, max_new=7, eos_id=eos)
+    assert list(out) == ref_toks
+    assert score == pytest.approx(ref_score, abs=2e-4)
+
+
+def test_beam_rejects_sampling_engine(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="deterministic"):
+        Engine(cfg, None, params, cache_len=64, batch_size=2,
+               temperature=1.0, strategy=BeamSearch(width=2))
+    with pytest.raises(ValueError, match="width"):
+        BeamSearch(width=0)
+
+
+# ---------------------------------------------------------------------------
+# Constrained sampling vs the DFA-walk reference
+# ---------------------------------------------------------------------------
+
+
+def _dfa(cfg, seed=0, n_states=3, density=0.3):
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    allowed = rng.random((n_states, V)) < density
+    allowed[:, 0] = True     # no dead states
+    trans = rng.integers(0, n_states, (n_states, V)).astype(np.int32)
+    return allowed, trans
+
+
+def test_constrained_matches_reference_and_mask(setup):
+    cfg, params, _ = setup
+    allowed, trans = _dfa(cfg)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 temperature=1.0, top_k=8, seed=5,
+                 strategy=Constrained(allowed, trans))
+    outs = eng.generate(REQS)
+    for r, o in zip(REQS, outs):
+        ref_toks, _ = reference_constrained(
+            eng, r.prompt, r.seed, allowed=allowed, transitions=trans,
+            max_new=r.max_new_tokens)
+        assert list(o) == ref_toks
+        # Walk the DFA: every emitted token must be allowed in its state.
+        s = 0
+        for t in o:
+            assert allowed[s, t]
+            s = trans[s, t]
+
+
+def test_constrained_greedy_never_emits_masked(setup):
+    """Greedy (argmax over masked logits) obeys the DFA too -- the mask is a
+    logits transform, not a sampler feature."""
+    cfg, params, _ = setup
+    allowed, trans = _dfa(cfg, seed=2, density=0.1)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Constrained(allowed, trans))
+    for o in eng.generate(REQS):
+        s = 0
+        for t in o:
+            assert allowed[s, t]
+            s = trans[s, t]
+
+
+def test_constrained_table_validation(setup):
+    cfg, params, _ = setup
+    V = cfg.vocab_size
+    ok = np.ones((2, V), bool)
+    trans = np.zeros((2, V), np.int32)
+    dead = ok.copy()
+    dead[1] = False
+    with pytest.raises(ValueError, match="allow no token"):
+        Constrained(dead, trans)
+    bad_t = trans.copy()
+    bad_t[0, 0] = 5
+    with pytest.raises(ValueError, match="transitions"):
+        Constrained(ok, bad_t)
+    with pytest.raises(ValueError, match="start_state"):
+        Constrained(ok, trans, start_state=9)
+    with pytest.raises(ValueError, match="vocab"):
+        Engine(cfg, None, params, cache_len=64, batch_size=2,
+               strategy=Constrained(np.ones((2, V + 1), bool),
+                                    np.zeros((2, V + 1), np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Staggered admission + recycled slots: a request's stream must not depend
+# on when it was admitted or whether its slot previously held another
+# request (satellite S3).
+# ---------------------------------------------------------------------------
+
+STAGGER = [Request(prompt=[1, 2, 3], max_new_tokens=5, seed=0),
+           Request(prompt=[4, 5], max_new_tokens=4, seed=1),
+           Request(prompt=[6, 7, 8], max_new_tokens=6, seed=2),
+           Request(prompt=[2, 9], max_new_tokens=3, seed=3)]
+
+
+def _staggered(eng):
+    """4 requests through 2 slots with mid-flight arrivals => slot reuse."""
+    recs = eng.serve([(0, STAGGER[0]), (0, STAGGER[1]),
+                      (2, STAGGER[2]), (3, STAGGER[3])])
+    return [r.tokens for r in recs]
+
+
+def test_staggered_speculative_matches_vanilla(setup):
+    cfg, params, draft_params = setup
+    van = Engine(cfg, None, params, cache_len=64, batch_size=2)
+    expect = [van.generate([r])[0] for r in STAGGER]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Speculative(cfg, draft_params, k=3))
+    assert _staggered(eng) == expect
+
+
+def test_staggered_beam_matches_reference(setup):
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=BeamSearch(width=2))
+    outs = _staggered(eng)
+    for r, o in zip(STAGGER, outs):
+        ref_toks, _ = reference_beam(eng, r.prompt, width=2,
+                                     max_new=r.max_new_tokens)
+        assert list(o) == ref_toks
+
+
+def test_staggered_constrained_matches_reference(setup):
+    cfg, params, _ = setup
+    allowed, trans = _dfa(cfg, seed=1)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 temperature=1.0, top_k=8, seed=4,
+                 strategy=Constrained(allowed, trans))
+    outs = _staggered(eng)
+    for r, o in zip(STAGGER, outs):
+        ref_toks, _ = reference_constrained(
+            eng, r.prompt, r.seed, allowed=allowed, transitions=trans,
+            max_new=r.max_new_tokens)
+        assert list(o) == ref_toks
+
+
+# ---------------------------------------------------------------------------
+# Zero per-token host syncs for EVERY strategy (satellite S6): one
+# while-loop dispatch decodes the batch to completion under a hard
+# device->host transfer guard.
+# ---------------------------------------------------------------------------
+
+
+def _strategies_for_guard(cfg, params, draft_params):
+    allowed, trans = _dfa(cfg)
+    return [
+        ("speculative", dict(strategy=Speculative(cfg, draft_params, k=3),
+                             temperature=1.0, top_k=5, seed=2)),
+        ("beam", dict(strategy=BeamSearch(width=2))),
+        ("constrained", dict(strategy=Constrained(allowed, trans),
+                             temperature=1.0, top_k=8, seed=2)),
+    ]
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2],
+                         ids=["speculative", "beam", "constrained"])
+def test_strategy_single_dispatch_no_token_syncs(setup, idx):
+    cfg, params, draft_params = setup
+    name, kw = _strategies_for_guard(cfg, params, draft_params)[idx]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2, **kw)
+    assert eng.strategy.name == name
+    eng.generate(REQS)        # warm the jit caches
+
+    real, calls = eng._dispatch_loop, []
+
+    def guarded(state, budget, stop_on_free):
+        calls.append(int(budget))
+        with jax.transfer_guard_device_to_host("disallow"):
+            return real(state, budget, stop_on_free)
+
+    eng._dispatch_loop = guarded
+    outs = eng.generate(REQS)
+    assert len(calls) == 1
+    assert eng.last_stats["loop_dispatches"] == 1
+    assert [len(o) > 0 for o in outs] == [True, True]
+
+
+# ---------------------------------------------------------------------------
+# Prompt-length bucketing (satellite S1): right-padded prefill at bucket
+# lengths must reproduce exact-length first tokens.
+# ---------------------------------------------------------------------------
+
+BUCKET_REQS = [Request(prompt=list(range(1, 6)), max_new_tokens=6, seed=0),
+               Request(prompt=[9, 8, 7], max_new_tokens=5, seed=1),
+               Request(prompt=list(range(3, 20)), max_new_tokens=4, seed=2)]
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "recurrentgemma-2b"])
+def test_bucketed_prefill_parity(arch):
+    """Attention archs are bit-identical under right-padded prefill (the
+    causal mask keeps pads out of every valid query); recurrent archs
+    snapshot their state at valid_len and must emit the same tokens."""
+    cfg = C.get_config(arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    exact = Engine(cfg, None, params, cache_len=64,
+                   batch_size=2).generate(BUCKET_REQS)
+    bucketed = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                      prefill_buckets="pow2").generate(BUCKET_REQS)
+    assert bucketed == exact
+
+
+def test_bucketed_prefill_parity_sampled(setup):
+    """Sampling runs on the same logits => bucketing can't shift the RNG."""
+    cfg, params, _ = setup
+    kw = dict(cache_len=64, batch_size=2, temperature=1.0, top_k=5, seed=3)
+    exact = Engine(cfg, None, params, **kw).generate(BUCKET_REQS)
+    bucketed = Engine(cfg, None, params, **kw,
+                      prefill_buckets=[8, 32]).generate(BUCKET_REQS)
+    assert bucketed == exact
+
+
+def test_bucketed_prefill_compiles_fewer_shapes(setup):
+    """The point of bucketing: prompts of many lengths hit few prefill
+    shapes.  Count distinct (padded) prompt lengths reaching _prefill."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 prefill_buckets="pow2")
+    seen = []
+    real = eng._prefill
+
+    def spy(params, batch):
+        # Admission prefills are batch-1; ignore the engine's own
+        # eval_shape cache-shape probe (batch = batch_size, length 1).
+        if batch["tokens"].shape[0] == 1:
+            seen.append(batch["tokens"].shape[1])
+        return real(params, batch)
+
+    eng._prefill = spy
+    reqs = [Request(prompt=list(range(1, n)), max_new_tokens=2, seed=n)
+            for n in (3, 5, 6, 8, 9, 17, 20)]
+    eng.generate(reqs)
+    assert len(seen) == len(reqs)
+    assert set(seen) <= {8, 16, 32}     # pow2 buckets, never exact lengths
+
+
+def test_bucket_spec_validation(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        Engine(cfg, None, params, cache_len=64, batch_size=2,
+               prefill_buckets=[8, 4096])
+
+
+def test_buckets_compose_with_speculative(setup):
+    """Bucketed prefill feeds both models' caches; streams stay exact."""
+    cfg, params, draft_params = setup
+    van = Engine(cfg, None, params, cache_len=64,
+                 batch_size=2).generate(BUCKET_REQS)
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 prefill_buckets="pow2",
+                 strategy=Speculative(cfg, draft_params, k=3))
+    assert eng.generate(BUCKET_REQS) == van
+
+
+# ---------------------------------------------------------------------------
+# Oracle routing guards (satellite S6)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_padded_refuses_non_vanilla(setup):
+    cfg, params, draft_params = setup
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=Speculative(cfg, draft_params, k=2))
+    with pytest.raises(NotImplementedError, match="vanilla"):
+        eng.generate_padded(REQS)
+
+
+def test_encdec_rejects_non_vanilla_strategy():
+    # The constructor raises before params are ever touched, so no init.
+    cfg = C.get_config("seamless-m4t-medium", smoke=True)
+    with pytest.raises(NotImplementedError, match="enc-dec"):
+        Engine(cfg, None, None, cache_len=64, batch_size=2,
+               strategy=BeamSearch(width=2))

@@ -273,6 +273,96 @@ def gpu_copy_bytes(n: int, dtype, nitem: int, policy) -> int:
     return 2 * _pad(n, block) * jnp.dtype(dtype).itemsize
 
 
+# ---------------------------------------------------------------------------
+# @sharded routes: per-DEVICE traffic of the staged plans
+# (distributed/primitives.py).  Each model is local-stage bytes at the
+# ceil(n/S) shard extent plus the collective stage priced off the operator's
+# FoldSpec descriptor -- an all-reduce-shaped collective (psum/pmax/pmin)
+# moves ~2x its payload through each device (ring send+recv), an all_gather
+# lands S copies.  The strong-scaling claim these encode: local traffic is
+# ~1/S of the flat route while the collective term is independent of n
+# (except the sort family's documented O(n) portable gather).
+# ---------------------------------------------------------------------------
+
+
+def fold_bytes(collectives, payload: int, shards: int) -> int:
+    """Per-device bytes of a FoldSpec's collective stage.
+
+    ``collectives`` is the descriptor tuple from
+    ``core.operators.collective_fold_spec(op).collectives`` -- the byte
+    model prices exactly the collectives the staged plan will issue.
+    """
+    total = 0
+    for c in collectives:
+        total += shards * payload if c == "all_gather" else 2 * payload
+    return total
+
+
+def sharded_scan_bytes(n: int, dtypes, shards: int, policy=None) -> int:
+    """scan@sharded per device: the local scan at ceil(n/S), the carry
+    epilogue's re-read + write of the local prefix (op(carry, incl)), and
+    the all-gathered per-shard totals (S elements -- O(S), not O(n))."""
+    n_loc = ki.cdiv(n, shards)
+    per_elem = sum(jnp.dtype(d).itemsize for d in dtypes)
+    local = scan_bytes(n_loc, dtypes, policy)
+    epilogue = 2 * n_loc * per_elem
+    collective = fold_bytes(("all_gather",), per_elem, shards)
+    return local + epilogue + collective
+
+
+def sharded_mapreduce_bytes(n: int, in_dtypes, out_dtypes, shards: int,
+                            collectives=("psum",), policy=None) -> int:
+    """mapreduce@sharded per device: local reduce at ceil(n/S) + the
+    operator's fold over the O(1) output -- pass the FoldSpec's
+    ``collectives`` tuple for non-native operators (logsumexp is
+    ("pmax", "psum"), the gather fallback is ("all_gather",))."""
+    n_loc = ki.cdiv(n, shards)
+    out_payload = sum(jnp.dtype(d).itemsize for d in out_dtypes)
+    return (mapreduce_bytes(n_loc, in_dtypes, out_dtypes, policy)
+            + fold_bytes(collectives, out_payload, shards))
+
+
+def sharded_matvec_bytes(n: int, p: int, dtype, shards: int, out_dtype=None,
+                         policy=None) -> int:
+    """matvec@sharded per device: the local strip matvec over n//S rows,
+    the replicated ``n % S`` remainder rows (folded in by the epilogue),
+    and the ADD fold's psum of the (p,)-sized strip partial."""
+    sz_out = jnp.dtype(out_dtype or dtype).itemsize
+    n_loc = n // shards
+    rem = n - n_loc * shards
+    b = matvec_bytes(n_loc, p, dtype, out_dtype, policy) if n_loc else 0
+    if rem:
+        b += matvec_bytes(rem, p, dtype, out_dtype, policy)
+    return b + fold_bytes(("psum",), p * sz_out, shards)
+
+
+def sharded_vecmat_bytes(n: int, p: int, dtype, shards: int, out_dtype=None,
+                         policy=None) -> int:
+    """vecmat@sharded per device: the column-strip mirror -- p//S columns
+    local, ``p % S`` replicated, psum of the (n,)-sized partial."""
+    sz_out = jnp.dtype(out_dtype or dtype).itemsize
+    p_loc = p // shards
+    rem = p - p_loc * shards
+    b = vecmat_bytes(n, p_loc, dtype, out_dtype, policy) if p_loc else 0
+    if rem:
+        b += vecmat_bytes(n, rem, dtype, out_dtype, policy)
+    return b + fold_bytes(("psum",), n * sz_out, shards)
+
+
+def sharded_channel_scan_bytes(batch: int, t: int, c: int, shards: int,
+                               dtype, policy=None) -> int:
+    """linear_recurrence@sharded per device: the local (B, ceil(T/S), C)
+    affine scan (2 leaves in, 2 out), the gathered per-shard (A, B) totals
+    (2 x (B, C) x S -- sequence-length independent), and the epilogue's
+    re-read of both inclusive planes + the h write."""
+    t_loc = ki.cdiv(t, shards)
+    sz = jnp.dtype(dtype).itemsize
+    local = channel_scan_bytes(batch, t_loc, c, 2, 2, dtype, policy)
+    epilogue = 3 * batch * t_loc * c * sz
+    collective = fold_bytes(("all_gather",), 2 * batch * c * sz, shards)
+    return local + epilogue + collective
+
+
 def sort_pass_count(key_bits: int, digit_bits: int, num_segments: int = 1) -> int:
     """LSD scatter passes: key digits, then segment-id digits (if any)."""
     passes = ki.cdiv(key_bits, digit_bits)
@@ -320,6 +410,36 @@ def top_k_bytes(n: int, k: int, dtype, policy=None, *,
     return (sort_bytes(n, dtype, policy, payload_itemsize=4,
                        num_segments=num_segments) +
             num_segments * k * (sz + 4))
+
+
+def sharded_top_k_bytes(n: int, k: int, dtype, shards: int,
+                        policy=None) -> int:
+    """top_k@sharded per device: local top-k over ceil(n/S), the gathered
+    S x k (value, global index) candidates, and the k-way partial merge (an
+    index-carrying sort of the S*k candidate pool -- O(S*k), not O(n))."""
+    sz = jnp.dtype(dtype).itemsize
+    n_loc = ki.cdiv(n, shards)
+    cand = shards * min(k, n_loc)
+    return (top_k_bytes(n_loc, min(k, n_loc), dtype, policy)
+            + fold_bytes(("all_gather",), min(k, n_loc) * (sz + 4), shards)
+            + sort_bytes(cand, dtype, policy, payload_itemsize=4))
+
+
+def sharded_sort_pairs_bytes(n: int, dtype, shards: int, *,
+                             payload_itemsize: int = 0, policy=None) -> int:
+    """sort_pairs@sharded per device: the local sort of ceil(n/S), then the
+    portable splitter exchange -- the gathered full stream (keys + payload,
+    the documented O(n)-per-device step of the portable merge), S rank
+    passes over the gathered keys, and the scattered local output slice."""
+    sz = jnp.dtype(dtype).itemsize
+    n_loc = ki.cdiv(n, shards)
+    n_all = shards * n_loc
+    local = sort_bytes(n_loc, dtype, policy, payload_itemsize=payload_itemsize)
+    gather = fold_bytes(("all_gather",), n_loc * (sz + payload_itemsize),
+                        shards)
+    rank = shards * n_all * sz                       # searchsorted per run
+    scatter = n_all * (sz + payload_itemsize)        # read-back + local write
+    return local + gather + rank + scatter
 
 
 def copy_bytes(n: int, dtype, nitem: int, policy=None) -> int:

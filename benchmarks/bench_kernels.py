@@ -366,6 +366,48 @@ def ci_structural_entries() -> dict:
             AN.gpu_quantized_matvec_bytes(10**3, 10**4, block=64,
                                           policy=GPU_POLICY),
     }
+    # @sharded routes: per-DEVICE traffic of the staged plans at S=8 --
+    # local stage at ceil(n/S) + the collective stage priced off each
+    # operator's FoldSpec descriptor (analytic.fold_bytes).  The logsumexp
+    # mapreduce leg pins a rewrite fold (pmax + psum, NOT the all_gather
+    # fallback) staying O(1) in n.
+    S8 = 8
+    from repro.core import operators as _alg
+    e.update({
+        "scan@sharded/float32/n=1e6/s=8":
+            AN.sharded_scan_bytes(N, [f32], S8, POLICY),
+        "mapreduce@sharded/float32/n=1e6/s=8":
+            AN.sharded_mapreduce_bytes(
+                N, [f32], [f32], S8,
+                collectives=_alg.collective_fold_spec(_alg.ADD).collectives,
+                policy=POLICY),
+        "mapreduce@sharded/logsumexp/float32/n=1e6/s=8":
+            AN.sharded_mapreduce_bytes(
+                N, [f32], [f32], S8,
+                collectives=_alg.collective_fold_spec(
+                    _alg.LOGSUMEXP).collectives,
+                policy=POLICY),
+        "matvec@sharded/float32/1e3x1e4/s=8":
+            AN.sharded_matvec_bytes(10**3, 10**4, f32, S8, policy=POLICY),
+        "vecmat@sharded/float32/1e4x1e3/s=8":
+            AN.sharded_vecmat_bytes(10**4, 10**3, f32, S8, policy=POLICY),
+        "linear_recurrence@sharded/float32/B=8xT=32768xC=256/s=8":
+            AN.sharded_channel_scan_bytes(8, 32768, 256, S8, f32, POLICY),
+        "top_k@sharded/float32/n=1e6/k=64/s=8":
+            AN.sharded_top_k_bytes(N, 64, f32, S8, POLICY),
+        "sort_pairs@sharded/float32+8B/n=1e6/s=8":
+            AN.sharded_sort_pairs_bytes(N, f32, S8, payload_itemsize=8,
+                                        policy=POLICY),
+    })
+    # Strong-scaling gates: per-device traffic of a sharded route must sit
+    # well under the flat route's (the local slice shrinks 1/S; the
+    # collective term must not scale with n).
+    assert (6 * e["matvec@sharded/float32/1e3x1e4/s=8"]
+            <= e["matvec@flat/float32/1e3x1e4"]), \
+        "matvec@sharded lost its ~1/S per-device traffic"
+    assert (3 * e["mapreduce@sharded/logsumexp/float32/n=1e6/s=8"]
+            <= e["mapreduce@flat/float32/n=1e6"]), \
+        "logsumexp fold stopped being O(1) -- gather fallback crept in?"
     # ~2n: element movement + tile padding + the O(n/block) mailbox, with
     # a 5% structural allowance -- far below the 3n of a two-pass scan.
     assert e["scan@flat/pallas-gpu/float32/n=1e6"] <= int(2.1 * N * 4), \

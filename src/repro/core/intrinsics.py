@@ -346,6 +346,12 @@ class TuningPolicy:
     # load/store transaction width (float4-style 128-bit accesses).
     gpu_threads: int = 128
     gpu_vec_bytes: int = 16
+    # @sharded staged-plan driver (distributed/primitives.py): how many
+    # slabs a chunkable plan splits into, so each slab's collective can be
+    # issued while the next slab's local stage computes.  1 disables
+    # chunking; the knob is raced on the topology-keyed tuning ladder (a
+    # winner on one mesh shape is never replayed on another).
+    overlap_chunks: int = 4
 
 
 _TUNING_REGISTRY: dict[str, TuningPolicy] = {}
@@ -377,7 +383,7 @@ register_tuning(
     "interpret",
     TuningPolicy(name="interpret", nitem_copy=2, nitem_scan=2, nitem_reduce=2,
                  matvec_rows=2, matvec_cols=1, vecmat_rows=2, vecmat_cols=1,
-                 sort_digit_bits=4),
+                 sort_digit_bits=4, overlap_chunks=2),
 )
 # GPU family (the paper's A40 <: Ampere chain, across vendors): blocks are
 # gpu_threads x nitem x vec elements.  Datacenter parts get more threads
@@ -404,7 +410,8 @@ register_tuning(
     "gpu_interpret",
     TuningPolicy(name="gpu_interpret", nitem_scan=2, nitem_reduce=2,
                  nitem_copy=2, matvec_rows=2, matvec_cols=1, vecmat_rows=2,
-                 vecmat_cols=1, sort_digit_bits=4, gpu_threads=32),
+                 vecmat_cols=1, sort_digit_bits=4, gpu_threads=32,
+                 overlap_chunks=2),
     parent="gpu_generic")
 
 
@@ -871,6 +878,7 @@ def dispatch(primitive: str, layout, backend: str | None,
     if route.needs_mesh:
         kwargs["axis_name"] = layout.axis
         kwargs["mesh"] = layout.mesh
+        kwargs["overlap"] = layout.overlap
     if route.zero_extent is not None:
         handled, result = _ZERO_GUARDS[route.zero_extent](route, args, kwargs)
         if handled:
@@ -900,6 +908,11 @@ _SORT_LADDER = tuple({"sort_digit_bits": d, "nitem_scan": m}
                      for d in (2, 4, 8) for m in (8, 16))
 _MATVEC_ROWS = tuple({"matvec_rows": v} for v in (4, 8, 16))
 _VECMAT_ROWS = tuple({"vecmat_rows": v} for v in (4, 8, 16))
+# Chunk count raced by the @sharded staged-plan driver: more chunks expose
+# more communication/compute overlap but shrink each local launch.  Sharded
+# tuning keys carry the mesh topology, so a winner on one axis extent is
+# never replayed on another.
+_OVERLAP_CHUNKS = tuple({"overlap_chunks": v} for v in (1, 2, 4, 8))
 
 _SORT_TUNE = TuneRecipe(_SORT_LADDER, op_label="keys")
 
@@ -954,11 +967,13 @@ define_primitive(
                    "non-commutative ops are valid"),
     RouteDef("mapreduce", "sharded", data_arg=2, op_arg=1,
              commutative_only=True, fixed_kwargs=(("axis", None),),
-             needs_mesh=True, tuning=TuneRecipe(_NITEM_REDUCE),
+             needs_mesh=True,
+             tuning=TuneRecipe(_NITEM_REDUCE + _OVERLAP_CHUNKS),
              notes="local reduce along leaf axis 0 + the operator's "
                    "collective fold (psum/pmax/pmin rewrite when the monoid "
                    "allows, all_gather fold otherwise); the cross-device "
-                   "fold requires commutativity"),
+                   "fold requires commutativity; rank>=2 mapped leaves are "
+                   "chunked along axis 1 for collective/compute overlap"),
     doc="op-reduction of f(x)")
 
 define_primitive(
@@ -968,6 +983,14 @@ define_primitive(
     RouteDef("matvec", "batched", data_arg=2, op_arg=1,
              arg_ranks=((2, 3), (3, 2)), zero_extent="batched_mv_identity",
              tuning=TuneRecipe(_MATVEC_ROWS, dims="trail2")),
+    RouteDef("matvec", "sharded", data_arg=2, op_arg=1,
+             arg_ranks=((2, 2), (3, 1)), needs_mesh=True,
+             tuning=TuneRecipe(_OVERLAP_CHUNKS, dims="row"),
+             notes="contraction-axis (row) tensor parallelism: local strip "
+                   "matvec per shard + the operator's collective fold over "
+                   "strip partials (ADD -> psum for the decode GEMV); a "
+                   "< shards row remainder rides replicated and folds in "
+                   "last, so reduction order matches the flat route"),
     doc="y[j] = op_i f(x[i], A[i, j]) (generalized semiring matvec)")
 
 define_primitive(
@@ -977,6 +1000,13 @@ define_primitive(
     RouteDef("vecmat", "batched", data_arg=2, op_arg=1,
              arg_ranks=((2, 3), (3, 2)), zero_extent="batched_mv_identity",
              tuning=TuneRecipe(_VECMAT_ROWS, dims="trail2")),
+    RouteDef("vecmat", "sharded", data_arg=2, op_arg=1,
+             arg_ranks=((2, 2), (3, 1)), needs_mesh=True,
+             tuning=TuneRecipe(_OVERLAP_CHUNKS, dims="row"),
+             notes="contraction-axis (column) tensor parallelism, the "
+                   "row-wise mirror of matvec@sharded: column strips are "
+                   "sharded, strip partials fold across the axis, and the "
+                   "< shards column remainder rides replicated"),
     doc="z[i] = op_j f(A[i, j], x[j]) (generalized semiring vecmat)")
 
 define_primitive(
@@ -986,6 +1016,14 @@ define_primitive(
              tuning=TuneRecipe(_NITEM_SCAN, op_label="affine",
                                dims="trail2"),
              notes="the decode hot path; tuner keys carry a batch bucket"),
+    RouteDef("linear_recurrence", "sharded", arg_ranks=((0, 3), (1, 3)),
+             fixed_kwargs=(("reverse", False),), needs_mesh=True,
+             tuning=TuneRecipe(_OVERLAP_CHUNKS, op_label="affine",
+                               dims="trail2"),
+             notes="sequence (T) sharding for long-context prefill: local "
+                   "affine scan per shard + an exclusive cross-device carry "
+                   "of per-shard (A, B) totals; h0 rides replicated; uneven "
+                   "T pads with the affine identity (a=1, b=0)"),
     doc="h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, C)")
 
 _SHARDED_SORT_NOTES = {

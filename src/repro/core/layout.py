@@ -119,11 +119,21 @@ class Sharded(Layout):
       is already inside a ``shard_map`` over ``axis`` and passes its local
       shard; only the local compute + collective fold are emitted.  This is
       the form consumers like ``distributed/collectives.py`` use.
+
+    ``overlap`` controls the staged plan driver
+    (``distributed/primitives.py``): ``True`` (default) issues each chunk's
+    collective as soon as its local stage is emitted, so the collective for
+    chunk *i* can proceed while chunk *i+1* computes; ``False`` emits every
+    local stage before any collective -- the blocking-barrier issue order.
+    Both orders run the identical per-chunk arithmetic, so they are
+    bit-identical; ``overlap=False`` is the latency-hiding escape hatch,
+    not a numerics switch.
     """
 
     kind = "sharded"
     axis: str = "model"
     mesh: object | None = None  # jax.sharding.Mesh in the global form
+    overlap: bool = True        # staged-plan collective issue order
 
     # Mesh equality is well-defined but descriptors follow the Segmented
     # convention: compare the mesh by identity (two Sharded values are equal
@@ -131,10 +141,11 @@ class Sharded(Layout):
     def __eq__(self, other):
         if not isinstance(other, Sharded):
             return NotImplemented
-        return self.axis == other.axis and self.mesh is other.mesh
+        return (self.axis == other.axis and self.mesh is other.mesh
+                and self.overlap == other.overlap)
 
     def __hash__(self):
-        return hash((self.axis, id(self.mesh)))
+        return hash((self.axis, id(self.mesh), self.overlap))
 
     def describe(self) -> str:
         m = "in-mesh" if self.mesh is None else "mesh=..."

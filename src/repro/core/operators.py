@@ -348,24 +348,57 @@ def segmented(op: AssocOp) -> AssocOp:
 # kernels rewrite tile combines into VPU shifts, the distributed layer
 # rewrites operator folds into the native collectives (psum/pmax/pmin) when
 # the monoid structure allows, and falls back to an order-preserving
-# all_gather + local fold otherwise.  ``distributed/primitives.py`` builds
-# every @sharded route's cross-device step from this one function.
+# all_gather + local fold otherwise.
+#
+# The registry *returns a descriptor* (:class:`FoldSpec`) rather than
+# eagerly executing a fold: ``distributed/primitives.py`` stages every
+# ``@sharded`` route as a ShardPlan (local stage -> collective stage ->
+# epilogue), and the plan driver decides *when* each collective is issued
+# (chunked, overlapped with the next chunk's local compute).  The
+# ``collectives`` tuple names the collective ops the built fold emits, so
+# the structural byte models in benchmarks/analytic.py can price the
+# cross-device stage without running it.
 # --------------------------------------------------------------------------
 
-_COLLECTIVE_FOLDS: dict[str, Callable[[str], Callable]] = {}
+
+@dataclasses.dataclass(frozen=True)
+class FoldSpec:
+    """Descriptor for one operator's cross-device fold.
+
+    ``build(axis_name)`` returns the function mapping one *local* element (a
+    pytree) to the fold of all devices' elements along that mesh axis --
+    algebraically ``functools.reduce(op, shards-in-axis-order)``.
+    ``collectives`` names the collectives the built fold emits, in issue
+    order (``"psum"``/``"pmax"``/``"pmin"``/``"all_gather"``).
+    """
+
+    op_name: str
+    collectives: tuple[str, ...]
+    build: Callable[[str], Callable]
+
+    @property
+    def native(self) -> bool:
+        """True when the fold is a native-collective rewrite (no gather)."""
+        return "all_gather" not in self.collectives
 
 
-def register_collective_fold(op_name: str):
+_COLLECTIVE_FOLDS: dict[str, FoldSpec] = {}
+
+
+def register_collective_fold(op_name: str, *, collectives: tuple[str, ...]):
     """Register a collective-form rewrite for the operator named ``op_name``.
 
     The decorated builder takes the mesh ``axis_name`` and returns a function
     mapping one *local* element (a pytree) to the fold of all devices'
     elements along that axis.  Rewrites must be algebraically equivalent to
-    ``functools.reduce(op, shards-in-axis-order)``.
+    ``functools.reduce(op, shards-in-axis-order)``.  ``collectives`` declares
+    the collective ops the built fold emits (metadata for the staged plan
+    layer and the analytic byte models).
     """
 
     def deco(builder):
-        _COLLECTIVE_FOLDS[op_name] = builder
+        _COLLECTIVE_FOLDS[op_name] = FoldSpec(
+            op_name=op_name, collectives=tuple(collectives), build=builder)
         return builder
 
     return deco
@@ -397,40 +430,51 @@ def _gather_fold(op: AssocOp, axis_name: str) -> Callable:
     return fold
 
 
+def collective_fold_spec(op: AssocOp) -> FoldSpec:
+    """The :class:`FoldSpec` describing ``op``'s cross-device fold.
+
+    Returns the registered native-collective rewrite when the operator's
+    monoid structure allows, otherwise the portable ``all_gather`` + ordered
+    local fold -- always algebraically the same reduction, so callers never
+    branch on the operator.  This is the descriptor form the staged
+    ``@sharded`` plans consume: the caller decides when to ``build`` and
+    issue the fold, not this registry.
+    """
+    spec = _COLLECTIVE_FOLDS.get(op.name)
+    if spec is not None:
+        return spec
+    return FoldSpec(op_name=op.name, collectives=("all_gather",),
+                    build=functools.partial(_gather_fold, op))
+
+
 def collective_fold(op: AssocOp, axis_name: str) -> Callable:
     """Fold ``op`` across mesh axis ``axis_name``: local element -> total.
 
-    Rewrites the fold into pmax/psum/pmin collective form when the
-    operator's monoid structure allows (registered via
-    :func:`register_collective_fold`); otherwise an ``all_gather`` plus an
-    order-preserving local fold -- always algebraically the same reduction,
-    so callers never branch on the operator.
+    Eager convenience form of :func:`collective_fold_spec` (build the fold
+    for one axis immediately); kept for callers that do not stage.
     """
-    builder = _COLLECTIVE_FOLDS.get(op.name)
-    if builder is not None:
-        return builder(axis_name)
-    return _gather_fold(op, axis_name)
+    return collective_fold_spec(op).build(axis_name)
 
 
-@register_collective_fold("add")
+@register_collective_fold("add", collectives=("psum",))
 def _add_collective(axis_name):
     return lambda x: jax.tree.map(
         lambda l: jax.lax.psum(l, axis_name), x)
 
 
-@register_collective_fold("max")
+@register_collective_fold("max", collectives=("pmax",))
 def _max_collective(axis_name):
     return lambda x: jax.tree.map(
         lambda l: jax.lax.pmax(l, axis_name), x)
 
 
-@register_collective_fold("min")
+@register_collective_fold("min", collectives=("pmin",))
 def _min_collective(axis_name):
     return lambda x: jax.tree.map(
         lambda l: jax.lax.pmin(l, axis_name), x)
 
 
-@register_collective_fold("logsumexp")
+@register_collective_fold("logsumexp", collectives=("pmax", "psum"))
 def _logsumexp_collective(axis_name):
     """log(psum(exp(x - pmax x))) + pmax x, guarded for all--inf shards."""
 
@@ -446,7 +490,7 @@ def _logsumexp_collective(axis_name):
     return fold
 
 
-@register_collective_fold("softmax_merge")
+@register_collective_fold("softmax_merge", collectives=("pmax", "psum", "psum"))
 def _softmax_merge_collective(axis_name):
     """The distributed flash-decoding merge: m* = pmax m; w = exp(m - m*);
     l* = psum(w l); o* = psum(w o) -- SOFTMAX_MERGE's fold in collective

@@ -121,7 +121,14 @@ def matvec(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
            backend: str | None = None) -> Pytree:
     """y[j] = op_i f(x[i], A[i, j]) over ``(n, p)`` / ``(n,)`` -- or, under
     ``Batched()``, ``y[b, j]`` over ``(B, n, p)`` / ``(B, n)`` in one
-    launch (``n == 0`` yields identity rows)."""
+    launch (``n == 0`` yields identity rows).
+
+    ``Sharded(axis, mesh=...)`` shards the *contraction* axis ``n`` (rows of
+    ``A`` and the matching ``x`` entries) over a mesh axis -- each device
+    folds its strip into a ``(p,)`` partial and the operator's collective
+    fold combines them (tensor parallelism over the reduced dimension, the
+    decode-GEMV split).  ``op`` must be commutative.  Uneven ``n`` keeps the
+    ``n % shards`` remainder rows replicated; they are folded in last."""
     return ki.dispatch("matvec", layout, backend, (f, op, A, x), {})
 
 
@@ -130,7 +137,9 @@ def vecmat(f: Callable, op: alg.AssocOp, A: jax.Array, x: jax.Array, *,
            backend: str | None = None) -> Pytree:
     """z[i] = op_j f(A[i, j], x[j]) -- the row-wise mirror of
     :func:`matvec`, with the same ``Batched()`` form over ``(B, n, p)`` /
-    ``(B, p)``."""
+    ``(B, p)`` and the same ``Sharded(axis, mesh=...)`` contraction-axis
+    split (columns of ``A`` and matching ``x`` entries span the mesh axis;
+    strip partials meet in the operator's collective fold)."""
     return ki.dispatch("vecmat", layout, backend, (f, op, A, x), {})
 
 
@@ -163,6 +172,12 @@ def linear_recurrence(a: jax.Array, b: jax.Array,
     consumers pass ``Batched()``, which is the route the autotuner keys
     with a batch bucket.  ``h0`` is an optional per-row ``(B, C)`` initial
     state.
+
+    ``Sharded(axis, mesh=...)`` shards the *time* axis ``T`` over a mesh
+    axis (sequence-parallel prefill): each device runs the local affine
+    scan, per-shard ``(A, B)`` totals meet in an exclusive cross-device
+    AFFINE scan, and the carry is applied locally -- ``reverse`` is not
+    supported on this route.  ``h0`` must be replicated.
     """
     return ki.dispatch("linear_recurrence", layout, backend, (a, b),
                        {"h0": h0, "reverse": reverse})

@@ -144,6 +144,19 @@ TUNABLE: dict[str, TunableSpec] = {
 }
 
 
+def resolve_overlap_chunks(policy: "ki.TuningPolicy | None",
+                           backend: str | None) -> int:
+    """Chunk count for the @sharded staged-plan driver.
+
+    An explicit policy (including one injected by the tuner racing the
+    ``overlap_chunks`` ladder) wins; otherwise the backend's base policy
+    supplies the prior.  Clamped to >= 1 (1 disables chunking).
+    """
+    if policy is None:
+        policy = ki.resolve_tuning(ki.default_policy_name(backend))
+    return max(1, int(getattr(policy, "overlap_chunks", 1)))
+
+
 # ---------------------------------------------------------------------------
 # The tuner itself.
 # ---------------------------------------------------------------------------

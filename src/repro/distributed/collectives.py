@@ -9,12 +9,16 @@ parameter gathers piled onto that (collective term).
 Fix: shard the cache along the *sequence* axis over ``model`` and give each
 chip a partial softmax over its slice; the partials (m, l, o) form the
 ``SOFTMAX_MERGE`` monoid from the core operator algebra -- the distributed
-combine IS ``mapreduce(SOFTMAX_MERGE, layout=Sharded("model"))``, whose
-registered collective fold lowers to one pmax + two psums
-(``core.operators.register_collective_fold``; ``tests/test_sharded.py``
-pins the equivalence to the operator fold).  No hand-rolled collective
-remains here: the merge dispatches through the same registry route every
-other consumer uses.
+combine IS ``mapreduce(SOFTMAX_MERGE, layout=Sharded("model"))``.  That
+route now compiles to a staged ShardPlan (distributed/primitives.py): the
+local reduce is one stage, and the operator's registered
+:class:`~repro.core.operators.FoldSpec` (``pmax`` + two ``psum``) is the
+collective stage the plan driver issues -- chunked along the partials'
+row axis so later chunks' local math overlaps earlier chunks' collectives
+(``tests/test_sharded.py`` pins the equivalence to the operator fold).
+What used to be a hand-staged two-phase merge here is exactly the shape
+the plan driver emits; no hand-rolled collective remains -- the merge
+dispatches through the same registry route every other consumer uses.
 
 Per-chip traffic drops from O(L) to O(L/16) cache reads plus O(B*H*hd)
 collective bytes -- a ~16x cut of the decode memory term at the cost of a
@@ -54,8 +58,10 @@ def merge_partials(m, l, o, axis_name):
 
     Dispatches ``mapreduce(SOFTMAX_MERGE, layout=Sharded(axis_name))`` in
     its in-mesh form: each device contributes its one partial (a length-1
-    stream along leaf axis 0) and the registered collective fold lowers to
-    m* = pmax m; w = exp(m - m*); l* = psum(w l); o* = psum(w o).
+    stream along leaf axis 0) and the staged plan issues the operator's
+    registered collective fold -- m* = pmax m; w = exp(m - m*);
+    l* = psum(w l); o* = psum(w o) -- per batch-row chunk, so the fold for
+    one chunk of rows flies while the next chunk reduces.
 
     Rows masked on **every** shard (batch-padding rows during decode) have
     l* == 0 and an o* that may carry masked garbage (0 * NaN from poisoned

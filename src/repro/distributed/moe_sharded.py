@@ -93,11 +93,13 @@ def moe_forward_sharded(params, cfg, x, mesh):
             gates = gates / jnp.maximum(jnp.sum(gates, 1, keepdims=True), 1e-9)
 
         # ---- router statistics: global across the data axes, through the
-        # mapreduce@sharded route (in-mesh form).  The ADD fold lowers to
-        # the psum this replaces, but the expert-count reduction now rides
-        # the same registry route as every other consumer; global counts /
-        # mean-probs make lb_loss the whole-batch statistic rather than a
-        # mean of per-shard products.
+        # mapreduce@sharded route (in-mesh form).  The route is a staged
+        # ShardPlan whose collective stage is the ADD FoldSpec's psum --
+        # the same psum this replaced, but the expert-count reduction now
+        # rides the same registry route (and overlap-capable plan driver)
+        # as every other consumer; global counts / mean-probs make lb_loss
+        # the whole-batch statistic rather than a mean of per-shard
+        # products.
         def dp_mean(v):
             for a in dp_axes:
                 v = forge.mapreduce(lambda t: t, alg.ADD, v[None],

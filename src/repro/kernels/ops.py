@@ -595,13 +595,17 @@ IMPLS: dict[str, dict[str, Any]] = {
     "argsort@segmented": _per_backend(sort_k.segmented_argsort_radix),
     "top_k@flat": _per_backend(sort_k.top_k_radix),
     "top_k@segmented": _per_backend(sort_k.segmented_top_k_radix),
-    # Device-spanning routes (distributed/primitives.py): the local route
-    # plus the operator's collective fold.  ``backend`` names the backend
-    # the shard-local compute dispatches to, so pallas-interpret runs the
-    # real kernel bodies (and pallas-gpu the GPU lowerings) under the
-    # collective composition.
+    # Device-spanning routes (distributed/primitives.py): staged ShardPlans
+    # -- the local route, the operator's collective fold, an epilogue --
+    # executed by one chunked, overlap-capable driver.  ``backend`` names
+    # the backend the shard-local stages dispatch to, so pallas-interpret
+    # runs the real kernel bodies (and pallas-gpu the GPU lowerings) under
+    # the collective composition.
     "scan@sharded": _per_backend(dist_k.sharded_scan),
     "mapreduce@sharded": _per_backend(dist_k.sharded_mapreduce),
+    "matvec@sharded": _per_backend(dist_k.sharded_matvec),
+    "vecmat@sharded": _per_backend(dist_k.sharded_vecmat),
+    "linear_recurrence@sharded": _per_backend(dist_k.sharded_linear_recurrence),
     "sort_pairs@sharded": _per_backend(dist_k.sharded_sort_pairs),
     "top_k@sharded": _per_backend(dist_k.sharded_top_k),
 }

@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import operators as alg
+from repro.core import primitives as forge
+from repro.core.layout import Sharded
 from repro.models import blocks as BK
 from repro.models import layers as L
 
@@ -271,8 +274,37 @@ def _mtp_loss(params, cfg, h, tokens, labels, positions):
 # ---------------------------------------------------------------------------
 
 
+def unembed_sharded(params, h, softcap, mesh, axis="model"):
+    """Tensor-parallel unembed: the decode GEMV through ``matvec@sharded``.
+
+    ``logits[v] = sum_d h[d] * table[d, v]`` with the *contraction* axis D
+    sharded over the ``axis`` devices of ``mesh`` -- each device folds its
+    row strip of the unembed table into a vocab-sized partial and the ADD
+    FoldSpec's psum combines them (the staged plan in
+    distributed/primitives.py, so strip partials for one output chunk are
+    in flight while the next chunk computes).  Opt-in replacement for
+    ``L.unembed`` when the embedding table is row-sharded; the default
+    dense path is untouched.  Batch rows ride ``vmap`` over the route.
+    """
+    table = params.get("unembed")
+    if table is None:
+        table = params["embedding"].T
+    B, S, D = h.shape
+    rows = h.reshape(B * S, D)
+    tab = table.astype(h.dtype)
+
+    def one(row):
+        return forge.matvec(lambda x_i, a_ij: x_i * a_ij, alg.ADD, tab, row,
+                            layout=Sharded(axis, mesh=mesh))
+
+    logits = jax.vmap(one)(rows).astype(jnp.float32).reshape(B, S, -1)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
 def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
-            vision_embeds=None, valid_len=None):
+            vision_embeds=None, valid_len=None, tp_unembed=None):
     """Full-sequence forward building decode caches.
 
     ``valid_len``: number of valid leading *token* positions (scalar; may be
@@ -282,6 +314,10 @@ def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
     snapshots and the logit read move to ``valid_len``).  None = the whole
     sequence is valid (the historical exact-length path, byte-identical
     lowering).
+
+    ``tp_unembed=(mesh, axis_name)`` routes the final logit projection
+    through :func:`unembed_sharded` (contraction-sharded ``matvec@sharded``);
+    None keeps the dense single-device unembed, byte-identical lowering.
 
     Returns (last_logits (B, vocab), caches).
     """
@@ -296,7 +332,11 @@ def prefill(params, cfg, tokens, *, cache_len, src_embeds=None,
     h_last = (h[:, -1:] if vl is None
               else jax.lax.dynamic_slice_in_dim(h, vl - 1, 1, axis=1))
     h = L.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
-    logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    if tp_unembed is None:
+        logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    else:
+        logits = unembed_sharded(params["embed"], h, cfg.final_softcap,
+                                 *tp_unembed)
     return logits[:, 0], caches
 
 
@@ -304,12 +344,14 @@ def init_caches(cfg, batch, cache_len, dtype=jnp.bfloat16):
     return _stack_cache(_dec_spec(cfg), cfg, batch, cache_len, dtype)
 
 
-def decode_step(params, cfg, caches, tokens, pos):
+def decode_step(params, cfg, caches, tokens, pos, *, tp_unembed=None):
     """One-token decode.  tokens: (B, 1) int32; pos: scalar int32 or a (B,)
     per-slot position vector (continuous batching: each batch row advances
     independently through its own cache slot -- see serving/engine.py).
 
     For enc-dec models, cross K/V caches must have been built by prefill.
+    ``tp_unembed=(mesh, axis_name)`` opts the logit GEMV into the
+    contraction-sharded ``matvec@sharded`` path (:func:`unembed_sharded`).
     Returns (logits (B, vocab), new_caches).
     """
     dtype = cfg.activation_dtype
@@ -320,5 +362,9 @@ def decode_step(params, cfg, caches, tokens, pos):
                                   positions, mode="decode", caches=caches,
                                   pos=pos)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    if tp_unembed is None:
+        logits = L.unembed(params["embed"], h, cfg.final_softcap)
+    else:
+        logits = unembed_sharded(params["embed"], h, cfg.final_softcap,
+                                 *tp_unembed)
     return logits[:, 0], new_caches

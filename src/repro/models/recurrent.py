@@ -37,8 +37,20 @@ import numpy as np
 
 from repro.core import operators as alg
 from repro.core import primitives as forge
-from repro.core.layout import Batched
+from repro.core.layout import Batched, Sharded
 from repro.models import layers as L
+
+
+def _recurrence_layout(seq_shard):
+    """``seq_shard=(mesh, axis_name)`` opts a (B, T, C) recurrence into the
+    ``linear_recurrence@sharded`` route -- T spans the mesh axis, per-shard
+    affine totals meet in the exclusive cross-device carry, and the staged
+    plan overlaps the carry exchange with per-channel-chunk local scans.
+    None keeps the single-device Batched route (byte-identical lowering)."""
+    if seq_shard is None:
+        return Batched()
+    mesh, axis_name = seq_shard
+    return Sharded(axis_name, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -141,13 +153,20 @@ def _rglru_gates(params, u):
     return a, i, mult
 
 
-def rglru_forward(params, cfg, x, *, return_cache=False, valid_len=None):
+def rglru_forward(params, cfg, x, *, return_cache=False, valid_len=None,
+                  seq_shard=None):
     """x: (B, T, D) -> (y, cache|None).  The scan primitive carries h.
 
     ``valid_len``: valid leading length of ``x`` (prompt bucketing).  The
     recurrence runs over the whole padded sequence -- outputs at valid
     positions only depend on earlier positions, so they are exact -- and
     the cache snapshots the state *at* ``valid_len`` instead of at ``T``.
+
+    ``seq_shard=(mesh, axis_name)``: sequence-parallel prefill -- the
+    recurrence's T axis spans the mesh axis through
+    ``linear_recurrence@sharded`` (the cross-device affine carry); the
+    surrounding einsums/conv stay data-parallel under jit.  None (default)
+    is the single-device path, unchanged.
     """
     dtype = x.dtype
     u_pre = jnp.einsum("btd,dw->btw", x, params["wx"].astype(dtype))
@@ -156,7 +175,8 @@ def rglru_forward(params, cfg, x, *, return_cache=False, valid_len=None):
     u = L.shard(u, "batch", "seq_sp", "rnn")
     a, i, mult = _rglru_gates(params, u)
     b = (mult * i * u.astype(jnp.float32))
-    h = forge.linear_recurrence(a, b, layout=Batched())  # (B, T, w) fp32
+    h = forge.linear_recurrence(
+        a, b, layout=_recurrence_layout(seq_shard))      # (B, T, w) fp32
     h = h.astype(dtype)
     y = jnp.einsum("btw,wd->btd", h * jax.nn.gelu(gate_branch),
                    params["wo"].astype(dtype))
@@ -253,7 +273,7 @@ def _mlstm_stabilizer(lf, li, m0=None):
 
 
 def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
-                      state_dtype=jnp.float32):
+                      state_dtype=jnp.float32, seq_shard=None):
     """Chunkwise mLSTM.  q,k,v: (B,NC,L,H,dh); lf,li,m: (B,NC,L,H).
 
     Fully chunk-parallel: the inter-chunk state recurrence
@@ -309,7 +329,7 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
             a_full.astype(state_dtype),
             contrib.reshape(Bb, NC, H * chan).astype(state_dtype),
             init.reshape(Bb, H * chan).astype(state_dtype),
-            layout=Batched())
+            layout=_recurrence_layout(seq_shard))
         # Chunk-START states: shift right, seed with the initial state.
         start = jnp.concatenate(
             [init.reshape(Bb, 1, H * chan).astype(S.dtype), S[:, :-1]], axis=1)
@@ -367,7 +387,8 @@ def _mlstm_chunk_scan(q, k, v, lf, li, m, state0=None,
     return h, (Cf, nf)
 
 
-def mlstm_forward(params, cfg, x, *, return_cache=False, valid_len=None):
+def mlstm_forward(params, cfg, x, *, return_cache=False, valid_len=None,
+                  seq_shard=None):
     """x: (B, T, D) -> (y, cache|None).
 
     ``valid_len``: valid leading length under prompt bucketing.  Reuses the
@@ -375,6 +396,11 @@ def mlstm_forward(params, cfg, x, *, return_cache=False, valid_len=None):
     or past ``valid_len`` get ``i' = 0`` / ``f' = 1``, so the (C, n) state
     after the full padded scan equals the state after ``valid_len`` real
     steps, and the cached stabilizer/conv tail are sliced at ``valid_len``.
+
+    ``seq_shard=(mesh, axis_name)``: the inter-chunk state recurrence (the
+    chunk axis NC) runs through ``linear_recurrence@sharded`` -- long-context
+    prefill's chunk-state propagation spans the mesh axis with the staged
+    cross-device affine carry.  None (default) is unchanged.
     """
     dtype = x.dtype
     B, T_in, D = x.shape
@@ -416,7 +442,7 @@ def mlstm_forward(params, cfg, x, *, return_cache=False, valid_len=None):
     h, state = _mlstm_chunk_scan(
         split(q, (H, dh)), split(k, (H, dh)), split(v, (H, dh)),
         split(lf, (H,)), split(li, (H,)), split(m, (H,)),
-        state_dtype=jnp.dtype(cfg.mlstm_state_dtype))
+        state_dtype=jnp.dtype(cfg.mlstm_state_dtype), seq_shard=seq_shard)
     h = h.reshape(B, T, inner).astype(dtype)
     h = h + params["skip_scale"].astype(dtype) * c
     y = jnp.einsum("btw,wd->btd", h * jax.nn.silu(z),

@@ -59,14 +59,32 @@ class BeamSearch(DecodeStrategy):
     slot).  Requests finish when every beam slot's finished store dominates
     the best continuation, or at the length cap; the answer is the highest-
     scoring hypothesis (finished preferred on ties), its score reported as
-    ``seq_logprob``."""
+    ``seq_logprob``.
+
+    ``length_penalty`` is the GNMT alpha: hypotheses are ranked by
+    ``logprob / lp(|y|)`` with ``lp(n) = ((5 + n) / 6) ** alpha``.  Live
+    beams carry *raw* cumulative logprobs (extension order is
+    length-invariant within a round); the divide happens where lengths
+    differ -- at finished-pool insertion, in the stop rule, and when live
+    continuations enter the final answer pool -- so ``seq_logprob``
+    reports the normalized score.  ``alpha=0`` is the unnormalized default
+    and stays bit-identical (the penalty code is skipped entirely)."""
 
     name = "beam"
 
-    def __init__(self, width: int = 4):
+    def __init__(self, width: int = 4, length_penalty: float = 0.0):
         if width < 1:
             raise ValueError(f"beam width must be >= 1, got {width}")
+        if length_penalty < 0:
+            raise ValueError(
+                f"length_penalty must be >= 0, got {length_penalty}")
         self.width = width
+        self.length_penalty = float(length_penalty)
+
+    def _lp(self, length):
+        """GNMT length penalty ``((5 + |y|) / 6) ** alpha``."""
+        return ((5.0 + length.astype(jnp.float32)) / 6.0
+                ) ** self.length_penalty
 
     def bind(self, eng):
         if eng.temperature > 0:
@@ -115,6 +133,8 @@ class BeamSearch(DecodeStrategy):
         st["btok"] = state["btok"].at[slot].set(idx)
         hyp0 = jnp.zeros((W, T), jnp.int32).at[:, 0].set(idx)
         st["hyp"] = state["hyp"].at[slot].set(hyp0)
+        # (lp(1) == 1.0 exactly, so admission-round EOS scores need no
+        # length-penalty divide.)
         st["fin_scores"] = state["fin_scores"].at[slot].set(
             jnp.where(is_eos, vals, NEG_INF))
         st["fin_toks"] = state["fin_toks"].at[slot].set(hyp0)
@@ -194,8 +214,13 @@ class BeamSearch(DecodeStrategy):
         # keep the top W -- the second batched sort of the round.
         cand_hyp = jnp.take_along_axis(st["hyp"], c_src[:, :, None], axis=1)
         cand_hyp = jnp.where(at_t, c_tok[:, :, None], cand_hyp)
+        fin_cand = top_s
+        if self.length_penalty:
+            # An EOS candidate finishes at emitted + 1 tokens; incumbents
+            # are already stored normalized, so divide on the way in.
+            fin_cand = top_s / self._lp(st["emitted"] + 1)[:, None]
         pool_s = jnp.concatenate(
-            [st["fin_scores"], jnp.where(c_eos, top_s, NEG_INF)], axis=1)
+            [st["fin_scores"], jnp.where(c_eos, fin_cand, NEG_INF)], axis=1)
         pool_ids = jnp.broadcast_to(
             jnp.arange(3 * W, dtype=jnp.int32)[None, :], (B, 3 * W))
         pkeys, pids = _sort_rows(pool_s, pool_ids)
@@ -213,7 +238,14 @@ class BeamSearch(DecodeStrategy):
         emitted2 = st["emitted"] + 1
         max_cont = new_scores[:, 0]                         # desc order
         min_fin = fin_scores2[:, -1]
-        stop = (min_fin >= max_cont) | (max_cont == NEG_INF)
+        max_cont_n = max_cont
+        if self.length_penalty:
+            # Compare like with like: the stored finished scores are
+            # normalized, so normalize the best continuation at its
+            # current length (the standard practical stop rule; mirrored
+            # by the reference).
+            max_cont_n = max_cont / self._lp(emitted2)
+        stop = (min_fin >= max_cont_n) | (max_cont == NEG_INF)
         active2 = was_active & (emitted2 < st["max_new"]) & ~stop
 
         # Commit only on active slots (the loop decodes dead rows too, but
@@ -240,8 +272,12 @@ class BeamSearch(DecodeStrategy):
         # Answer pool: finished hypotheses first (so argmax's first-max
         # rule prefers finished at equal score), then live continuations
         # (the length-cap fallback).
-        all_s = jnp.concatenate([state["fin_scores"], state["scores"]],
-                                axis=1)
+        live_s = state["scores"]
+        if self.length_penalty:
+            # Live continuations enter the pool at their current length;
+            # finished incumbents are stored normalized already.
+            live_s = live_s / self._lp(state["emitted"])[:, None]
+        all_s = jnp.concatenate([state["fin_scores"], live_s], axis=1)
         all_t = jnp.concatenate([state["fin_toks"], state["hyp"]], axis=1)
         all_l = jnp.concatenate(
             [state["fin_lens"],

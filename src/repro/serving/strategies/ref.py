@@ -48,7 +48,8 @@ def _log_softmax(x):
     return x - np.log(np.exp(x).sum())
 
 
-def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
+def reference_beam(eng, prompt, *, width, max_new, eos_id=-1,
+                   length_penalty=0.0):
     """NMT-style beam search oracle; returns (tokens, score).
 
     Keeps explicit per-hypothesis batch-1 caches; each round scores every
@@ -58,7 +59,15 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
     ``width`` non-EOS candidates.  Stops when the worst finished hypothesis
     dominates the best continuation, or at ``max_new``; the answer is the
     best of finished + continuing, finished preferred on ties.
+
+    ``length_penalty`` mirrors the device strategy's GNMT alpha: live
+    beams carry raw logprobs; scores are divided by
+    ``lp(n) = ((5 + n) / 6) ** alpha`` on finished-pool insertion, in the
+    stop rule, and when live beams enter the final answer pool.
     """
+    def lp(n):
+        return np.float32((5.0 + n) / 6.0) ** np.float32(length_penalty)
+
     logits1, cache1, pos0 = _prefill1(eng, prompt)
     logp = _log_softmax(logits1[0])
     order = np.argsort(-logp, kind="stable")[:width]   # desc, low id on ties
@@ -66,6 +75,7 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
     finished = []       # (tokens tuple, score); index order = pool id order
     for tok in order:
         if tok == eos_id:
+            # lp(1) == 1, matching the device's unnormalized admit round.
             finished.append(((int(tok),), float(logp[tok])))
         else:
             beams.append(([int(tok)], float(logp[tok]), cache1, pos0))
@@ -75,8 +85,9 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
         best_cont = max(b[1] for b in beams)
         if best_cont == float("-inf"):
             break
+        cur_len = len(beams[0][0])
         if len(finished) == width and \
-                min(h[1] for h in finished) >= best_cont:
+                min(h[1] for h in finished) >= best_cont / lp(cur_len):
             break
         # Score all beam x vocab candidates; device tie rule: ascending
         # stable sort read backwards == higher candidate id wins ties.
@@ -85,9 +96,9 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
         for w, (toks, score, cache, pos) in enumerate(beams):
             logits, cache2 = _decode1(eng, cache, toks[-1], pos)
             steps.append(cache2)
-            lp = _log_softmax(logits)
-            for v in range(lp.shape[0]):
-                cands.append((score + float(lp[v]), w * lp.shape[0] + v,
+            lpv = _log_softmax(logits)
+            for v in range(lpv.shape[0]):
+                cands.append((score + float(lpv[v]), w * lpv.shape[0] + v,
                               w, v))
         cands.sort(key=lambda c: (c[0], c[1]))          # ascending, stable
         top = cands[-2 * width:][::-1]
@@ -99,7 +110,7 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
         new_hyps = []
         for j, (score, _, src, tok) in enumerate(top):
             if tok == eos_id:
-                pool.append((score, base + j,
+                pool.append((score / lp(len(beams[src][0]) + 1), base + j,
                              tuple(beams[src][0]) + (tok,)))
             elif len(new_hyps) < width:
                 new_hyps.append((beams[src][0] + [tok], score,
@@ -112,7 +123,8 @@ def reference_beam(eng, prompt, *, width, max_new, eos_id=-1):
 
     # Final answer: finished first (wins ties), then continuations.
     candidates = [(s, 0, toks) for toks, s in finished]
-    candidates += [(s, 1, tuple(toks)) for toks, s, _, _ in beams]
+    candidates += [(s / lp(len(toks)), 1, tuple(toks))
+                   for toks, s, _, _ in beams]
     if not candidates:
         return [], float("-inf")
     best = max(candidates, key=lambda c: (c[0], -c[1]))

@@ -82,6 +82,112 @@ def test_collective_fold_registry():
         assert not alg.has_collective_rewrite(alg.STD_OPS[name]), name
 
 
+def test_foldspec_descriptors():
+    """FoldSpec is a *descriptor*, not an eager collective: the registry
+    returns the collective tuple the staged plans issue (and the analytic
+    byte models price), and ``native`` marks the rewrite forms."""
+    pins = {
+        "add": ("psum",),
+        "max": ("pmax",),
+        "min": ("pmin",),
+        "logsumexp": ("pmax", "psum"),
+        "softmax_merge": ("pmax", "psum", "psum"),
+    }
+    for name, collectives in pins.items():
+        spec = alg.collective_fold_spec(alg.STD_OPS[name])
+        assert spec.collectives == collectives, name
+        assert spec.native, name
+        assert callable(spec.build("shard"))
+    mul = alg.collective_fold_spec(alg.STD_OPS["mul"])
+    assert mul.collectives == ("all_gather",) and not mul.native
+
+
+def test_one_device_mesh_new_routes():
+    """matvec/vecmat/linear_recurrence@sharded on a 1-extent axis == the
+    flat oracles (no strip split, identity fold)."""
+    mesh = _mesh1()
+    lo = Sharded("shard", mesh=mesh)
+    nprng = np.random.default_rng(7)
+    A = jnp.asarray(nprng.normal(size=(23, 11)), jnp.float32)
+    xv = jnp.asarray(nprng.normal(size=(23,)), jnp.float32)
+    got = forge.matvec(lambda x, a: x * a, alg.ADD, A, xv, layout=lo,
+                       backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.ref_matvec(lambda x, a: x * a, alg.ADD, A, xv)),
+        rtol=1e-5, atol=1e-5)
+    xp = jnp.asarray(nprng.normal(size=(11,)), jnp.float32)
+    got = forge.vecmat(lambda a, v: a * v, alg.ADD, A, xp, layout=lo,
+                       backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.ref_vecmat(lambda a, v: a * v, alg.ADD, A, xp)),
+        rtol=1e-5, atol=1e-5)
+    a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, 13, 5)), jnp.float32)
+    b = jnp.asarray(nprng.normal(size=(2, 13, 5)), jnp.float32)
+    h0 = jnp.asarray(nprng.normal(size=(2, 5)), jnp.float32)
+    got = forge.linear_recurrence(a, b, h0, layout=lo, backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.ref_batched_linear_recurrence(a, b, h0)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_overlap_bit_identity_single_process():
+    """overlap toggles only the collective issue order -- chunked plans must
+    be *bitwise* identical either way (it is a scheduling knob, never a
+    numerics knob)."""
+    mesh = _mesh1()
+    nprng = np.random.default_rng(11)
+    cases = []
+    A = jnp.asarray(nprng.normal(size=(64, 37)), jnp.float32)
+    xv = jnp.asarray(nprng.normal(size=(64,)), jnp.float32)
+    cases.append(lambda lo: forge.matvec(lambda x, a: x * a, alg.ADD, A, xv,
+                                         layout=lo, backend="xla"))
+    x2 = jnp.asarray(nprng.normal(size=(23, 9)), jnp.float32)
+    cases.append(lambda lo: forge.mapreduce(lambda v: v, alg.ADD, x2,
+                                            layout=lo, backend="xla"))
+    for run in cases:
+        ov = run(Sharded("shard", mesh=mesh, overlap=True))
+        bl = run(Sharded("shard", mesh=mesh, overlap=False))
+        for g, w in zip(jax.tree.leaves(ov), jax.tree.leaves(bl)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_overlap_smoke_chunked_collectives(monkeypatch):
+    """The plan driver must emit one collective dispatch per chunk -- the
+    overlap schedule exists iff the chunked plans funnel >1 dispatch
+    through ``dispatch_collective`` (the CI overlap smoke)."""
+    from repro.distributed import primitives as dist
+
+    calls = []
+    real = dist.dispatch_collective
+
+    def spy(plan, part):
+        calls.append(plan.name)
+        return real(plan, part)
+
+    monkeypatch.setattr(dist, "dispatch_collective", spy)
+    mesh = _mesh1()
+    nprng = np.random.default_rng(13)
+    A = jnp.asarray(nprng.normal(size=(64, 40)), jnp.float32)
+    xv = jnp.asarray(nprng.normal(size=(64,)), jnp.float32)
+    forge.matvec(lambda x, a: x * a, alg.ADD, A, xv,
+                 layout=Sharded("shard", mesh=mesh), backend="xla")
+    assert calls.count("matvec@sharded") > 1, calls
+    calls.clear()
+    x2 = jnp.asarray(nprng.normal(size=(23, 16)), jnp.float32)
+    forge.mapreduce(lambda v: v, alg.ADD, x2,
+                    layout=Sharded("shard", mesh=mesh), backend="xla")
+    assert calls.count("mapreduce@sharded") > 1, calls
+    # Unchunkable plans still funnel their single collective through the
+    # same seam (the spy sees exactly one dispatch).
+    calls.clear()
+    xs = jnp.asarray(nprng.normal(size=(31,)), jnp.float32)
+    forge.scan(alg.ADD, xs, layout=Sharded("shard", mesh=mesh), backend="xla")
+    assert calls.count("scan@sharded") == 1, calls
+
+
 def _mesh1():
     return jax.make_mesh((1,), ("shard",))
 
@@ -151,7 +257,11 @@ def test_sharded_scan_exclusive_and_uneven_padding():
 
 _SCRIPT_PRELUDE = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# Append, don't clobber: CI's test-distributed jax-latest leg hands down
+# async-collective / latency-hiding-scheduler flags that must reach the
+# 8-device subprocesses.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
 import sys
 sys.path.insert(0, sys.argv[1])
 import functools
@@ -381,6 +491,92 @@ print("SHARDED_CONSUMERS_OK")
 """
 
 
+NEWROUTES_SCRIPT = _SCRIPT_PRELUDE + r"""
+# -- matvec@sharded / vecmat@sharded: contraction-axis tensor parallelism
+#    vs the dense single-device oracles -- even split, uneven remainder
+#    (replicated rows folded last), fewer contraction elements than devices
+#    (the direct flat path) ------------------------------------------------
+def f_mv(x, a):
+    return x * a
+def f_vm(a, v):
+    return a * v
+for n, p in ((64, 16), (67, 16), (16, 67), (5, 12)):
+    A = jnp.asarray(nprng.normal(size=(n, p)), jnp.float32)
+    x = jnp.asarray(nprng.normal(size=(n,)), jnp.float32)
+    got = forge.matvec(f_mv, alg.ADD, A, x, layout=lo8, backend="xla")
+    close(got, ref.ref_matvec(f_mv, alg.ADD, A, x), 1e-4, f"matvec {n}x{p}")
+    xp = jnp.asarray(nprng.normal(size=(p,)), jnp.float32)
+    got = forge.vecmat(f_vm, alg.ADD, A, xp, layout=lo8, backend="xla")
+    close(got, ref.ref_vecmat(f_vm, alg.ADD, A, xp), 1e-4, f"vecmat {n}x{p}")
+# non-ADD fold (MIN -> pmin) through the semiring bundle
+W = jnp.asarray(nprng.uniform(0.0, 1.0, (61, 9)), jnp.float32)
+d = jnp.asarray(nprng.uniform(0.0, 1.0, (61,)), jnp.float32)
+got = forge.semiring_matvec(alg.TROPICAL_MIN_PLUS, W, d, layout=lo8,
+                            backend="xla")
+close(got, ref.ref_matvec(alg.TROPICAL_MIN_PLUS.f, alg.MIN, W, d), 1e-4,
+      "tropical matvec")
+# degenerate 1-extent axis of a 2-axis mesh
+got = forge.matvec(f_mv, alg.ADD, W, d, layout=lo1, backend="xla")
+close(got, ref.ref_matvec(f_mv, alg.ADD, W, d), 1e-4, "matvec degenerate")
+# overlap=False is bit-identical (issue order, not numerics)
+lo8_block = Sharded("shard", mesh=mesh8, overlap=False)
+A = jnp.asarray(nprng.normal(size=(67, 33)), jnp.float32)
+x = jnp.asarray(nprng.normal(size=(67,)), jnp.float32)
+exact(forge.matvec(f_mv, alg.ADD, A, x, layout=lo8, backend="xla"),
+      forge.matvec(f_mv, alg.ADD, A, x, layout=lo8_block, backend="xla"),
+      "matvec overlap bit-identity")
+print("matvec/vecmat@sharded OK", flush=True)
+
+# -- linear_recurrence@sharded: cross-device affine carry vs the numpy
+#    float64 time-loop oracle -- uneven T (affine-identity padding),
+#    T < devices, T == 1, with and without h0 ------------------------------
+for T in (64, 61, 5, 1):
+    a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, T, 6)), jnp.float32)
+    b = jnp.asarray(nprng.normal(size=(2, T, 6)), jnp.float32)
+    h0 = jnp.asarray(nprng.normal(size=(2, 6)), jnp.float32)
+    got = forge.linear_recurrence(a, b, layout=lo8, backend="xla")
+    close(got, ref.ref_batched_linear_recurrence(a, b), 1e-4,
+          f"linrec T={T}")
+    got = forge.linear_recurrence(a, b, h0, layout=lo8, backend="xla")
+    close(got, ref.ref_batched_linear_recurrence(a, b, h0), 1e-4,
+          f"linrec h0 T={T}")
+# degenerate 1-extent axis == the flat route bitwise
+a = jnp.asarray(nprng.uniform(0.5, 1.0, (2, 19, 4)), jnp.float32)
+b = jnp.asarray(nprng.normal(size=(2, 19, 4)), jnp.float32)
+exact(forge.linear_recurrence(a, b, layout=lo1, backend="xla"),
+      forge.linear_recurrence(a, b, backend="xla"), "linrec degenerate")
+# overlap=False bit-identity (channel-axis chunks, h0 chunked alongside)
+h0 = jnp.asarray(nprng.normal(size=(2, 4)), jnp.float32)
+exact(forge.linear_recurrence(a, b, h0, layout=lo8, backend="xla"),
+      forge.linear_recurrence(a, b, h0, layout=lo8_block, backend="xla"),
+      "linrec overlap bit-identity")
+print("linear_recurrence@sharded OK", flush=True)
+
+# -- consumers: the sharded decode GEMV equals the dense unembed; the
+#    sequence-sharded RG-LRU prefill equals the single-device path ---------
+from repro.models import lm
+from repro.models import layers as L
+from repro.models import recurrent as R
+params = {"embedding": jnp.asarray(nprng.normal(size=(50, 19)), jnp.float32)}
+h = jnp.asarray(nprng.normal(size=(3, 1, 19)), jnp.float32)
+close(lm.unembed_sharded(params, h, 5.0, mesh8, "shard"),
+      L.unembed(params, h, 5.0), 1e-4, "sharded unembed")
+
+class Cfg:
+    d_model = 16; rnn_width = 16; conv_width = 4; n_heads = 4
+p = R.init_rglru_block(jax.random.PRNGKey(0), Cfg)
+x = jnp.asarray(nprng.normal(size=(2, 21, 16)), jnp.float32)
+y0, c0 = R.rglru_forward(p, Cfg, x, return_cache=True)
+y1, c1 = R.rglru_forward(p, Cfg, x, return_cache=True,
+                         seq_shard=(mesh8, "shard"))
+close(y0, y1, 1e-4, "rglru seq_shard")
+close(c0["h"], c1["h"], 1e-4, "rglru seq_shard cache")
+print("sharded consumers OK", flush=True)
+
+print("SHARDED_NEWROUTES_OK")
+"""
+
+
 def _run_leg(tmp_path, name, script, token):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     path = tmp_path / f"{name}.py"
@@ -404,3 +600,9 @@ def test_sharded_primitives_8_devices(tmp_path):
 def test_sharded_consumers_8_devices(tmp_path):
     _run_leg(tmp_path, "sharded_consumers", CONSUMERS_SCRIPT,
              "SHARDED_CONSUMERS_OK")
+
+
+@pytest.mark.slow
+def test_sharded_new_routes_8_devices(tmp_path):
+    _run_leg(tmp_path, "sharded_new_routes", NEWROUTES_SCRIPT,
+             "SHARDED_NEWROUTES_OK")

@@ -196,6 +196,46 @@ def test_beam_rejects_sampling_engine(setup):
                temperature=1.0, strategy=BeamSearch(width=2))
     with pytest.raises(ValueError, match="width"):
         BeamSearch(width=0)
+    with pytest.raises(ValueError, match="length_penalty"):
+        BeamSearch(width=2, length_penalty=-0.5)
+
+
+def test_beam_length_penalty_matches_reference(setup):
+    """GNMT length-normalized beam (alpha=0.6) vs the oracle, with an EOS
+    the beams reach -- the penalty reranks finished hypotheses of
+    different lengths, so the divide points must agree exactly."""
+    cfg, params, _ = setup
+    probe_eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                       strategy=BeamSearch(width=2))
+    probe = probe_eng.generate(
+        [Request(prompt=[5, 6, 7], max_new_tokens=5)])[0]
+    eos = probe[2]
+    eng = Engine(cfg, None, params, cache_len=64, batch_size=2,
+                 strategy=BeamSearch(width=2, length_penalty=0.6))
+    req = Request(prompt=[5, 6, 7], max_new_tokens=7, eos_id=eos)
+    out = eng.generate([req])[0]
+    score = eng.last_stats["seq_logprob"][0]
+    ref_toks, ref_score = reference_beam(
+        eng, req.prompt, width=2, max_new=7, eos_id=eos,
+        length_penalty=0.6)
+    assert list(out) == ref_toks
+    assert score == pytest.approx(ref_score, abs=2e-4)
+
+
+def test_beam_length_penalty_zero_is_default(setup):
+    """alpha=0 must stay bit-identical to the unnormalized default."""
+    cfg, params, _ = setup
+    kw = dict(cache_len=64, batch_size=2)
+    eng0 = Engine(cfg, None, params, **kw, strategy=BeamSearch(width=2))
+    engz = Engine(cfg, None, params, **kw,
+                  strategy=BeamSearch(width=2, length_penalty=0.0))
+    out0 = eng0.generate(REQS)
+    s0 = eng0.last_stats["seq_logprob"]
+    outz = engz.generate(REQS)
+    sz = engz.last_stats["seq_logprob"]
+    for a, b in zip(out0, outz):
+        assert list(a) == list(b)
+    assert jnp.array_equal(s0, sz)
 
 
 # ---------------------------------------------------------------------------
